@@ -1,0 +1,166 @@
+"""Shared benchmark utilities: tiny trainers for the accuracy tables, CSR
+baseline, timing helpers. All benchmarks print ``name,us_per_call,derived``
+CSV rows (one benchmark per paper table/figure)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BCRSpec
+from repro.core import admm as admm_mod
+from repro.core.bcr import bcr_mask_any, choose_block_shape
+from repro.optim import adamw
+
+
+def timeit(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall seconds per call of a jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Small MLP trainer with pluggable pruning method (Tables 1/2 analog)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, dims):
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        params.append({"w": jax.random.normal(k, (b, a)) * (a ** -0.5),
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"].T + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def make_mask_fn(method: str, keep_frac: float, block=(8, 8)):
+    """Projection masks for each sparsity scheme in the paper's comparison."""
+    def mask(w):
+        if method == "dense":
+            return jnp.ones_like(w)
+        blk = choose_block_shape(tuple(w.shape), block)
+        if method == "bcr":
+            spec = BCRSpec(block_shape=blk, keep_frac=keep_frac,
+                           align=min(2, *blk))
+            return bcr_mask_any(w, spec)
+        if method == "bcr_unbalanced":
+            spec = BCRSpec(block_shape=blk, keep_frac=keep_frac,
+                           align=min(2, *blk), balanced=False)
+            return bcr_mask_any(w, spec)
+        if method == "unstructured":
+            k = max(1, int(keep_frac * w.size))
+            thresh = jnp.sort(jnp.abs(w).reshape(-1))[-k]
+            return (jnp.abs(w) >= thresh).astype(jnp.float32)
+        if method == "filter":     # whole-row (output-filter) pruning
+            k = max(1, int(keep_frac * w.shape[0]))
+            norms = jnp.linalg.norm(w, axis=1)
+            thresh = jnp.sort(norms)[-k]
+            return jnp.broadcast_to((norms >= thresh)[:, None].astype(
+                jnp.float32), w.shape)
+        if method == "column":     # whole-column pruning
+            k = max(1, int(keep_frac * w.shape[1]))
+            norms = jnp.linalg.norm(w, axis=0)
+            thresh = jnp.sort(norms)[-k]
+            return jnp.broadcast_to((norms >= thresh)[None, :].astype(
+                jnp.float32), w.shape)
+        raise ValueError(method)
+    return mask
+
+
+def train_pruned_mlp(
+    x: np.ndarray, y: np.ndarray, *, dims, method: str, keep_frac: float,
+    steps: int = 300, admm_steps: int = 150, lr: float = 3e-3, seed: int = 0,
+) -> Dict[str, float]:
+    """ADMM-style schedule: dense warmup → penalty toward the sparse set →
+    hard mask → retrain. Returns held-out accuracy + achieved density."""
+    key = jax.random.PRNGKey(seed)
+    params = _mlp_init(key, dims)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                                weight_decay=0.0)
+    opt = adamw.init(params)
+    n_train = int(0.7 * len(y))
+    xt, yt = jnp.asarray(x[n_train:]), jnp.asarray(y[n_train:])
+    xd, yd = jnp.asarray(x[:n_train]), jnp.asarray(y[:n_train])
+    mask_fn = make_mask_fn(method, keep_frac)
+
+    def loss_fn(p, masks=None):
+        q = p
+        if masks is not None:
+            q = [dict(l, w=l["w"] * m) for l, m in zip(p, masks)]
+        logits = _mlp_apply(q, xd)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(yd)), yd])
+
+    @jax.jit
+    def dense_step(p, o):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p, o, _ = adamw.update(opt_cfg, g, o, p)
+        return p, o, l
+
+    masks = None
+
+    @jax.jit
+    def masked_step(p, o, masks):
+        l, g = jax.value_and_grad(lambda q: loss_fn(q, masks))(p)
+        p, o, _ = adamw.update(opt_cfg, g, o, p)
+        return p, o, l
+
+    for step in range(steps):
+        if step == admm_steps and method != "dense":
+            masks = [mask_fn(l["w"]) for l in params]
+        if masks is None:
+            params, opt, l = dense_step(params, opt)
+        else:
+            params, opt, l = masked_step(params, opt, masks)
+
+    if masks is not None:
+        params = [dict(l, w=l["w"] * m) for l, m in zip(params, masks)]
+    logits = _mlp_apply(params, xt)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == yt))
+    nnz = sum(float(jnp.sum(l["w"] != 0)) for l in params)
+    tot = sum(l["w"].size for l in params)
+    return {"accuracy": acc, "density": nnz / tot,
+            "pruning_rate": tot / max(nnz, 1)}
+
+
+# ---------------------------------------------------------------------------
+# CSR matmul baseline (paper's sparse baseline, Fig. 11/12)
+# ---------------------------------------------------------------------------
+
+
+def csr_matmul_time(w: np.ndarray, x: np.ndarray, iters: int = 10) -> float:
+    """Generic CSR SpMM timing (gather-based, no structure exploited)."""
+    rows, cols = np.nonzero(w)
+    vals = jnp.asarray(w[rows, cols])
+    rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
+    n = w.shape[0]
+    xd = jnp.asarray(x)
+
+    @jax.jit
+    def spmm(x):
+        contrib = vals[None, :] * x[:, cols_j]          # (M, nnz)
+        return jax.ops.segment_sum(contrib.T, rows_j, n).T
+
+    return timeit(spmm, xd, iters=iters)

@@ -1,0 +1,137 @@
+"""Per-computation / per-op-name HLO cost breakdown for perf iteration.
+
+Groups loop-corrected bytes/flops by the jax op_name metadata prefix (e.g.
+"...attention...", "...swiglu...") so a dominant roofline term can be
+attributed to model code.
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch qwen1.5-4b \
+        --shape train_4k
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import build_lowering
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import partitioning as part
+from repro.runtime import hlo_analysis as ha
+
+
+def breakdown(hlo_text: str, top: int = 25):
+    hc = ha.HloCost(hlo_text)
+
+    # multiplier per computation from while nesting
+    mult = collections.defaultdict(float)
+    mult[hc.entry] = 1.0
+    order = [hc.entry]
+    seen = {hc.entry}
+    while order:
+        name = order.pop(0)
+        comp = hc.computations.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for instr in comp.instrs:
+            trips = 1
+            tm = ha._TRIP_RE.search(instr.raw)
+            if tm:
+                trips = int(tm.group(1))
+            for key in ("body", "condition", "calls", "to_apply"):
+                cm = re.search(rf"{key}=%?([\w.\-]+)", instr.raw)
+                if cm:
+                    child = cm.group(1)
+                    factor = trips if instr.opcode == "while" else 1
+                    mult[child] += m * factor
+                    if child not in seen:
+                        seen.add(child)
+                        order.append(child)
+
+    by_tag = collections.Counter()
+    flops_tag = collections.Counter()
+    for name, comp in hc.computations.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "while", "call", "convert"):
+                continue
+            mm = re.search(r'op_name="([^"]+)"', instr.raw)
+            tag = "?"
+            if mm:
+                parts = mm.group(1).split("/")
+                keep = [p for p in parts if p not in ("jit(<lambda>)",
+                                                      "jit(train_step)",
+                                                      "while", "body",
+                                                      "closed_call",
+                                                      "checkpoint", "rematted_computation")]
+                tag = "/".join(keep[:3]) if keep else mm.group(1)[:40]
+            ob = ha._nbytes(instr.out_shapes)
+            if op == "fusion":
+                called = hc._called(instr, "calls")
+                root = hc._root_opcode(called) if called else None
+                if root == "convert" and hc._is_pure_convert(called):
+                    b = 0.0
+                else:
+                    b = hc._fusion_bytes(instr, called) if called else ob
+                inner = hc.cost(called) if called else None
+                f = inner.flops if inner else 0.0
+            elif op == "dot":
+                b = ob + ha._nbytes(hc._operand_shapes(instr))
+                f = hc._dot_flops(instr)
+            elif op == "dynamic-update-slice":
+                b = hc._inplace_bytes(instr)
+                f = 0.0
+            elif op == "dynamic-slice":
+                b, f = 2.0 * ob, 0.0
+            elif op in ha._ELEMENTWISE or op == "reduce":
+                b = ob + ha._nbytes(hc._operand_shapes(instr))
+                f = float(ha._nelems(instr.out_shapes[0])) if instr.out_shapes else 0
+            else:
+                b, f = ob, 0.0
+            by_tag[tag] += m * b
+            flops_tag[tag] += m * f
+
+    total_b = sum(by_tag.values())
+    total_f = sum(flops_tag.values())
+    print(f"total bytes/chip: {total_b/1e9:.2f} GB   flops/chip: {total_f/1e12:.3f} TF")
+    print(f"{'bytes':>10s} {'share':>6s} {'flops':>10s}  tag")
+    for tag, b in by_tag.most_common(top):
+        print(f"{b/1e9:9.2f}G {100*b/total_b:5.1f}% "
+              f"{flops_tag[tag]/1e12:9.3f}T  {tag}")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--top", type=int, default=25)
+    args = p.parse_args()
+
+    import dataclasses
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if shape.kind in ("prefill", "decode"):
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rules = part.DECODE_RULES if shape.kind == "decode" else part.TRAIN_RULES
+    with part.use_rules(rules, mesh):
+        fn, a, ish, osh, donate = build_lowering(cfg, shape, mesh)
+        lowered = jax.jit(fn, in_shardings=ish, out_shardings=osh,
+                          donate_argnums=donate).lower(*a)
+    compiled = lowered.compile()
+    breakdown(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Generate the §Roofline markdown table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ARCH_ORDER = [
+    "pixtral-12b", "llama3.2-3b", "llama3.2-1b", "llama3-405b", "qwen1.5-4b",
+    "deepseek-moe-16b", "llama4-maverick-400b-a17b", "jamba-v0.1-52b",
+    "rwkv6-3b", "whisper-large-v3",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(mesh: str):
+    recs = {}
+    for path in glob.glob(os.path.join(BASE, f"*__{mesh}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def table(mesh: str) -> str:
+    recs = load(mesh)
+    lines = [
+        f"### Mesh `{mesh}`",
+        "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO | peak mem/chip | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                             f"skip: sub-quadratic-only shape |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                             f"ERROR {r.get('error','')[:60]} |")
+                continue
+            rf = r["roofline"]
+            peak = r["memory_analysis"].get("peak_memory_in_bytes", 0)
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"**{rf['dominant']}** | {rf['model_flops_ratio']:.2f} | "
+                f"{peak/2**30:.2f} GiB | |")
+    return "\n".join(lines)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--mesh", default=None)
+    args = p.parse_args()
+    meshes = [args.mesh] if args.mesh else ["pod16x16", "pod2x16x16"]
+    for m in meshes:
+        print(table(m))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Batched serving with BCR-packed weights — the GRIM deployment path.
+
+Initializes an LM, BCR-projects + packs every linear, and runs batched
+prefill + greedy decode twice: dense weights vs packed weights. Verifies the
+outputs agree (the packed model IS the projected model) and reports the
+weight-traffic reduction that becomes the decode speedup on TPU.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch llama3.2-1b \
+        --bcr-keep 0.25 --batch 4 --gen 12
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import admm as admm_mod
+from repro.launch.serve import ServeConfig, generate, pack_params, packed_fraction
+from repro.launch.train import default_prune_filter
+from repro.models.api import model_fns
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--bcr-keep", type=float, default=0.25)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--gen", type=int, default=12)
+    p.add_argument("--impl", default="ref", choices=["ref", "interpret"])
+    args = p.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config(args.arch),
+                              bcr_keep_frac=args.bcr_keep,
+                              bcr_block=(16, 16), kernel_impl=args.impl)
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+
+    # GRIM serving contract: dense weights are first BCR-projected (the
+    # accuracy-bearing step happens in training; here we hard-project), then
+    # packed. Projected-dense and packed must produce identical outputs.
+    specs = admm_mod.specs_for(params, default_prune_filter(cfg))
+    projected, _ = admm_mod.finalize(params, specs)
+
+    sc = ServeConfig(batch=args.batch, prompt_len=8, gen_tokens=args.gen,
+                     capacity=64)
+    print("== dense (BCR-projected) weights ==")
+    out_dense = generate(cfg, projected, sc)
+
+    print("== TBCRC-packed weights ==")
+    packed = pack_params(cfg, projected)
+    frac = packed_fraction(projected, packed)
+    print(f"packed weight bytes: {frac:.3f}x dense "
+          f"(-> ~{1/frac:.1f}x less HBM weight traffic per decode step)")
+    out_packed = generate(cfg, packed, sc)
+
+    match = np.array_equal(np.asarray(out_dense["tokens"]),
+                           np.asarray(out_packed["tokens"]))
+    print(f"greedy tokens identical: {match}")
+    assert match, "packed serving must reproduce projected-dense outputs"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

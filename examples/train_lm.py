@@ -1,0 +1,77 @@
+"""End-to-end LM training driver: dense warmup → ADMM-BCR pruning →
+mask-frozen retraining, with async checkpointing + resume.
+
+Presets:
+  --preset tiny  :  ~1M params, runs in ~1 min on this CPU box (default)
+  --preset 100m  :  ~100M-param llama-style model, a few hundred steps
+                    (the assignment's end-to-end driver; budget hours on CPU,
+                    minutes on a real accelerator)
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 60 \
+        --admm-start 20 --retrain-start 40 --ckpt-dir /tmp/lm_ckpt
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.bcr import density
+from repro.launch.train import TrainerConfig, train_loop
+from repro.optim import adamw
+
+PRESETS = {
+    "tiny": ModelConfig(
+        name="tiny-lm", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        dtype="float32", attn_impl="dense", bcr_keep_frac=0.25,
+        bcr_block=(32, 32)),
+    "100m": ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32768, dtype="bfloat16", attn_impl="flash",
+        bcr_keep_frac=0.25, bcr_block=(128, 128)),
+}
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    p.add_argument("--steps", type=int, default=60)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--admm-start", type=int, default=None)
+    p.add_argument("--retrain-start", type=int, default=None)
+    p.add_argument("--ckpt-dir", default=None)
+    args = p.parse_args()
+
+    cfg = PRESETS[args.preset]
+    tc = TrainerConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 3, 10),
+        admm_start=args.admm_start, retrain_start=args.retrain_start,
+        data_kind="markov")
+    out = train_loop(cfg, tc, adamw.AdamWConfig(lr=args.lr,
+                                                total_steps=args.steps))
+
+    hist = out["history"]
+    print(f"\nloss: first={hist[0]:.4f}  last={hist[-1]:.4f}  "
+          f"improved={hist[0] - hist[-1]:.4f}")
+    state = out["state"]
+    if state.masks is not None:
+        import jax.numpy as jnp
+        dens = [float(density(m))
+                for m in jax.tree_util.tree_leaves(
+                    state.masks, is_leaf=lambda x: x is None)
+                if m is not None]
+        print(f"BCR-pruned tensors: {len(dens)}; mean kept density "
+              f"{sum(dens)/len(dens):.3f} "
+              f"(pruning rate {len(dens)/max(sum(dens),1e-9):.1f}x)")
+    assert hist[-1] < hist[0], "training must reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: GRIM (BCR fine-grained structured sparsity) on TPU in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,148 @@
+"""Checkpointing: atomic, async, resumable — pure JAX/numpy (no orbax here).
+
+Layout:  <dir>/step_<N>/shard_<proc>.npz  +  <dir>/step_<N>/COMMITTED
+Writes go to ``step_<N>.tmp`` and are published with a single ``os.replace``
+(atomic on POSIX), then the COMMITTED marker is dropped — a reader never
+sees a torn checkpoint, and a crashed writer leaves only a ``.tmp`` to GC.
+
+``save_async`` snapshots device arrays to host, then serializes on a
+background thread so the train loop never blocks on disk. ``restore``
+re-shards onto the *current* mesh (elastic restart: the surviving topology
+may differ from the writer's — resharding is a device_put with the new
+sharding, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_SEP = "::"
+
+
+_BF16_TAG = "%bf16"
+
+
+def _flatten_with_names(tree: PyTree) -> Tuple[Dict[str, np.ndarray], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for i, (path, leaf) in enumerate(flat):
+        key = f"{i:05d}{_SEP}{jax.tree_util.keystr(path)}"
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # numpy's savez has no bf16: store the raw bits + a key tag
+            key += _BF16_TAG
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out, treedef
+
+
+def _unflatten_with_names(arrays: Dict[str, np.ndarray], treedef) -> PyTree:
+    keys = sorted(arrays.keys(), key=lambda k: int(k.split(_SEP)[0]))
+    leaves = []
+    for k in keys:
+        arr = arrays[k]
+        if k.endswith(_BF16_TAG):
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    process_index: int = 0
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # -- paths ------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.directory, name, "COMMITTED")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- write ------------------------------------------------------------
+    def _write(self, step: int, host_arrays: Dict[str, np.ndarray]) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"shard_{self.process_index}.npz"),
+                 **host_arrays)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        with open(os.path.join(final, "COMMITTED"), "w") as f:
+            f.write("ok\n")
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def save(self, step: int, tree: PyTree) -> None:
+        host, _ = _flatten_with_names(
+            jax.tree_util.tree_map(lambda x: jax.device_get(x), tree))
+        with self._lock:
+            self._write(step, host)
+
+    def save_async(self, step: int, tree: PyTree) -> None:
+        """Snapshot to host now; write on a background thread."""
+        self.wait()  # one in-flight write at a time
+        host, _ = _flatten_with_names(
+            jax.tree_util.tree_map(lambda x: jax.device_get(x), tree))
+        self._thread = threading.Thread(
+            target=lambda: (self._lock.acquire(),
+                            self._write(step, host),
+                            self._lock.release()),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- read -------------------------------------------------------------
+    def restore(self, step: int, like: PyTree, shardings: Optional[PyTree] = None
+                ) -> PyTree:
+        """Restore into the structure of ``like``; optionally device_put with
+        per-leaf shardings (elastic restart onto a different mesh)."""
+        path = os.path.join(self._step_dir(step),
+                            f"shard_{self.process_index}.npz")
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+        _, treedef = _flatten_with_names(like)
+        tree = _unflatten_with_names(arrays, treedef)
+        # cast back to the dtypes of `like` (npz may widen)
+        tree = jax.tree_util.tree_map(
+            lambda a, l: np.asarray(a, dtype=l.dtype), tree, like)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree

@@ -1,0 +1,162 @@
+"""ADMM-based BCR pruning (GRIM §5.2).
+
+minimize f(W) + Σ g_i(Z_i)   s.t. W_i = Z_i,   g_i = indicator of BCR set S_i
+
+Augmented-Lagrangian split:
+  (3) W-step:  SGD/Adam on  f(W) + Σ ρ_i/2 ||W_i − Z_i + U_i||_F²
+  (4) Z-step:  Z_i ← Π_{S_i}(W_i + U_i)          (bcr_project)
+      U-step:  U_i ← U_i + W_i − Z_i
+
+The module is pytree-generic: a ``prune_filter`` predicate selects which
+leaves are BCR-constrained (by path + 2-D shape). After ADMM converges, the
+support is frozen (``finalize``) and retraining proceeds with a hard mask —
+exactly the paper's prune → retrain schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcr import BCRSpec, bcr_mask_any, bcr_project_any
+
+PyTree = Any
+PruneFilter = Callable[[Tuple[Any, ...], jax.Array], Optional[BCRSpec]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMConfig:
+    rho_init: float = 1e-4
+    rho_final: float = 1e-1        # paper: ρ grows exponentially 1e-4 → 1e-1
+    num_admm_steps: int = 8        # number of Z/U updates (paper: per epoch)
+    steps_per_admm: int = 50       # W-steps between consecutive Z/U updates
+
+    def rho_at(self, admm_iter: jax.Array) -> jax.Array:
+        t = jnp.clip(admm_iter / max(self.num_admm_steps - 1, 1), 0.0, 1.0)
+        return self.rho_init * (self.rho_final / self.rho_init) ** t
+
+
+def specs_for(params: PyTree, prune_filter: PruneFilter) -> Dict[Tuple, BCRSpec]:
+    """Resolve the BCRSpec (or None) for every leaf, keyed by path."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        spec = prune_filter(path, leaf)
+        if spec is not None:
+            out[path] = spec
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ADMMState:
+    z: PyTree           # auxiliary variables (None on unpruned leaves)
+    u: PyTree           # scaled duals (None on unpruned leaves)
+    admm_iter: jax.Array
+
+    def tree_flatten(self):
+        return (self.z, self.u, self.admm_iter), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+_IS_NONE = lambda x: x is None  # keep None as a leaf, not an empty subtree
+
+
+def _map_pruned(fn, params, *trees, specs):
+    """tree_map over leaves, applying fn only where a spec exists."""
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_others = [jax.tree_util.tree_leaves(t, is_leaf=_IS_NONE) for t in trees]
+    out = []
+    for i, (path, leaf) in enumerate(paths):
+        spec = specs.get(path)
+        others = [f[i] for f in flat_others]
+        out.append(fn(spec, leaf, *others))
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def admm_init(params: PyTree, specs: Dict[Tuple, BCRSpec]) -> ADMMState:
+    z = _map_pruned(
+        lambda spec, w: bcr_project_any(w, spec) if spec else None, params, specs=specs
+    )
+    u = _map_pruned(
+        lambda spec, w: jnp.zeros_like(w) if spec else None, params, specs=specs
+    )
+    return ADMMState(z=z, u=u, admm_iter=jnp.zeros((), jnp.int32))
+
+
+def admm_penalty(
+    params: PyTree, state: ADMMState, specs: Dict[Tuple, BCRSpec], cfg: ADMMConfig
+) -> jax.Array:
+    """Σ ρ/2 ||W − Z + U||² — add to the task loss for the W-step."""
+    rho = cfg.rho_at(state.admm_iter)
+
+    def term(spec, w, z, u):
+        if spec is None:
+            return jnp.zeros((), jnp.float32)
+        d = (w - z + u).astype(jnp.float32)
+        return 0.5 * jnp.sum(d * d)
+
+    terms = _map_pruned(term, params, state.z, state.u, specs=specs)
+    return rho * sum(jax.tree_util.tree_leaves(terms))
+
+
+def admm_dual_update(
+    params: PyTree, state: ADMMState, specs: Dict[Tuple, BCRSpec]
+) -> ADMMState:
+    """Z ← Π_S(W + U); U ← U + W − Z (call every cfg.steps_per_admm steps)."""
+
+    def z_up(spec, w, z, u):
+        if spec is None:
+            return None
+        return bcr_project_any((w + u).astype(jnp.float32), spec).astype(w.dtype)
+
+    new_z = _map_pruned(z_up, params, state.z, state.u, specs=specs)
+
+    def u_up(spec, w, z, u):
+        if spec is None:
+            return None
+        return (u + w - z).astype(w.dtype)
+
+    new_u = _map_pruned(u_up, params, new_z, state.u, specs=specs)
+    return ADMMState(z=new_z, u=new_u, admm_iter=state.admm_iter + 1)
+
+
+def primal_residual(params: PyTree, state: ADMMState, specs) -> jax.Array:
+    """||W − Z||_F / ||W||_F aggregated — ADMM convergence diagnostic."""
+    def sq(spec, w, z):
+        if spec is None:
+            return (jnp.zeros(()), jnp.zeros(()))
+        d = (w - z).astype(jnp.float32)
+        return (jnp.sum(d * d), jnp.sum(w.astype(jnp.float32) ** 2))
+
+    pairs = _map_pruned(sq, params, state.z, specs=specs)
+    leaves = jax.tree_util.tree_leaves(pairs)
+    num = sum(leaves[0::2])
+    den = sum(leaves[1::2])
+    return jnp.sqrt(num / jnp.maximum(den, 1e-12))
+
+
+def finalize(params: PyTree, specs: Dict[Tuple, BCRSpec]) -> Tuple[PyTree, PyTree]:
+    """Hard-project params and return (pruned_params, masks) for retraining."""
+    masks = _map_pruned(
+        lambda spec, w: bcr_mask_any(w, spec) if spec else None, params, specs=specs
+    )
+    pruned = _map_pruned(
+        lambda spec, w, m: (w * m.astype(w.dtype)) if spec is not None else w,
+        params, masks, specs=specs,
+    )
+    return pruned, masks
+
+
+def apply_masks(params: PyTree, masks: PyTree) -> PyTree:
+    """Re-apply frozen masks after an optimizer step (retraining phase)."""
+    return jax.tree_util.tree_map(
+        lambda w, m: w if m is None else (w * m.astype(w.dtype)),
+        params, masks, is_leaf=lambda x: x is None,
+    )

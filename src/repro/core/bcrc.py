@@ -1,0 +1,224 @@
+"""Compact model storage for BCR-pruned matrices (GRIM §4.3).
+
+Two formats live here:
+
+* **BCRC** — the paper's six-array hierarchical format (reorder, row offset,
+  occurrence, column stride, compact column, weights). Implemented faithfully
+  in numpy for serialization and the Fig.-16 storage benchmark: rows sharing
+  an identical surviving-column set store that set once.
+
+* **TBCRC** — the TPU-packed variant the Pallas kernel consumes: per block a
+  dense ``(R_keep, C_keep)`` value tile plus int32 row/col index planes,
+  shapes ``(nb_r, nb_c, R_keep, C_keep)`` / ``(nb_r, nb_c, R_keep)`` /
+  ``(nb_r, nb_c, C_keep)``. Rectangular by balanced-BCR construction, padded
+  at pack time to (8, 128)-aligned tiles when requested.
+
+* **CSR** — reference format for the storage comparison (paper's baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcr as bcr_mod
+from repro.core.bcr import BCRSpec
+
+
+# --------------------------------------------------------------------------
+# Faithful BCRC (numpy, offline packing — this is a storage format, not a hot
+# path; the paper also packs offline at compile time).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BCRC:
+    """The paper's six arrays + shape metadata."""
+
+    shape: Tuple[int, int]
+    reorder: np.ndarray          # (n_rows,) original row id of each packed row
+    row_offset: np.ndarray       # (n_rows+1,) offsets into `weights`
+    occurrence: np.ndarray       # (n_groups+1,) packed-row ranges sharing cols
+    column_stride: np.ndarray    # (n_groups+1,) offsets into `compact_column`
+    compact_column: np.ndarray   # concatenated deduped column-index sets
+    weights: np.ndarray          # all surviving weights, row-major packed
+
+    def nbytes_extra(self, index_bytes: int = 4) -> int:
+        """Index/metadata bytes (everything except the weight payload)."""
+        n = (
+            self.reorder.size
+            + self.row_offset.size
+            + self.occurrence.size
+            + self.column_stride.size
+            + self.compact_column.size
+        )
+        return n * index_bytes
+
+    def nbytes_weights(self, weight_bytes: int = 2) -> int:
+        return self.weights.size * weight_bytes
+
+
+def bcrc_pack(w: np.ndarray) -> BCRC:
+    """Pack a (BCR-)sparse matrix into BCRC.
+
+    Matrix-reorder (§4.2) is folded in: rows are sorted so rows with an
+    identical surviving-column set become adjacent, which is what lets the
+    `occurrence` array deduplicate the column indices.
+    """
+    w = np.asarray(w)
+    n_rows = w.shape[0]
+    col_sets = []
+    for r in range(n_rows):
+        cols = np.flatnonzero(w[r]).astype(np.int32)
+        col_sets.append(cols)
+
+    # Reorder: group identical column sets together (then by nnz for locality).
+    keys = [(len(c), c.tobytes()) for c in col_sets]
+    order = sorted(range(n_rows), key=lambda r: keys[r])
+    reorder = np.asarray(order, dtype=np.int32)
+
+    weights_parts, row_offset = [], [0]
+    occurrence, column_stride, compact_cols = [0], [0], []
+    prev_key = None
+    for packed_pos, orig_row in enumerate(order):
+        cols = col_sets[orig_row]
+        weights_parts.append(w[orig_row, cols])
+        row_offset.append(row_offset[-1] + len(cols))
+        key = keys[orig_row]
+        if key != prev_key:
+            if packed_pos != 0:
+                occurrence.append(packed_pos)
+            compact_cols.append(cols)
+            column_stride.append(column_stride[-1] + len(cols))
+            prev_key = key
+    occurrence.append(n_rows)
+
+    return BCRC(
+        shape=tuple(w.shape),
+        reorder=reorder,
+        row_offset=np.asarray(row_offset, dtype=np.int32),
+        occurrence=np.asarray(occurrence, dtype=np.int32),
+        column_stride=np.asarray(column_stride, dtype=np.int32),
+        compact_column=(
+            np.concatenate(compact_cols).astype(np.int32)
+            if compact_cols else np.zeros((0,), np.int32)
+        ),
+        weights=(
+            np.concatenate(weights_parts)
+            if weights_parts else np.zeros((0,), w.dtype)
+        ),
+    )
+
+
+def bcrc_unpack(packed: BCRC) -> np.ndarray:
+    """Inverse of :func:`bcrc_pack` (dense reconstruction)."""
+    out = np.zeros(packed.shape, dtype=packed.weights.dtype)
+    n_groups = len(packed.occurrence) - 1
+    for g in range(n_groups):
+        cols = packed.compact_column[
+            packed.column_stride[g]: packed.column_stride[g + 1]
+        ]
+        for packed_pos in range(packed.occurrence[g], packed.occurrence[g + 1]):
+            orig_row = packed.reorder[packed_pos]
+            lo, hi = packed.row_offset[packed_pos], packed.row_offset[packed_pos + 1]
+            out[orig_row, cols] = packed.weights[lo:hi]
+    return out
+
+
+def csr_extra_bytes(w: np.ndarray, index_bytes: int = 4) -> int:
+    """CSR index overhead for the same matrix (paper's comparison baseline)."""
+    nnz = int(np.count_nonzero(w))
+    n_rows = w.shape[0]
+    return (nnz + n_rows + 1) * index_bytes
+
+
+# --------------------------------------------------------------------------
+# TBCRC — TPU-packed balanced-BCR tiles (what kernels/bcr_spmm consumes).
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TBCRC:
+    """Packed balanced-BCR weight: dense per-block tiles + index planes.
+
+    ``vals``:    (nb_r, nb_c, R_keep, C_keep)  surviving weights
+    ``row_idx``: (nb_r, nb_c, R_keep) int32    block-local surviving rows
+    ``col_idx``: (nb_r, nb_c, C_keep) int32    block-local surviving cols
+    ``shape``/``block_shape`` reconstruct the dense layout.
+    """
+
+    vals: jax.Array
+    row_idx: jax.Array
+    col_idx: jax.Array
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.vals, self.row_idx, self.col_idx), (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vals, row_idx, col_idx = children
+        return cls(vals, row_idx, col_idx, aux[0], aux[1])
+
+    @property
+    def kept_counts(self) -> Tuple[int, int]:
+        return self.vals.shape[2], self.vals.shape[3]
+
+    def nbytes(self) -> int:
+        return (
+            self.vals.size * self.vals.dtype.itemsize
+            + self.row_idx.size * 4
+            + self.col_idx.size * 4
+        )
+
+
+def tbcrc_pack(w: jax.Array, spec: BCRSpec) -> TBCRC:
+    """Project ``w`` onto the balanced BCR set and pack the survivors."""
+    row_idx, col_idx = bcr_mod.bcr_indices(w, spec)
+    blocks = bcr_mod._to_blocks(w, spec.block_shape)  # (nb_r, nb_c, br, bc)
+    # Gather rows then cols: (nb_r, nb_c, R_keep, C_keep)
+    rows = jnp.take_along_axis(blocks, row_idx[:, :, :, None], axis=2)
+    vals = jnp.take_along_axis(rows, col_idx[:, :, None, :], axis=3)
+    return TBCRC(
+        vals=vals.astype(w.dtype),
+        row_idx=row_idx,
+        col_idx=col_idx,
+        shape=tuple(w.shape),
+        block_shape=spec.block_shape,
+    )
+
+
+def tbcrc_unpack(packed: TBCRC) -> jax.Array:
+    """Dense reconstruction (equals bcr_project(w, spec) for packed w)."""
+    nb_r, nb_c, r_keep, c_keep = packed.vals.shape
+    br, bc = packed.block_shape
+    blocks = jnp.zeros((nb_r, nb_c, br, bc), packed.vals.dtype)
+    # scatter cols then rows
+    rows = jnp.zeros((nb_r, nb_c, r_keep, bc), packed.vals.dtype)
+    rows = jax.vmap(
+        jax.vmap(lambda r, ci, v: r.at[:, ci].set(v))
+    )(rows, packed.col_idx, packed.vals)
+    blocks = jax.vmap(
+        jax.vmap(lambda b, ri, v: b.at[ri, :].set(v))
+    )(blocks, packed.row_idx, rows)
+    return bcr_mod._from_blocks(blocks)
+
+
+def tbcrc_stats(packed: TBCRC, weight_bytes: int = 2) -> Dict[str, float]:
+    rows, cols = packed.shape
+    dense = rows * cols * weight_bytes
+    return {
+        "dense_bytes": float(dense),
+        "packed_bytes": float(
+            packed.vals.size * weight_bytes + (packed.row_idx.size + packed.col_idx.size) * 4
+        ),
+        "compression": float(dense)
+        / float(packed.vals.size * weight_bytes + (packed.row_idx.size + packed.col_idx.size) * 4),
+        "density": packed.vals.size / (rows * cols),
+    }

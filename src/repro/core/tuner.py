@@ -1,0 +1,116 @@
+"""Genetic-algorithm auto-tuner (GRIM §4.5), retargeted to Pallas tiles.
+
+The paper tunes tiling sizes / unroll factors / data placement with a GA
+("allows starting parameter search with initializing an arbitrary number of
+chromosomes"). Here the genome is a dict of categorical choices (Pallas
+block shapes, grid order, microbatch, remat policy) and fitness defaults to
+the analytic VMEM+roofline cost model — no hardware in the loop, preserving
+§5.1's decoupling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+Genome = Dict[str, Any]
+SearchSpace = Dict[str, Sequence[Any]]
+
+
+@dataclasses.dataclass
+class GAResult:
+    best: Genome
+    best_fitness: float
+    history: List[Tuple[int, float]]   # (generation, best fitness so far)
+    evaluations: int
+
+
+def genetic_search(
+    space: SearchSpace,
+    fitness: Callable[[Genome], float],   # lower is better (latency seconds)
+    *,
+    population: int = 24,
+    generations: int = 12,
+    elite: int = 4,
+    mutation_rate: float = 0.25,
+    seed: int = 0,
+) -> GAResult:
+    rng = np.random.default_rng(seed)
+    keys = sorted(space.keys())
+
+    def random_genome() -> Genome:
+        return {k: space[k][rng.integers(len(space[k]))] for k in keys}
+
+    def crossover(a: Genome, b: Genome) -> Genome:
+        return {k: (a if rng.random() < 0.5 else b)[k] for k in keys}
+
+    def mutate(g: Genome) -> Genome:
+        out = dict(g)
+        for k in keys:
+            if rng.random() < mutation_rate:
+                out[k] = space[k][rng.integers(len(space[k]))]
+        return out
+
+    pop = [random_genome() for _ in range(population)]
+    cache: Dict[Tuple, float] = {}
+    evals = 0
+
+    def fit(g: Genome) -> float:
+        nonlocal evals
+        key = tuple(g[k] for k in keys)
+        if key not in cache:
+            cache[key] = float(fitness(g))
+            evals += 1
+        return cache[key]
+
+    history: List[Tuple[int, float]] = []
+    best_g, best_f = None, float("inf")
+    for gen in range(generations):
+        scored = sorted(pop, key=fit)
+        if fit(scored[0]) < best_f:
+            best_g, best_f = scored[0], fit(scored[0])
+        history.append((gen, best_f))
+        parents = scored[: max(elite, 2)]
+        children = [dict(p) for p in parents]
+        while len(children) < population:
+            a, b = rng.integers(len(parents)), rng.integers(len(parents))
+            children.append(mutate(crossover(parents[a], parents[b])))
+        pop = children
+    return GAResult(best=best_g, best_fitness=best_f, history=history,
+                    evaluations=evals)
+
+
+# ---------------------------------------------------------------------------
+# Default fitness: VMEM-aware roofline model for the BCR decode kernel.
+# ---------------------------------------------------------------------------
+
+def kernel_cost_model(
+    m: int, k: int, n: int, keep_frac: float,
+) -> Callable[[Genome], float]:
+    """Fitness for tuning (block_rows, block_cols, m_tile) of bcr_spmm."""
+    from repro.core.block_search import (
+        GRID_STEP_OVERHEAD, HBM_BW, PEAK_FLOPS, VMEM_BYTES)
+    import math
+
+    def fitness(g: Genome) -> float:
+        br, bc, mt = g["block_rows"], g["block_cols"], g["m_tile"]
+        if n % br or k % bc:
+            return float("inf")
+        nb_r, nb_c = n // br, k // bc
+        rf = cf = math.sqrt(keep_frac)
+        r_keep = max(8, int(round(rf * br / 8)) * 8)
+        c_keep = max(8, int(round(cf * bc / 8)) * 8)
+        # VMEM working set per grid step: x block + w tile + y accumulator
+        vmem = mt * bc * 2 + r_keep * c_keep * 2 + mt * br * 4 + (r_keep + c_keep) * 4
+        if vmem > VMEM_BYTES * 0.8:
+            return float("inf")
+        m_tiles = -(-m // mt)
+        weight_bytes = nb_r * nb_c * (r_keep * c_keep * 2 + (r_keep + c_keep) * 4)
+        act_bytes = m * k * 2 * nb_r + m * n * 2  # x re-read per block-row
+        flops = 2 * m * nb_r * nb_c * (c_keep * r_keep + bc * c_keep + r_keep * br)
+        t = max((weight_bytes + act_bytes) / HBM_BW, flops / PEAK_FLOPS)
+        return t + m_tiles * nb_r * nb_c * GRID_STEP_OVERHEAD
+
+    return fitness

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels: BCR sparse matmul (balanced + block-skipping) and
+fused flash attention, with jnp oracles."""
+
+from repro.kernels.bcr_spmm import bcr_spmm  # noqa: F401
+from repro.kernels.bcr_spmm_skip import (  # noqa: F401
+    SkipPacked, bcr_spmm_skip, bcr_spmm_skip_ref, pack_skip,
+)
+from repro.kernels.flash_attention import (  # noqa: F401
+    flash_attention_fused, flash_attention_ref,
+)
+from repro.kernels.ops import bcr_matmul, default_impl  # noqa: F401
+from repro.kernels.ref import (  # noqa: F401
+    bcr_spmm_gather_ref, bcr_spmm_ref, masked_dense_ref,
+)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: BCR block-sparse matmul over TBCRC-packed weights.
+
+TPU-native redesign of GRIM's sparse codegen (DESIGN.md §2). The kernel
+computes ``y[M, N] = x[M, K] @ W.T`` where ``W (N, K)`` is balanced-BCR
+pruned and stored packed: per block a dense ``(R_keep, C_keep)`` value tile
+plus int32 index planes. Only surviving weight bytes are ever DMA'd from
+HBM — on the bandwidth-bound decode step that converts the pruning rate
+directly into step-time (the mobile-latency analogue, DESIGN.md §2).
+
+Mechanics per grid step ``(i = output block-row, j = contraction block)``:
+
+  1. ``x`` block ``(M_t, bc)`` and the packed tile are DMA'd to VMEM by the
+     BlockSpec machinery (double-buffered by Pallas).
+  2. gather   : one-hot ``(bc, C_keep)`` matmul on the MXU — selects the
+     surviving columns. (Index compare → one-hot is VPU work; the matmul
+     rides the systolic array which is idle at decode batch sizes.)
+  3. core     : ``(M_t, C_keep) x (C_keep, R_keep)`` dense tile matmul.
+  4. scatter  : one-hot ``(R_keep, br)`` matmul back to block-row layout,
+     accumulated in an fp32 VMEM scratch across ``j`` (revisiting pattern —
+     the output block is written once, at the last contraction step).
+
+Register-level LRE (§4.4) maps to: the accumulator and the ``x`` block stay
+resident in VMEM across grid steps that share them; the gather one-hot is
+built from indices already in VMEM (no HBM index traffic per row — the
+TBCRC index planes are the whole per-block metadata, mirroring BCRC's
+column-index dedup).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.bcrc import TBCRC
+
+
+def _kernel(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
+            nb_c: int, block_rows: int, block_cols: int):
+    j = pl.program_id(2)  # grid = (m_step, block_row i, contraction j)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                      # (M_t, bc)
+    vals = vals_ref[0, 0]               # (R_keep, C_keep)
+    cols = col_ref[0, 0, :]             # (C_keep,) int32
+    rows = row_ref[0, 0, :]             # (R_keep,) int32
+    c_keep = cols.shape[0]
+    r_keep = rows.shape[0]
+
+    # gather: one-hot (bc, C_keep) — exact 0/1 values, safe in bf16
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (block_cols, c_keep), 0)
+    gather = (iota_c == cols[None, :]).astype(x.dtype)
+    xg = jnp.dot(x, gather, preferred_element_type=jnp.float32)      # (M_t, C_keep)
+
+    part = jax.lax.dot_general(                                      # (M_t, R_keep)
+        xg.astype(x.dtype), vals,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # scatter: one-hot (R_keep, br)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (r_keep, block_rows), 1)
+    scatter = (iota_r == rows[:, None]).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(part, scatter, preferred_element_type=jnp.float32)
+
+    @pl.when(j == nb_c - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m_tile", "interpret"))
+def bcr_spmm(
+    x: jax.Array,
+    packed: TBCRC,
+    *,
+    m_tile: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``y[M, N] = x[M, K] @ W.T`` for balanced-BCR packed ``W``.
+
+    ``m_tile``: rows of ``x`` per grid step (defaults to all of M — decode
+    batches fit VMEM comfortably; prefill callers tile).
+    """
+    m, k = x.shape
+    n = packed.shape[0]
+    br, bc = packed.block_shape
+    nb_r, nb_c, r_keep, c_keep = packed.vals.shape
+    if packed.shape[1] != k:
+        raise ValueError(f"x K dim {k} != packed K dim {packed.shape[1]}")
+
+    m_tile = m_tile or m
+    if m % m_tile:
+        raise ValueError(f"M={m} not divisible by m_tile={m_tile}")
+    m_steps = m // m_tile
+
+    grid = (m_steps, nb_r, nb_c)
+
+    kernel = functools.partial(
+        _kernel, nb_c=nb_c, block_rows=br, block_cols=bc)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_tile, bc), lambda s, i, j: (s, j)),
+            pl.BlockSpec((1, 1, r_keep, c_keep), lambda s, i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, r_keep), lambda s, i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, c_keep), lambda s, i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_tile, br), lambda s, i, j: (s, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m_tile, br), jnp.float32)],
+        interpret=interpret,
+        name="bcr_spmm",
+    )(x, packed.vals, packed.row_idx, packed.col_idx)
+    return out

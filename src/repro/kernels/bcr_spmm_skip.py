@@ -1,0 +1,157 @@
+"""Block-skipping BCR matmul for UNBALANCED (paper-general) BCR pruning.
+
+GRIM's original formulation lets every block choose its own kept rows/cols;
+blocks can be pruned away entirely. The balanced kernel (bcr_spmm.py) visits
+every block; here only SURVIVING blocks are visited: their coordinates are
+scalar-prefetched (pltpu.PrefetchScalarGridSpec) and the BlockSpec index
+maps read them to steer the DMA — the TPU analogue of GRIM's compiler
+emitting code only for non-empty blocks.
+
+Packing contract (``pack_skip``): surviving (bi, bj) dense tiles sorted by
+bi (output-major) so the output block accumulator can emit on the last
+visit of each block row; zero-valued tail entries pad num_nz to a static
+size (they add zeros — correctness preserved, work bounded by occupancy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.bcr import BCRSpec, bcr_mask
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SkipPacked:
+    """Compacted surviving tiles of an unbalanced-BCR matrix W (N, K)."""
+
+    tiles: jax.Array     # (num_nz, br, bc) dense surviving blocks
+    bi: jax.Array        # (num_nz,) int32 output block row, sorted ascending
+    bj: jax.Array        # (num_nz,) int32 contraction block col
+    last: jax.Array      # (num_nz,) int32 1 iff last tile of this bi
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return ((self.tiles, self.bi, self.bj, self.last),
+                (self.shape, self.block_shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0], aux[1])
+
+    def nbytes(self) -> int:
+        return (self.tiles.size * self.tiles.dtype.itemsize
+                + 12 * self.bi.size)
+
+
+def pack_skip(w: jax.Array, spec: BCRSpec) -> SkipPacked:
+    """Project W onto the (unbalanced) BCR set and pack surviving blocks."""
+    wp = np.asarray(w * bcr_mask(w, spec).astype(w.dtype))
+    br, bc = spec.block_shape
+    n, k = wp.shape
+    nb_r, nb_c = n // br, k // bc
+    tiles, bis, bjs = [], [], []
+    for i in range(nb_r):
+        for j in range(nb_c):
+            blk = wp[i * br:(i + 1) * br, j * bc:(j + 1) * bc]
+            if np.any(blk):
+                tiles.append(blk)
+                bis.append(i)
+                bjs.append(j)
+    if not tiles:  # fully pruned matrix: keep one zero tile for shape sanity
+        tiles, bis, bjs = [np.zeros((br, bc), wp.dtype)], [0], [0]
+    bis = np.asarray(bis, np.int32)
+    last = np.zeros_like(bis)
+    for i in range(len(bis)):
+        if i + 1 == len(bis) or bis[i + 1] != bis[i]:
+            last[i] = 1
+    return SkipPacked(
+        tiles=jnp.asarray(np.stack(tiles)),
+        bi=jnp.asarray(bis),
+        bj=jnp.asarray(np.asarray(bjs, np.int32)),
+        last=jnp.asarray(last),
+        shape=(n, k), block_shape=(br, bc))
+
+
+def _kernel(bi_ref, bj_ref, last_ref, x_ref, t_ref, o_ref, acc_ref):
+    nz = pl.program_id(0)
+    is_first = jnp.logical_or(
+        nz == 0, bi_ref[jnp.maximum(nz - 1, 0)] != bi_ref[nz])
+
+    @pl.when(is_first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]          # (m, bc) — the bj-th contraction block of x
+    t = t_ref[0]            # (br, bc) surviving weight tile
+    acc_ref[...] += jax.lax.dot_general(
+        x, t, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last_ref[nz] == 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcr_spmm_skip(x: jax.Array, packed: SkipPacked, *,
+                  interpret: bool = False) -> jax.Array:
+    """y[M, N] = x[M, K] @ W.T visiting only surviving blocks.
+
+    NOTE: output block rows with NO surviving tiles are never visited; the
+    caller owns zero-initialization (jnp.zeros out_shape default in Pallas
+    is undefined) — we handle it by multiplying with an occupancy mask.
+    """
+    m, k = x.shape
+    n = packed.shape[0]
+    br, bc = packed.block_shape
+    num_nz = packed.tiles.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,   # bi, bj, last
+        grid=(num_nz,),
+        in_specs=[
+            pl.BlockSpec((m, bc), lambda nz, bi, bj, last: (0, bj[nz])),
+            pl.BlockSpec((1, br, bc), lambda nz, bi, bj, last: (nz, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, br), lambda nz, bi, bj, last: (0, bi[nz])),
+        scratch_shapes=[pltpu.VMEM((m, br), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+        name="bcr_spmm_skip",
+    )(packed.bi, packed.bj, packed.last, x, packed.tiles)
+
+    # zero the never-visited output block rows (their buffer contents are
+    # undefined — where(), not multiply: garbage may be NaN)
+    nb_r = n // br
+    occupancy = jnp.zeros((nb_r,), jnp.float32).at[packed.bi].add(1.0) > 0
+    mask = jnp.repeat(occupancy, br)
+    return jnp.where(mask[None, :], y, jnp.zeros_like(y))
+
+
+def bcr_spmm_skip_ref(x: jax.Array, packed: SkipPacked) -> jax.Array:
+    """Dense oracle: reconstruct W from tiles and matmul."""
+    n, k = packed.shape
+    br, bc = packed.block_shape
+    w = jnp.zeros((n, k), packed.tiles.dtype)
+
+    def place(w, args):
+        tile, bi, bj = args
+        return jax.lax.dynamic_update_slice(w, tile, (bi * br, bj * bc)), None
+
+    w, _ = jax.lax.scan(place, w, (packed.tiles, packed.bi, packed.bj))
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,148 @@
+"""Pallas TPU fused flash attention — the §Perf-documented next lever.
+
+The XLA-level chunked attention (models/layers.flash_attention) materializes
+every (q_chunk × kv_chunk) logits tile in HBM between its two matmuls; the
+per-cell HLO breakdowns show that tile stream dominating train/prefill
+memory terms. This kernel keeps the whole online-softmax state (logits tile,
+m/l accumulators, output accumulator) in VMEM across the kv sweep — HBM
+traffic collapses to one read of Q/K/V and one write of O.
+
+Layout: heads are pre-merged into the batch dim (B' = B·H), matching the
+model-side "batch_heads" sharding. GQA callers broadcast K/V to B·H rows
+(or pre-merge by kv-head with g folded into the q rows).
+
+grid = (B', num_q_chunks, num_kv_chunks), kv innermost; the output block is
+revisited across the kv sweep and written once at the last step. Fully-
+future (causal) kv tiles still DMA but skip all compute via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            nk: int, q_chunk: int, kv_chunk: int, causal: bool,
+            q_offset: int, scale: float):
+    i = pl.program_id(1)   # q chunk
+    j = pl.program_id(2)   # kv chunk
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = q_offset + i * q_chunk
+    k_lo = j * kv_chunk
+    # fully-future tile: no compute (DMA already issued by the BlockSpec —
+    # harmless; on TPU it overlaps with the previous tile's compute)
+    live = (not causal) or (k_lo <= q_lo + q_chunk - 1)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0]                        # (q_chunk, d)
+        k = k_ref[0]                        # (kv_chunk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, kv_chunk), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, kv_chunk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                 # (q_chunk, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)              # (q_chunk, kv_chunk)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_chunk", "kv_chunk", "q_offset",
+                     "interpret"))
+def flash_attention_fused(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    q_chunk: int = 256, kv_chunk: int = 512, q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """q/k/v: (B', S, D) with heads merged into B'. Returns (B', S, D)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk or skv % kv_chunk:
+        raise ValueError(f"seq {sq}/{skv} not divisible by chunks "
+                         f"{q_chunk}/{kv_chunk}")
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = d ** -0.5
+
+    kernel = functools.partial(
+        _kernel, nk=nk, q_chunk=q_chunk, kv_chunk=kv_chunk, causal=causal,
+        q_offset=q_offset, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, 1), jnp.float32),   # running max m
+            pltpu.VMEM((q_chunk, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((q_chunk, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+        name="flash_attention_fused",
+    )(q, k, v)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """Dense oracle on the merged-head layout."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        s = jnp.where((qpos[:, None] >= kpos[None, :])[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def hbm_traffic_model(bh: int, sq: int, skv: int, d: int,
+                      dtype_bytes: int = 2) -> dict:
+    """Fused-vs-XLA HBM traffic (the §Perf napkin for this kernel)."""
+    qkv_o = bh * (sq + 2 * skv + sq) * d * dtype_bytes
+    logits_stream = bh * sq * skv * 4 * 2          # write+read each tile, f32
+    return {
+        "fused_bytes": float(qkv_o),
+        "xla_chunked_bytes": float(qkv_o + logits_stream),
+        "reduction": 1.0 + logits_stream / qkv_o,
+    }

@@ -1,0 +1,62 @@
+"""Public jit'd wrappers around the BCR kernels.
+
+``bcr_matmul`` is the API the model layers call: handles arbitrary leading
+batch dims, pads M to the sublane granule, and dispatches between
+
+  * ``pallas``     — the TPU kernel (compiled Mosaic; requires TPU),
+  * ``interpret``  — same kernel body, Pallas interpret mode (CPU-validated),
+  * ``ref``        — dense-reconstruction oracle (used for dry-run lowering
+                     so the roofline reads clean HLO, see DESIGN.md §2),
+  * ``gather_ref`` — step-by-step jnp mirror of the kernel decomposition.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcrc import TBCRC
+from repro.kernels import ref as ref_mod
+from repro.kernels.bcr_spmm import bcr_spmm
+
+Impl = Literal["pallas", "interpret", "ref", "gather_ref"]
+
+_SUBLANE = 8
+
+
+def default_impl() -> Impl:
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "m_tile"))
+def bcr_matmul(
+    x: jax.Array,
+    packed: TBCRC,
+    *,
+    impl: Impl = "ref",
+    m_tile: int | None = None,
+) -> jax.Array:
+    """y[..., N] = x[..., K] @ W.T for TBCRC-packed W (N, K)."""
+    *batch, k = x.shape
+    n = packed.shape[0]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    if impl in ("pallas", "interpret"):
+        pad = (-m) % _SUBLANE
+        if pad:
+            x2 = jnp.concatenate([x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
+        y2 = bcr_spmm(x2, packed, m_tile=m_tile,
+                      interpret=(impl == "interpret"))
+        y2 = y2[:m]
+    elif impl == "ref":
+        y2 = ref_mod.bcr_spmm_ref(x2, packed)
+    elif impl == "gather_ref":
+        y2 = ref_mod.bcr_spmm_gather_ref(x2, packed)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y2.reshape(*batch, n)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the BCR sparse-matmul kernels.
+
+``bcr_spmm_ref`` is the semantic ground truth (dense reconstruction, one
+einsum). ``bcr_spmm_gather_ref`` mirrors the kernel's gather → dense tile
+matmul → scatter-add decomposition step by step and is used to localize
+kernel bugs (same intermediate values, pure jnp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcrc import TBCRC, tbcrc_unpack
+
+
+def bcr_spmm_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
+    """y[M, N] = x[M, K] @ W.T with W = dense reconstruction of ``packed``."""
+    w = tbcrc_unpack(packed)  # (N, K)
+    return jnp.dot(x, w.T.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bcr_spmm_gather_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
+    """Block-by-block gather/matmul/scatter — mirrors the Pallas kernel."""
+    m, k = x.shape
+    n = packed.shape[0]
+    br, bc = packed.block_shape
+    nb_r, nb_c, r_keep, c_keep = packed.vals.shape
+
+    xb = x.reshape(m, nb_c, bc)
+
+    def block_row(i, y):
+        acc = jnp.zeros((m, br), jnp.float32)
+
+        def block_col(j, acc):
+            cols = packed.col_idx[i, j]                     # (C_keep,)
+            xg = jnp.take(xb[:, j, :], cols, axis=1)        # (M, C_keep)
+            w = packed.vals[i, j]                           # (R_keep, C_keep)
+            part = jnp.dot(xg.astype(jnp.float32), w.T.astype(jnp.float32))
+            rows = packed.row_idx[i, j]                     # (R_keep,)
+            return acc.at[:, rows].add(part)
+
+        acc = jax.lax.fori_loop(0, nb_c, block_col, acc)
+        return jax.lax.dynamic_update_slice(y, acc.astype(y.dtype), (0, i * br))
+
+    y = jnp.zeros((m, n), x.dtype)
+    return jax.lax.fori_loop(0, nb_r, block_row, y)
+
+
+def masked_dense_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Training-path reference: dense matmul with a hard BCR mask."""
+    wm = (w * mask.astype(w.dtype))
+    return jnp.dot(x, wm.T, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax use.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 pod (16×16 data×model) or 2 pods (2×16×16 pod×data×model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the actually-present devices (tests/examples)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,154 @@
+"""Serving entry point: BCR-packed weights + batched greedy decoding.
+
+The GRIM deployment path: take (ADMM-pruned) dense weights → pack every
+prunable projection into TBCRC (kernel format) → serve a decode loop whose
+weight traffic is keep_frac × dense. On this CPU box the kernel runs in
+Pallas interpret mode; impl="ref" is the fast-on-CPU fallback.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        --batch 4 --prompt-len 16 --gen 16 --bcr-keep 0.25 --impl interpret
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core.bcr import BCRSpec
+from repro.core.bcrc import tbcrc_pack
+from repro.launch.train import default_prune_filter
+from repro.models.api import model_fns
+
+PyTree = Any
+
+
+def _pack_any(w: jax.Array, spec: BCRSpec):
+    if w.ndim == 2:
+        return tbcrc_pack(w, spec)
+    return jax.vmap(lambda x: _pack_any(x, spec))(w)
+
+
+def pack_params(cfg: ModelConfig, params: PyTree) -> PyTree:
+    """Replace every prunable linear's {"w"} with {"w_packed": TBCRC}."""
+    fil = default_prune_filter(cfg)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    # group leaves by parent linear dict: handled structurally instead —
+    # walk the tree and rewrite dicts that look like linear params.
+    def rewrite(node, path=()):
+        if isinstance(node, dict) and "w" in node and isinstance(
+                node["w"], (jax.Array, jnp.ndarray)):
+            leafpath = path + (jax.tree_util.DictKey("w"),)
+            spec = fil(leafpath, node["w"])
+            if spec is not None:
+                out = {"w_packed": _pack_any(node["w"], spec)}
+                if "b" in node:
+                    out["b"] = node["b"]
+                return out
+        if isinstance(node, dict):
+            return {k: rewrite(v, path + (jax.tree_util.DictKey(k),))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [rewrite(v, path + (jax.tree_util.SequenceKey(i),))
+                    for i, v in enumerate(node)]
+        return node
+
+    return rewrite(params)
+
+
+def packed_fraction(params: PyTree, packed: PyTree) -> float:
+    from repro.core.bcrc import TBCRC
+    def nbytes(t):
+        tot = 0
+        for leaf in jax.tree_util.tree_leaves(
+                t, is_leaf=lambda x: isinstance(x, TBCRC)):
+            tot += (leaf.nbytes() if isinstance(leaf, TBCRC)
+                    else leaf.size * leaf.dtype.itemsize)
+        return tot
+    return nbytes(packed) / nbytes(params)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int = 4
+    prompt_len: int = 16
+    gen_tokens: int = 16
+    capacity: int = 128
+    seed: int = 0
+
+
+def generate(cfg: ModelConfig, params: PyTree, sc: ServeConfig, log=print
+             ) -> Dict[str, Any]:
+    """Prefill a batch of prompts, then greedy-decode gen_tokens."""
+    fns = model_fns(cfg)
+    key = jax.random.PRNGKey(sc.seed)
+    prompts = jax.random.randint(
+        key, (sc.batch, sc.prompt_len), 0, cfg.vocab_size, jnp.int32)
+
+    decode = jax.jit(fns.decode_step)
+    cache = fns.init_cache(sc.batch, sc.capacity)
+
+    # prime the cache by single-step decoding the prompt (works uniformly
+    # for KV caches and SSM/RWKV recurrent state)
+    tokens = prompts[:, :1]
+    t0 = time.perf_counter()
+    for i in range(sc.prompt_len):
+        batch = {"tokens": prompts[:, i:i + 1],
+                 "cache_len": jnp.asarray(i, jnp.int32)}
+        logits, cache = decode(params, batch, cache)
+    prefill_t = time.perf_counter() - t0
+
+    out_tokens = []
+    t0 = time.perf_counter()
+    pos = sc.prompt_len
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    for i in range(sc.gen_tokens):
+        out_tokens.append(next_tok)
+        batch = {"tokens": next_tok, "cache_len": jnp.asarray(pos + i, jnp.int32)}
+        logits, cache = decode(params, batch, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(logits)
+    decode_t = time.perf_counter() - t0
+
+    toks = jnp.concatenate(out_tokens, axis=1)
+    log(f"prefill {sc.prompt_len} tok x{sc.batch}: {prefill_t*1e3:.1f} ms; "
+        f"decode {sc.gen_tokens} tok x{sc.batch}: {decode_t*1e3:.1f} ms "
+        f"({decode_t/sc.gen_tokens*1e3:.2f} ms/step)")
+    return {"tokens": toks, "prefill_s": prefill_t, "decode_s": decode_t}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--bcr-keep", type=float, default=0.0)
+    p.add_argument("--impl", default="ref",
+                   choices=["ref", "interpret", "pallas"])
+    args = p.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, bcr_keep_frac=args.bcr_keep,
+                              kernel_impl=args.impl)
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    if args.bcr_keep > 0:
+        packed = pack_params(cfg, params)
+        print(f"packed weight bytes: {packed_fraction(params, packed):.3f}x dense")
+        params = packed
+    generate(cfg, params, ServeConfig(batch=args.batch,
+                                      prompt_len=args.prompt_len,
+                                      gen_tokens=args.gen))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Training entry point + train_step builder (used by dryrun, examples,
+tests).
+
+The step is one jit with: microbatched gradient accumulation (lax.scan),
+AdamW, optional ADMM-BCR penalty/dual state (the paper's pruning phase),
+optional frozen-mask retraining, and buffer donation. Fault tolerance wraps
+the loop: async checkpoints every N steps, straggler records, resume.
+
+CLI (host-scale, runnable on this box):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50 --batch 8 --seq 128 --bcr-keep 0.25 --admm-start 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core import admm as admm_mod
+from repro.core.bcr import BCRSpec, choose_block_shape
+from repro.data.pipeline import DataConfig, TokenSource
+from repro.models.api import model_fns
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import StragglerDetector
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# BCR prune-filter: which params get the paper's sparsity
+# ---------------------------------------------------------------------------
+
+
+def default_prune_filter(cfg: ModelConfig):
+    """BCR on every ≥2-D projection weight named 'w' (attn/mlp/moe/ssm
+    projections + lm_head), excluding embeddings/norms — the paper's
+    FC/GEMM scope."""
+    if cfg.bcr_keep_frac <= 0:
+        return lambda path, leaf: None
+
+    def fil(path, leaf) -> Optional[BCRSpec]:
+        name = jax.tree_util.keystr(path)
+        if not name.endswith("['w']"):
+            return None
+        if "embed" in name:
+            return None
+        if leaf.ndim < 2 or min(leaf.shape[-2:]) < 2 * min(cfg.bcr_block):
+            return None
+        block = choose_block_shape(tuple(leaf.shape[-2:]), cfg.bcr_block)
+        # kept-count granule: 8 (TPU sublane) when the block affords it,
+        # finer for small blocks so the target keep_frac stays reachable
+        align = max(1, min(8, block[0] // 4, block[1] // 4))
+        return BCRSpec(block_shape=block, keep_frac=cfg.bcr_keep_frac,
+                       align=align)
+
+    return fil
+
+
+# ---------------------------------------------------------------------------
+# Train state / step
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: adamw.AdamWState
+    admm: Optional[admm_mod.ADMMState]
+    masks: Optional[PyTree]           # frozen BCR masks (retrain phase)
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.admm, self.masks), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], accum: int):
+    def split(x):
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    admm_cfg: Optional[admm_mod.ADMMConfig] = None,
+                    specs: Optional[Dict] = None):
+    """Returns train_step(state, batch) -> (state, metrics); jit-ready."""
+    fns = model_fns(cfg)
+
+    def loss_with_penalty(params, mb, admm_state):
+        loss = fns.loss_fn(params, mb)
+        if admm_state is not None and specs:
+            loss = loss + admm_mod.admm_penalty(params, admm_state, specs,
+                                                admm_cfg)
+        return loss
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        accum = max(cfg.grad_accum, 1)
+        grad_fn = jax.value_and_grad(loss_with_penalty)
+
+        if accum == 1:
+            loss, grads = grad_fn(state.params, batch, state.admm)
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def acc_body(carry, mb):
+                loss_sum, grads_sum = carry
+                l, g = grad_fn(state.params, mb, state.admm)
+                grads_sum = jax.tree_util.tree_map(jnp.add, grads_sum, g)
+                return (loss_sum + l, grads_sum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+
+        new_params, new_opt, metrics = adamw.update(
+            opt_cfg, grads, state.opt, state.params)
+        if state.masks is not None:
+            new_params = admm_mod.apply_masks(new_params, state.masks)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, state.admm, state.masks), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Host-scale training loop (examples / integration tests / CLI)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    admm_start: Optional[int] = None    # step to begin the ADMM phase
+    retrain_start: Optional[int] = None # step to freeze masks and retrain
+    data_kind: str = "synthetic"
+    log_every: int = 10
+    seed: int = 0
+
+
+def train_loop(cfg: ModelConfig, tc: TrainerConfig,
+               opt_cfg: Optional[adamw.AdamWConfig] = None,
+               log=print) -> Dict[str, Any]:
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        lr=1e-3, warmup_steps=min(20, tc.steps // 5 + 1),
+        total_steps=tc.steps)
+    admm_cfg = admm_mod.ADMMConfig(steps_per_admm=max(tc.steps // 10, 5))
+    fns = model_fns(cfg)
+    prune_filter = default_prune_filter(cfg)
+
+    key = jax.random.PRNGKey(tc.seed)
+    params = fns.init_params(key)
+    specs = admm_mod.specs_for(params, prune_filter)
+    state = TrainState(params, adamw.init(params), None, None)
+
+    data = TokenSource(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=tc.seq, global_batch=tc.batch,
+        seed=tc.seed, kind=tc.data_kind))
+
+    mgr = CheckpointManager(tc.ckpt_dir) if tc.ckpt_dir else None
+    start_step = 0
+    if mgr and mgr.latest_step() is not None:
+        start_step = mgr.latest_step()
+        state = mgr.restore(start_step, state)
+        state = jax.tree_util.tree_map(jnp.asarray, state)
+        log(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, admm_cfg, specs))
+    straggler = StragglerDetector()
+    history = []
+    for step in range(start_step, tc.steps):
+        # phase transitions (ADMM → retrain), outside jit
+        if tc.admm_start is not None and step == tc.admm_start and specs:
+            state = TrainState(state.params, state.opt,
+                               admm_mod.admm_init(state.params, specs), None)
+            step_fn = jax.jit(make_train_step(cfg, opt_cfg, admm_cfg, specs))
+            log(f"step {step}: ADMM phase begins ({len(specs)} pruned tensors)")
+        if (tc.retrain_start is not None and step == tc.retrain_start
+                and specs):
+            pruned, masks = admm_mod.finalize(state.params, specs)
+            state = TrainState(pruned, state.opt, None, masks)
+            step_fn = jax.jit(make_train_step(cfg, opt_cfg, admm_cfg, specs))
+            log(f"step {step}: masks frozen; retraining")
+        if (state.admm is not None and specs
+                and step % admm_cfg.steps_per_admm == 0 and step > 0):
+            new_admm = jax.jit(functools.partial(
+                admm_mod.admm_dual_update, specs=specs))(state.params, state.admm)
+            state = TrainState(state.params, state.opt, new_admm, state.masks)
+
+        t0 = time.perf_counter()
+        batch = data.device_batch(step)
+        state, metrics = step_fn(state, batch)
+        metrics["loss"].block_until_ready()
+        dt = time.perf_counter() - t0
+        straggler.record(0, dt)
+        history.append(float(metrics["loss"]))
+        if step % tc.log_every == 0:
+            log(f"step {step:5d} loss {float(metrics['loss']):8.4f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"gnorm {float(metrics['grad_norm']):7.3f} {dt*1e3:7.1f} ms")
+        if mgr and (step + 1) % tc.ckpt_every == 0:
+            mgr.save_async(step + 1, state)
+    if mgr:
+        mgr.wait()
+    return {"state": state, "history": history, "specs": specs}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--bcr-keep", type=float, default=0.0)
+    p.add_argument("--admm-start", type=int, default=None)
+    p.add_argument("--retrain-start", type=int, default=None)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--data", default="synthetic",
+                   choices=["synthetic", "markov", "file"])
+    args = p.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.bcr_keep > 0:
+        cfg = dataclasses.replace(cfg, bcr_keep_frac=args.bcr_keep)
+    tc = TrainerConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_dir=args.ckpt_dir, admm_start=args.admm_start,
+                       retrain_start=args.retrain_start, data_kind=args.data)
+    train_loop(cfg, tc, adamw.AdamWConfig(lr=args.lr, total_steps=args.steps))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Uniform model API: family dispatch + per-shape input specs.
+
+Every launcher entry point (train, serve, dryrun, smoke tests) talks to
+models only through this module:
+
+  fns = model_fns(cfg)            # init / loss / prefill / decode_step / init_cache
+  specs = input_specs(cfg, shape) # ShapeDtypeStruct pytree for the step fn
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import causal_lm, encdec
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    init_params: Callable
+    loss_fn: Callable            # (params, batch) -> scalar
+    prefill: Callable            # (params, batch) -> (logits, cache)
+    decode_step: Callable        # (params, batch, cache) -> (logits, cache)
+    init_cache: Callable         # (batch, capacity) -> cache
+
+
+def model_fns(cfg: ModelConfig) -> ModelFns:
+    if cfg.family == "encdec":
+        return ModelFns(
+            init_params=functools.partial(encdec.init_params, cfg),
+            loss_fn=lambda p, b: encdec.loss_fn(cfg, p, b),
+            prefill=lambda p, b: encdec.prefill(cfg, p, b["frames"], b["tokens"]),
+            decode_step=lambda p, b, c: encdec.decode_step(
+                cfg, p, b["tokens"], c, b["cache_len"]),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+        )
+    return ModelFns(
+        init_params=functools.partial(causal_lm.init_params, cfg),
+        loss_fn=lambda p, b: causal_lm.loss_fn(cfg, p, b),
+        prefill=lambda p, b: causal_lm.prefill(
+            cfg, p, b["tokens"], image_embeds=b.get("image_embeds")),
+        decode_step=lambda p, b, c: causal_lm.decode_step(
+            cfg, p, b["tokens"], c, b["cache_len"]),
+        init_cache=functools.partial(causal_lm.init_cache, cfg),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation — consumed by
+    jit(...).lower(). For decode shapes the KV/state cache (capacity =
+    shape.seq_len) is part of the input specs.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {"tokens": tok, "targets": tok}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.act_dtype)
+        if cfg.num_image_tokens:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), cfg.act_dtype)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.act_dtype)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, 16), i32)  # task prompt
+        if cfg.num_image_tokens:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), cfg.act_dtype)
+        return {"batch": batch}
+
+    if shape.kind == "decode":
+        fns = model_fns(cfg)
+        cache = jax.eval_shape(lambda: fns.init_cache(b, s))
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_len": jax.ShapeDtypeStruct((), i32),
+        }
+        return {"batch": batch, "cache": cache}
+
+    raise ValueError(shape.kind)
+
+
+def synth_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0
+                 ) -> Dict[str, Any]:
+    """Concrete random inputs matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+
+    def materialize(path, spec):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            leafname = str(path)
+            if "cache_len" in leafname:
+                return jnp.asarray(shape.seq_len - 1, spec.dtype)
+            return jax.random.randint(sub, spec.shape, 0,
+                                      min(cfg.vocab_size, 1024), spec.dtype)
+        return (jax.random.normal(sub, spec.shape) * 0.02).astype(spec.dtype)
+
+    return jax.tree_util.tree_map_with_path(materialize, specs)

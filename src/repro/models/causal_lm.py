@@ -1,0 +1,369 @@
+"""Generic causal LM: one stack driver covers dense (llama/qwen/pixtral),
+MoE (deepseek/llama4), hybrid (jamba), and SSM (rwkv6) families.
+
+The per-layer plan ``(mixer, ffn)`` is derived statically from the config and
+compressed into repeating *segments* that are scanned with stacked params —
+HLO stays O(period), not O(depth) (126-layer llama3-405b compiles as one
+scanned block). Decode threads recurrent caches through the same segments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.sparse_linear import linear_apply, linear_init
+from repro.models import layers as L
+from repro.models import mixers as M
+from repro.models import moe as MOE
+from repro.runtime import partitioning as part
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer plan / segmentation
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    plan = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            plan.append(("rwkv", "rwkv_cm"))
+            continue
+        if cfg.attn_period:
+            mixer = "attn" if i % cfg.attn_period == cfg.attn_offset else "mamba"
+        else:
+            mixer = "attn"
+        ffn = "mlp"
+        if cfg.num_experts and i >= cfg.moe_first_dense:
+            j = i - cfg.moe_first_dense
+            if cfg.moe_every <= 1 or j % cfg.moe_every == cfg.moe_every - 1:
+                ffn = "moe"
+        plan.append((mixer, ffn))
+    return plan
+
+
+def _find_period(plan: List[Tuple[str, str]]) -> int:
+    n = len(plan)
+    for p in range(1, n + 1):
+        if n % p == 0 and plan == plan[:p] * (n // p):
+            return p
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    prefix: Tuple[Tuple[str, str], ...]    # unstacked leading layers
+    pattern: Tuple[Tuple[str, str], ...]   # repeating period
+    repeats: int
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    plan = layer_plan(cfg)
+    n_prefix = cfg.moe_first_dense if cfg.num_experts else 0
+    prefix, rest = plan[:n_prefix], plan[n_prefix:]
+    if not rest:
+        return StackPlan(tuple(prefix), (), 0)
+    if not cfg.scan_layers:
+        return StackPlan(tuple(plan), (), 0)
+    p = _find_period(rest)
+    return StackPlan(tuple(prefix), tuple(rest[:p]), len(rest) // p)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply / cache
+# ---------------------------------------------------------------------------
+
+
+def _mixer_init(key, kind: str, cfg: ModelConfig) -> Params:
+    if kind == "attn":
+        return L.attention_init(key, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim,
+                                qkv_bias=cfg.qkv_bias, dtype=cfg.p_dtype)
+    if kind == "mamba":
+        return M.mamba_init(key, cfg)
+    if kind == "rwkv":
+        return M.rwkv_tm_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _ffn_init(key, kind: str, cfg: ModelConfig) -> Params:
+    if kind == "mlp":
+        return L.swiglu_init(key, cfg.d_model, cfg.d_ff, dtype=cfg.p_dtype)
+    if kind == "moe":
+        return MOE.moe_init(key, cfg)
+    if kind == "rwkv_cm":
+        return M.rwkv_cm_init(key, cfg)
+    raise ValueError(kind)
+
+
+def layer_init(key, kinds: Tuple[str, str], cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, cfg.p_dtype),
+        "mixer": _mixer_init(k1, kinds[0], cfg),
+        "norm2": L.rmsnorm_init(cfg.d_model, cfg.p_dtype),
+        "ffn": _ffn_init(k2, kinds[1], cfg),
+    }
+
+
+def _mixer_cache_init(kind: str, cfg: ModelConfig, batch: int, capacity: int):
+    if kind == "attn":
+        return {
+            "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim),
+                           cfg.c_dtype),
+            "v": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim),
+                           cfg.c_dtype),
+        }
+    if kind == "mamba":
+        return M.mamba_init_cache(cfg, batch, cfg.c_dtype)
+    if kind == "rwkv":
+        return M.rwkv_tm_init_cache(cfg, batch, cfg.c_dtype)
+    raise ValueError(kind)
+
+
+def _ffn_cache_init(kind: str, cfg: ModelConfig, batch: int):
+    if kind == "rwkv_cm":
+        return M.rwkv_cm_init_cache(cfg, batch, cfg.c_dtype)
+    return {}
+
+
+def layer_cache_init(kinds: Tuple[str, str], cfg: ModelConfig, batch: int,
+                     capacity: int):
+    return {
+        "mixer": _mixer_cache_init(kinds[0], cfg, batch, capacity),
+        "ffn": _ffn_cache_init(kinds[1], cfg, batch),
+    }
+
+
+def layer_apply(
+    kinds: Tuple[str, str], lp: Params, x: jax.Array, cfg: ModelConfig, *,
+    positions: jax.Array, cache: Optional[Params] = None,
+    cache_len: Optional[jax.Array] = None, want_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """One transformer/SSM layer; decode when ``cache`` is provided."""
+    mixer_kind, ffn_kind = kinds
+    impl = cfg.kernel_impl
+    x = part.act(x, "batch", "seq_sp", "embed")
+    h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    new_cache: Params = {}
+
+    if mixer_kind == "attn":
+        out, kv = L.attention_apply(
+            lp["mixer"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True,
+            cache=(cache["mixer"] if cache is not None else None),
+            cache_len=cache_len, attn_impl=cfg.attn_impl,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, impl=impl)
+        if cache is not None or want_cache:
+            new_cache["mixer"] = {
+                "k": kv["k"].astype(cfg.c_dtype),
+                "v": kv["v"].astype(cfg.c_dtype)}
+    elif mixer_kind == "mamba":
+        if cache is not None:
+            out, mc = M.mamba_apply_step(lp["mixer"], h, cache["mixer"], cfg, impl)
+            new_cache["mixer"] = mc
+        elif want_cache:
+            out, mc = M.mamba_apply_seq(lp["mixer"], h, cfg, impl,
+                                        return_state=True)
+            new_cache["mixer"] = mc
+        else:
+            out = M.mamba_apply_seq(lp["mixer"], h, cfg, impl)
+    elif mixer_kind == "rwkv":
+        if cache is not None:
+            out, rc = M.rwkv_tm_apply_step(lp["mixer"], h, cache["mixer"], cfg, impl)
+            new_cache["mixer"] = rc
+        elif want_cache:
+            out, rc = M.rwkv_tm_apply_seq(lp["mixer"], h, cfg, impl,
+                                          return_state=True)
+            new_cache["mixer"] = rc
+        else:
+            out = M.rwkv_tm_apply_seq(lp["mixer"], h, cfg, impl)
+    else:
+        raise ValueError(mixer_kind)
+    # constrain the block output to the residual's (seq-parallel) layout
+    # BEFORE the add so GSPMD emits reduce-scatter, not all-reduce + slice
+    # (perf iteration C4)
+    out = part.act(out, "batch", "seq_sp", "embed")
+    x = x + out
+
+    h2 = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+    if ffn_kind == "mlp":
+        out2 = L.swiglu_apply(lp["ffn"], h2, impl)
+    elif ffn_kind == "moe":
+        out2 = MOE.moe_apply(lp["ffn"], h2, cfg, impl)
+    elif ffn_kind == "rwkv_cm":
+        if cache is not None:
+            out2, cc = M.rwkv_cm_apply_step(lp["ffn"], h2, cache["ffn"], cfg, impl)
+            new_cache["ffn"] = cc
+        else:
+            out2 = M.rwkv_cm_apply_seq(lp["ffn"], h2, cfg, impl)
+            if want_cache:
+                new_cache["ffn"] = {"shift": h2[:, -1, :].astype(cfg.c_dtype)}
+    else:
+        raise ValueError(ffn_kind)
+    out2 = part.act(out2, "batch", "seq_sp", "embed")
+    x = x + out2
+    if cache is not None or want_cache:
+        new_cache.setdefault("ffn", {})  # structural parity with init_cache
+        return x, new_cache
+    return x, None
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    sp = stack_plan(cfg)
+    keys = jax.random.split(key, 4)
+    params: Params = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, cfg.p_dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.p_dtype),
+        "lm_head": linear_init(keys[1], cfg.d_model, cfg.vocab_size,
+                               dtype=cfg.p_dtype),
+        "prefix": [
+            layer_init(jax.random.fold_in(keys[2], i), kinds, cfg)
+            for i, kinds in enumerate(sp.prefix)
+        ],
+    }
+    if sp.repeats:
+        def init_repeat(k):
+            ks = jax.random.split(k, len(sp.pattern))
+            return [layer_init(ks[i], kinds, cfg)
+                    for i, kinds in enumerate(sp.pattern)]
+        rkeys = jax.random.split(keys[3], sp.repeats)
+        params["stack"] = jax.vmap(init_repeat)(rkeys)
+    else:
+        params["stack"] = []
+    return params
+
+
+def _embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  image_embeds: Optional[jax.Array]) -> jax.Array:
+    h = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    if cfg.num_image_tokens and image_embeds is not None:
+        p = image_embeds.shape[1]
+        h = jnp.concatenate([image_embeds.astype(h.dtype), h[:, p:]], axis=1)
+    return part.act(h, "batch", "seq_sp", "embed")
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            image_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence forward → logits (train / eval)."""
+    sp = stack_plan(cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_tokens(cfg, params, tokens, image_embeds)
+
+    for kinds, lp in zip(sp.prefix, params["prefix"]):
+        x, _ = layer_apply(kinds, lp, x, cfg, positions=positions)
+
+    if sp.repeats:
+        def body(x, rep_params):
+            for kinds, lp in zip(sp.pattern, rep_params):
+                x, _ = layer_apply(kinds, lp, x, cfg, positions=positions)
+            return x, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["stack"])
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+    return part.act(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"],
+                     image_embeds=batch.get("image_embeds"))
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
+    """Decode cache pytree, stacked to mirror the param layout."""
+    sp = stack_plan(cfg)
+    cache: Params = {
+        "prefix": [layer_cache_init(kinds, cfg, batch, capacity)
+                   for kinds in sp.prefix],
+    }
+    if sp.repeats:
+        one = lambda _: [layer_cache_init(kinds, cfg, batch, capacity)
+                         for kinds in sp.pattern]
+        cache["stack"] = jax.vmap(one)(jnp.arange(sp.repeats))
+    else:
+        cache["stack"] = []
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Params, cache_len: jax.Array) -> Tuple[jax.Array, Params]:
+    """One serving step: tokens (B, 1) + cache → (logits (B, 1, V), cache')."""
+    sp = stack_plan(cfg)
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+    x = _embed_tokens(cfg, params, tokens, None)
+
+    new_prefix = []
+    for kinds, lp, c in zip(sp.prefix, params["prefix"], cache["prefix"]):
+        x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
+                            cache=c, cache_len=cache_len)
+        new_prefix.append(nc)
+
+    new_stack = cache["stack"]
+    if sp.repeats:
+        def body(x, inp):
+            rep_params, rep_cache = inp
+            ncs = []
+            for kinds, lp, c in zip(sp.pattern, rep_params, rep_cache):
+                x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
+                                    cache=c, cache_len=cache_len)
+                ncs.append(nc)
+            return x, ncs
+        x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+    return logits, {"prefix": new_prefix, "stack": new_stack}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            image_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Serving prefill: forward pass returning last-position logits + the
+    attention KV for the processed prompt (cache at length S)."""
+    sp = stack_plan(cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_tokens(cfg, params, tokens, image_embeds)
+
+    new_prefix = []
+    for kinds, lp in zip(sp.prefix, params["prefix"]):
+        x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
+                            want_cache=True)
+        new_prefix.append(nc)
+
+    new_stack = []
+    if sp.repeats:
+        def body(x, rep_params):
+            ncs = []
+            for kinds, lp in zip(sp.pattern, rep_params):
+                x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
+                                    want_cache=True)
+                ncs.append(nc)
+            return x, ncs
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, new_stack = jax.lax.scan(body, x, params["stack"])
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = linear_apply(params["lm_head"], x[:, -1:], impl=cfg.kernel_impl)
+    return logits, {"prefix": new_prefix, "stack": new_stack}

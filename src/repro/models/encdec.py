@@ -1,0 +1,204 @@
+"""Whisper-style encoder-decoder backbone ([audio] assignment).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d). The transformer backbone is real:
+bidirectional encoder (sinusoidal pos), causal decoder with learned pos
+embeddings + cross attention, LayerNorm (not RMS), GELU MLPs, no RoPE —
+matching whisper-large-v3's structure. All projections BCR-prunable.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import linear_apply, linear_init
+from repro.models import layers as L
+from repro.runtime import partitioning as part
+
+Params = Dict[str, Any]
+
+MAX_DEC_POS = 32768  # decoder learned-position capacity (covers decode_32k)
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "attn": L.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.head_dim,
+                                 qkv_bias=True, dtype=cfg.p_dtype),
+        "norm2": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "self_attn": L.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, cfg.head_dim,
+                                      qkv_bias=True, dtype=cfg.p_dtype),
+        "norm_x": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "cross_attn": L.attention_init(k2, cfg.d_model, cfg.num_heads,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       qkv_bias=True, dtype=cfg.p_dtype),
+        "norm2": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.p_dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    n_enc = cfg.encoder_layers or cfg.num_layers
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], n_enc)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "enc_stack": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "dec_embed": L.embed_init(ks[2], cfg.vocab_size, cfg.d_model, cfg.p_dtype),
+        "dec_pos": (jax.random.normal(ks[3], (MAX_DEC_POS, cfg.d_model))
+                    * 0.01).astype(cfg.p_dtype),
+        "dec_stack": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "dec_norm": L.layernorm_init(cfg.d_model, cfg.p_dtype),
+        "lm_head": linear_init(ks[4], cfg.d_model, cfg.vocab_size,
+                               dtype=cfg.p_dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: stub frontend output (B, S_enc, d) → encoder states."""
+    b, s, d = frames.shape
+    x = frames.astype(cfg.act_dtype) + L.sinusoidal_positions(s, d).astype(cfg.act_dtype)
+    x = part.act(x, "batch", "seq_sp", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, lp):
+        h = L.layernorm(lp["norm1"], x, cfg.norm_eps)
+        out, _ = L.attention_apply(
+            lp["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, rope_theta=0.0,
+            causal=False, attn_impl=cfg.attn_impl, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk, impl=cfg.kernel_impl)
+        x = x + out
+        h2 = L.layernorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp_apply(lp["mlp"], h2, cfg.kernel_impl)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_embed(cfg, params, tokens, pos_offset):
+    b, s = tokens.shape
+    h = L.embed(params["dec_embed"], tokens).astype(cfg.act_dtype)
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_offset, s, axis=0)
+    return h + pos.astype(h.dtype)[None]
+
+
+def decode_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    """Teacher-forced decoder forward → logits."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _dec_embed(cfg, params, tokens, 0)
+    x = part.act(x, "batch", "seq_sp", "embed")
+
+    def body(x, lp):
+        h = L.layernorm(lp["norm1"], x, cfg.norm_eps)
+        out, _ = L.attention_apply(
+            lp["self_attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, rope_theta=0.0,
+            causal=True, attn_impl=cfg.attn_impl, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk, impl=cfg.kernel_impl)
+        x = x + out
+        hx = L.layernorm(lp["norm_x"], x, cfg.norm_eps)
+        kv = L.cross_kv(lp["cross_attn"], enc_out, n_kv=cfg.num_kv_heads,
+                        head_dim=cfg.head_dim, impl=cfg.kernel_impl)
+        x = x + L.cross_attention_apply(
+            lp["cross_attn"], hx, kv, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim, impl=cfg.kernel_impl)
+        h2 = L.layernorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp_apply(lp["mlp"], h2, cfg.kernel_impl)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_stack"])
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    return linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, batch["tokens"], enc_out)
+    return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+
+def prefill(cfg: ModelConfig, params: Params, frames: jax.Array,
+            tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    """Encode audio, precompute per-layer cross-KV, prime the decoder."""
+    enc_out = encode(cfg, params, frames)
+
+    def xkv(lp):
+        return L.cross_kv(lp["cross_attn"], enc_out, n_kv=cfg.num_kv_heads,
+                          head_dim=cfg.head_dim, impl=cfg.kernel_impl)
+
+    cross = jax.vmap(xkv, in_axes=(0,))(params["dec_stack"])
+    logits = decode_train(cfg, params, tokens, enc_out)[:, -1:]
+    # self-KV for the short prompt is primed by the serve loop
+    return logits, {"cross_k": cross["k"], "cross_v": cross["v"]}
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
+    shape = (cfg.num_layers, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+    enc_s = cfg.encoder_seq
+    return {
+        "self_k": jnp.zeros(shape, cfg.c_dtype),
+        "self_v": jnp.zeros(shape, cfg.c_dtype),
+        "cross_k": jnp.zeros((cfg.num_layers, batch, enc_s,
+                              cfg.num_kv_heads, cfg.head_dim), cfg.c_dtype),
+        "cross_v": jnp.zeros((cfg.num_layers, batch, enc_s,
+                              cfg.num_kv_heads, cfg.head_dim), cfg.c_dtype),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Params, cache_len: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One decoder step against self-KV cache + precomputed cross-KV."""
+    b = tokens.shape[0]
+    x = _dec_embed(cfg, params, tokens, cache_len)
+    positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+
+    def body(x, inp):
+        lp, sk, sv, ck, cv = inp
+        h = L.layernorm(lp["norm1"], x, cfg.norm_eps)
+        out, kv = L.attention_apply(
+            lp["self_attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, rope_theta=0.0,
+            causal=True, cache={"k": sk, "v": sv}, cache_len=cache_len,
+            impl=cfg.kernel_impl)
+        x = x + out
+        hx = L.layernorm(lp["norm_x"], x, cfg.norm_eps)
+        x = x + L.cross_attention_apply(
+            lp["cross_attn"], hx, {"k": ck, "v": cv}, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim, impl=cfg.kernel_impl)
+        h2 = L.layernorm(lp["norm2"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp_apply(lp["mlp"], h2, cfg.kernel_impl)
+        return x, (kv["k"], kv["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_stack"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    return logits, new_cache

@@ -1,0 +1,77 @@
+"""GRU — the paper's own RNN workload (ESE/C-LSTM comparison, Table 3).
+
+Matrix-multiplication-only formulation: all six weight matrices go through
+``linear_apply`` so BCR pruning + TBCRC packing apply exactly as the paper
+prescribes for RNN FC layers. Two stacked GRU layers ≈ the paper's 9.6M-param
+TIMIT model when d_model=1024.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import linear_apply, linear_init
+
+Params = Dict[str, Any]
+
+
+def gru_cell_init(key, d_in: int, d_hidden: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": linear_init(ks[0], d_in, d_hidden, dtype=dtype),
+        "uz": linear_init(ks[1], d_hidden, d_hidden, dtype=dtype),
+        "wr": linear_init(ks[2], d_in, d_hidden, dtype=dtype),
+        "ur": linear_init(ks[3], d_hidden, d_hidden, dtype=dtype),
+        "wh": linear_init(ks[4], d_in, d_hidden, dtype=dtype),
+        "uh": linear_init(ks[5], d_hidden, d_hidden, dtype=dtype),
+    }
+
+
+def gru_cell_step(params: Params, h: jax.Array, x: jax.Array,
+                  impl: str = "ref") -> jax.Array:
+    z = jax.nn.sigmoid(linear_apply(params["wz"], x, impl=impl)
+                       + linear_apply(params["uz"], h, impl=impl))
+    r = jax.nn.sigmoid(linear_apply(params["wr"], x, impl=impl)
+                       + linear_apply(params["ur"], h, impl=impl))
+    hh = jnp.tanh(linear_apply(params["wh"], x, impl=impl)
+                  + linear_apply(params["uh"], r * h, impl=impl))
+    return (1 - z) * h + z * hh
+
+
+def gru_init(key, vocab: int, d_model: int, n_layers: int, n_classes: int,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, n_layers + 2)
+    return {
+        "embed": (jax.random.normal(ks[0], (vocab, d_model)) * 0.02).astype(dtype),
+        "cells": [gru_cell_init(ks[i + 1], d_model, d_model, dtype)
+                  for i in range(n_layers)],
+        "head": linear_init(ks[-1], d_model, n_classes, dtype=dtype),
+    }
+
+
+def gru_apply(params: Params, tokens: jax.Array, impl: str = "ref"
+              ) -> jax.Array:
+    """tokens (B, S) → logits (B, n_classes); final hidden state readout."""
+    x = jnp.take(params["embed"], tokens, axis=0)   # (B, S, d)
+    b, s, d = x.shape
+    for cell in params["cells"]:
+        def step(h, xt):
+            h = gru_cell_step(cell, h, xt, impl)
+            return h, h
+        _, hs = jax.lax.scan(step, jnp.zeros((b, d), x.dtype),
+                             x.transpose(1, 0, 2))
+        x = hs.transpose(1, 0, 2)
+    return linear_apply(params["head"], x[:, -1], impl=impl)
+
+
+def gru_step_latency_fn(params: Params, impl: str = "ref"):
+    """One timestep (batch, d) — the paper's 81 µs/step serving unit."""
+    def step(h, x):
+        for cell in params["cells"]:
+            h = gru_cell_step(cell, h, x, impl)
+            x = h
+        return h
+    return jax.jit(step)

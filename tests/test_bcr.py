@@ -1,0 +1,102 @@
+"""Core BCR invariants: projection, masks, membership (unit + property)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BCRSpec, bcr_mask, bcr_project, choose_block_shape,
+                        density, is_bcr_set_member)
+from repro.core.bcr import bcr_indices, bcr_project_any, _unbalanced_mask
+
+
+def _w(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestProjection:
+    def test_density_matches_spec(self):
+        spec = BCRSpec(block_shape=(16, 32), keep_frac=0.25, align=4)
+        m = bcr_mask(_w((64, 128)), spec)
+        r, c = spec.kept_counts()
+        assert float(density(m)) == pytest.approx(r * c / (16 * 32))
+
+    def test_projection_is_idempotent(self):
+        spec = BCRSpec(block_shape=(16, 32), keep_frac=0.3, align=4)
+        w1 = bcr_project(_w((64, 64)), spec)
+        w2 = bcr_project(w1, spec)
+        np.testing.assert_allclose(w1, w2, atol=1e-7)
+
+    def test_projection_members_of_set(self):
+        spec = BCRSpec(block_shape=(8, 16), keep_frac=0.25, align=2)
+        wp = bcr_project(_w((32, 48)), spec)
+        assert is_bcr_set_member(np.asarray(wp), spec)
+
+    def test_projection_keeps_energy(self):
+        """Greedy projection must retain ≥ keep_frac of energy for iid
+        weights (it picks top-norm rows/cols)."""
+        spec = BCRSpec(block_shape=(16, 16), keep_frac=0.25, align=2)
+        w = _w((64, 64))
+        wp = bcr_project(w, spec)
+        kept = float(jnp.sum(wp**2) / jnp.sum(w**2))
+        assert kept > 0.25
+
+    def test_indices_sorted_and_in_range(self):
+        spec = BCRSpec(block_shape=(16, 32), keep_frac=0.25, align=4)
+        rows, cols = bcr_indices(_w((64, 128)), spec)
+        assert rows.shape == (4, 4, spec.kept_counts()[0])
+        assert bool(jnp.all(jnp.diff(rows, axis=-1) > 0))
+        assert bool(jnp.all((rows >= 0) & (rows < 16)))
+        assert bool(jnp.all((cols >= 0) & (cols < 32)))
+
+    def test_stacked_projection(self):
+        spec = BCRSpec(block_shape=(8, 8), keep_frac=0.25, align=2)
+        w = _w((3, 32, 32))
+        wp = bcr_project_any(w, spec)
+        for i in range(3):
+            assert is_bcr_set_member(np.asarray(wp[i]), spec)
+
+    def test_unbalanced_hits_global_density(self):
+        spec = BCRSpec(block_shape=(8, 8), keep_frac=0.25, balanced=False)
+        m = _unbalanced_mask(_w((64, 64)), spec)
+        # intersection of 50% rows x 50% cols ≈ 25%, within tolerance
+        assert 0.1 < float(density(m)) < 0.45
+
+
+class TestBlockShape:
+    def test_choose_block_divides(self):
+        for shape in [(100, 60), (1024, 1024), (7, 13), (128, 384)]:
+            br, bc = choose_block_shape(shape, (16, 16))
+            assert shape[0] % br == 0 and shape[1] % bc == 0
+
+    def test_extremes_match_paper(self):
+        """block=1x1 ≡ unstructured; block=matrix ≡ whole row/col pruning."""
+        w = _w((16, 16))
+        tiny = BCRSpec(block_shape=(1, 1), keep_frac=0.25, align=1)
+        m = bcr_mask(w, tiny)  # every element its own block: all kept
+        assert float(density(m)) == 1.0
+        full = BCRSpec(block_shape=(16, 16), keep_frac=0.25, align=1)
+        mf = np.asarray(bcr_mask(w, full))
+        # support is exactly a cross-product of rows x cols
+        rows = np.flatnonzero(mf.sum(1))
+        cols = np.flatnonzero(mf.sum(0))
+        assert mf.sum() == len(rows) * len(cols)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb_r=st.integers(1, 4), nb_c=st.integers(1, 4),
+    br=st.sampled_from([4, 8, 16]), bc=st.sampled_from([4, 8, 16]),
+    keep=st.sampled_from([0.125, 0.25, 0.5, 0.75]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_projection_valid(nb_r, nb_c, br, bc, keep, seed):
+    """Any grid/keep combo: projection lands in the BCR set, idempotently."""
+    spec = BCRSpec(block_shape=(br, bc), keep_frac=keep, align=1)
+    w = _w((nb_r * br, nb_c * bc), seed)
+    wp = bcr_project(w, spec)
+    assert is_bcr_set_member(np.asarray(wp), spec)
+    np.testing.assert_allclose(bcr_project(wp, spec), wp, atol=1e-7)
+    r, c = spec.kept_counts()
+    assert float(density(bcr_mask(w, spec))) <= (r * c) / (br * bc) + 1e-9

@@ -1,0 +1,53 @@
+"""One real dry-run cell end-to-end in a subprocess (512 placeholder
+devices stay out of this pytest process). Covers launch/dryrun.py: mesh
+construction, sharding, lowering, compile, memory/cost extraction."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cell_end_to_end():
+    with tempfile.TemporaryDirectory() as td:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "llama3.2-1b", "--shape", "decode_32k",
+             "--out-dir", td, "--force"],
+            capture_output=True, text=True, timeout=560,
+            env=dict(os.environ, PYTHONPATH="src"), cwd=".",
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        path = os.path.join(td, "llama3.2-1b__decode_32k__pod16x16.json")
+        with open(path) as f:
+            rec = json.load(f)
+        assert rec["status"] == "ok"
+        assert rec["roofline"]["n_chips"] == 256
+        assert rec["roofline"]["dominant"] in ("compute", "memory",
+                                               "collective")
+        assert rec["memory_analysis"]["peak_memory_in_bytes"] < 16 * 2**30, \
+            "decode cell must fit v5e HBM"
+        assert rec["hlo_corrected"]["flops"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_skip_cell():
+    with tempfile.TemporaryDirectory() as td:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "llama3.2-1b", "--shape", "long_500k",
+             "--out-dir", td],
+            capture_output=True, text=True, timeout=200,
+            env=dict(os.environ, PYTHONPATH="src"), cwd=".",
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        path = os.path.join(td, "llama3.2-1b__long_500k__pod16x16.json")
+        with open(path) as f:
+            rec = json.load(f)
+        assert rec["status"] == "skipped"
+        assert "sub-quadratic" in rec["reason"]

@@ -1,0 +1,103 @@
+"""Fused flash-attention Pallas kernel: shape/dtype/causality sweep vs the
+dense oracle (interpret mode on CPU, TPU-targeted pallas_call)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import (flash_attention_fused,
+                                           flash_attention_ref,
+                                           hbm_traffic_model)
+
+
+def _qkv(bh, sq, skv, d, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = (jax.random.normal(ks[0], (bh, sq, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (bh, skv, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (bh, skv, d)) * 0.5).astype(dtype)
+    return q, k, v
+
+
+SWEEP = [
+    # bh, sq, skv, d, q_chunk, kv_chunk, causal
+    (2, 64, 64, 32, 16, 16, True),
+    (2, 64, 64, 32, 32, 16, True),
+    (1, 128, 128, 16, 32, 64, True),
+    (3, 32, 96, 16, 16, 32, False),    # cross-attention-like (skv > sq)
+    (2, 64, 64, 64, 64, 64, True),     # single tile
+]
+
+
+@pytest.mark.parametrize("bh,sq,skv,d,qc,kc,causal", SWEEP)
+def test_matches_oracle(bh, sq, skv, d, qc, kc, causal):
+    q, k, v = _qkv(bh, sq, skv, d)
+    out = flash_attention_fused(q, k, v, causal=causal, q_chunk=qc,
+                                kv_chunk=kc, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_bf16():
+    q, k, v = _qkv(2, 64, 64, 32, jnp.bfloat16)
+    out = flash_attention_fused(q, k, v, q_chunk=16, kv_chunk=32,
+                                interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_q_offset_decode_continuation():
+    """q_offset shifts causal positions (chunked prefill continuation)."""
+    q, k, v = _qkv(1, 16, 64, 16, seed=3)
+    out = flash_attention_fused(q, k, v, q_offset=48, q_chunk=16,
+                                kv_chunk=16, interpret=True)
+    ref = flash_attention_ref(q, k, v, q_offset=48)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_matches_model_flash():
+    """The fused kernel and the model-side XLA flash agree (same math)."""
+    from repro.models.layers import flash_attention
+    b, s, h, d = 2, 64, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    model_out = flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    qm = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    km = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vm = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    fused = flash_attention_fused(qm, km, vm, causal=True, q_chunk=16,
+                                  kv_chunk=16, interpret=True)
+    fused = fused.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(model_out),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_traffic_model_reduction():
+    """The kernel's raison d'être: the logits stream disappears."""
+    t = hbm_traffic_model(bh=256, sq=4096, skv=4096, d=128)
+    assert t["reduction"] > 10  # >10x less HBM traffic at 4k seq
+
+
+def test_whole_model_with_pallas_attention():
+    """attn_impl='pallas_interpret' runs a full LM forward through the fused
+    kernel and matches the dense-attention path exactly."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeSpec
+    from repro.models.api import model_fns, synth_inputs
+
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              attn_impl="pallas_interpret",
+                              q_chunk=16, kv_chunk=16)
+    cfg_ref = dataclasses.replace(cfg, attn_impl="dense")
+    shape = ShapeSpec("t", 32, 2, "train")
+    params = model_fns(cfg).init_params(jax.random.PRNGKey(0))
+    batch = synth_inputs(cfg, shape)["batch"]
+    l1 = float(model_fns(cfg).loss_fn(params, batch))
+    l2 = float(model_fns(cfg_ref).loss_fn(params, batch))
+    assert abs(l1 - l2) < 1e-3

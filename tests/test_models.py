@@ -1,0 +1,129 @@
+"""Per-arch smoke tests (reduced configs, CPU): one train step, prefill and
+decode; shape + finiteness asserts. Plus decode-vs-forward consistency."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, ShapeSpec, shape_applicable
+from repro.models.api import input_specs, model_fns, synth_inputs
+
+TRAIN = ShapeSpec("t", seq_len=16, global_batch=2, kind="train")
+PREFILL = ShapeSpec("p", seq_len=16, global_batch=2, kind="prefill")
+DECODE = ShapeSpec("d", seq_len=16, global_batch=2, kind="decode")
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_smoke_config(arch)
+            fns = model_fns(cfg)
+            cache[arch] = (cfg, fns, fns.init_params(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_finite(arch, arch_state):
+    cfg, fns, params = arch_state(arch)
+    batch = synth_inputs(cfg, TRAIN)["batch"]
+    loss, grads = jax.value_and_grad(fns.loss_fn)(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_shapes(arch, arch_state):
+    cfg, fns, params = arch_state(arch)
+    ins = synth_inputs(cfg, DECODE)
+    logits, cache = fns.decode_step(params, ins["batch"], ins["cache"])
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache structure unchanged (required for jit donation)
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(ins["cache"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_finite(arch, arch_state):
+    cfg, fns, params = arch_state(arch)
+    ins = synth_inputs(cfg, PREFILL)
+    logits, cache = fns.prefill(params, ins["batch"])
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-3b", "jamba-v0.1-52b"])
+def test_decode_matches_forward(arch, arch_state):
+    """Step-by-step decode must reproduce the teacher-forced forward logits
+    (the strongest end-to-end correctness check for cache semantics)."""
+    from repro.models import causal_lm
+    cfg, fns, params = arch_state(arch)
+    s = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (2, s), 0,
+                                cfg.vocab_size, jnp.int32)
+    full = causal_lm.forward(cfg, params, tokens)          # (2, s, V)
+    cache = fns.init_cache(2, s)
+    outs = []
+    for i in range(s):
+        batch = {"tokens": tokens[:, i:i + 1],
+                 "cache_len": jnp.asarray(i, jnp.int32)}
+        logits, cache = fns.decode_step(params, batch, cache)
+        outs.append(logits[:, 0])
+    stepped = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stepped), np.asarray(full),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_matches_dense_attention():
+    from repro.models.layers import dense_attention, flash_attention
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 32, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 32, 2, 16), jnp.float32)
+    d = dense_attention(q, k, v, causal=True)
+    f = flash_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(d), atol=2e-5)
+
+
+def test_flash_attention_grads_finite():
+    from repro.models.layers import flash_attention
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 16, 2, 8), jnp.float32)
+
+    def loss(q):
+        return jnp.sum(flash_attention(q, q[:, :, :1], q[:, :, :1],
+                                       causal=True, q_chunk=4, kv_chunk=4))
+    g = jax.grad(loss)(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_shape_applicability_table():
+    """The assignment's skip rules: 8 archs skip long_500k; all else run."""
+    skips = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s, spec in SHAPES.items():
+            ok, why = shape_applicable(cfg, spec)
+            if not ok:
+                skips.append((a, s))
+    assert all(s == "long_500k" for _, s in skips)
+    assert len(skips) == 8
+    assert ("rwkv6-3b", "long_500k") not in skips
+    assert ("jamba-v0.1-52b", "long_500k") not in skips
+
+
+def test_input_specs_cover_all_cells():
+    for a in ARCH_IDS:
+        cfg = get_smoke_config(a)
+        for s, spec in SHAPES.items():
+            small = ShapeSpec(spec.name, 32, 2, spec.kind)
+            tree = input_specs(cfg, small)
+            assert all(hasattr(l, "shape")
+                       for l in jax.tree_util.tree_leaves(tree))
