@@ -1,23 +1,39 @@
-"""Serving entry point: BCR-packed weights + batched greedy decoding.
+"""Serving entry point: continuous-batching engine over BCR-packed weights.
 
 The GRIM deployment path: take (ADMM-pruned) dense weights → pack every
-prunable projection into TBCRC (kernel format) → serve a decode loop whose
-weight traffic is keep_frac × dense. On this CPU box the kernel runs in
-Pallas interpret mode; impl="ref" is the fast-on-CPU fallback.
+prunable projection into TBCRC (kernel format) → serve a continuous-batching
+decode loop whose weight traffic is keep_frac × dense. On this CPU box the
+kernel runs in Pallas interpret mode; impl="ref" is the fast-on-CPU fallback.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --batch 4 --prompt-len 16 --gen 16 --bcr-keep 0.25 --impl interpret
+Two modes:
+
+  traffic (default) — synthetic Poisson-arrival open-loop driver against the
+  InferenceEngine: requests with mixed prompt lengths arrive at --rate req/s,
+  are admitted into free decode slots, and retire as they finish. Reports
+  throughput plus p50/p95/p99 per-token latency and TTFT.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+          --slots 8 --rate 8 --requests 32 --gen 16 --bcr-keep 0.25
+
+  static — the legacy one-batch-at-a-time loop (prefill + uniform greedy
+  decode), kept as the baseline the engine is measured against:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+          --mode static --batch 4 --prompt-len 16 --gen 16
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
+import json
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
@@ -25,6 +41,8 @@ from repro.core.bcr import BCRSpec
 from repro.core.bcrc import tbcrc_pack
 from repro.launch.train import default_prune_filter
 from repro.models.api import model_fns
+from repro.serving import EngineConfig, InferenceEngine
+from repro.serving.kv_slots import seat_prefill
 
 PyTree = Any
 
@@ -75,6 +93,21 @@ def packed_fraction(params: PyTree, packed: PyTree) -> float:
     return nbytes(packed) / nbytes(params)
 
 
+# ---------------------------------------------------------------------------
+# Legacy static-batch path (baseline; also the prefill regression surface)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fns(cfg: ModelConfig):
+    """Per-config jit cache: repeated generate() calls (benchmark chunks)
+    reuse compiled prefill/decode instead of re-tracing every call (jit
+    caches are keyed on function identity, and model_fns builds fresh
+    lambdas each time)."""
+    fns = model_fns(cfg)
+    return fns, jax.jit(fns.prefill), jax.jit(fns.decode_step)
+
+
 @dataclasses.dataclass
 class ServeConfig:
     batch: int = 4
@@ -86,32 +119,33 @@ class ServeConfig:
 
 def generate(cfg: ModelConfig, params: PyTree, sc: ServeConfig, log=print
              ) -> Dict[str, Any]:
-    """Prefill a batch of prompts, then greedy-decode gen_tokens."""
-    fns = model_fns(cfg)
+    """Prefill a batch of prompts, then greedy-decode gen_tokens.
+
+    Prompt ingestion uses the real batched ``prefill`` (one forward pass),
+    not the old O(prompt_len)-dispatch single-step loop; the prefill cache
+    (seq axis = prompt length) is seated into a capacity-sized decode cache.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "generate() serves decoder-only families; encdec prefill needs "
+            "encoder frames and primes a different cache tree")
+    fns, prefill, decode = _jitted_fns(cfg)
     key = jax.random.PRNGKey(sc.seed)
     prompts = jax.random.randint(
         key, (sc.batch, sc.prompt_len), 0, cfg.vocab_size, jnp.int32)
 
-    decode = jax.jit(fns.decode_step)
-    cache = fns.init_cache(sc.batch, sc.capacity)
-
-    # prime the cache by single-step decoding the prompt (works uniformly
-    # for KV caches and SSM/RWKV recurrent state)
-    tokens = prompts[:, :1]
     t0 = time.perf_counter()
-    for i in range(sc.prompt_len):
-        batch = {"tokens": prompts[:, i:i + 1],
-                 "cache_len": jnp.asarray(i, jnp.int32)}
-        logits, cache = decode(params, batch, cache)
+    logits, pcache = prefill(params, {"tokens": prompts})
+    cache = seat_prefill(fns.init_cache, pcache, sc.batch, sc.capacity)
+    jax.block_until_ready(logits)
     prefill_t = time.perf_counter() - t0
-
+    lens = jnp.full((sc.batch,), sc.prompt_len, jnp.int32)
     out_tokens = []
     t0 = time.perf_counter()
-    pos = sc.prompt_len
     next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     for i in range(sc.gen_tokens):
         out_tokens.append(next_tok)
-        batch = {"tokens": next_tok, "cache_len": jnp.asarray(pos + i, jnp.int32)}
+        batch = {"tokens": next_tok, "cache_len": lens + i}
         logits, cache = decode(params, batch, cache)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     jax.block_until_ready(logits)
@@ -124,30 +158,166 @@ def generate(cfg: ModelConfig, params: PyTree, sc: ServeConfig, log=print
     return {"tokens": toks, "prefill_s": prefill_t, "decode_s": decode_t}
 
 
+# ---------------------------------------------------------------------------
+# Poisson open-loop traffic driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    n_requests: int = 32
+    rate: float = 8.0                # mean arrivals per second
+    prompt_lens: tuple = (8, 16, 24)
+    gen_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    warmup: bool = True
+
+
+def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
+                ) -> Dict[str, Any]:
+    """Open-loop Poisson arrivals against a live engine, wall-clock paced.
+
+    Requests with mixed prompt lengths arrive at exponential inter-arrival
+    gaps; the loop admits whatever has arrived, steps the ragged decode
+    batch, and sleeps only when fully idle ahead of the next arrival.
+    """
+    if tc.warmup:
+        # compile prefill buckets + decode outside the measured window,
+        # else TTFT/p99 report jit time instead of serving latency
+        engine.warmup(tc.prompt_lens)
+    rng = np.random.default_rng(tc.seed)
+    gaps = rng.exponential(1.0 / tc.rate, size=tc.n_requests)
+    arrivals = np.cumsum(gaps)
+    plens = rng.choice(tc.prompt_lens, size=tc.n_requests)
+    prompts = [rng.integers(0, engine.cfg.vocab_size, size=int(p))
+               .astype(np.int32) for p in plens]
+
+    t0 = time.perf_counter()
+    submitted = 0
+    while submitted < tc.n_requests or engine.sched.has_work():
+        now = time.perf_counter() - t0
+        while submitted < tc.n_requests and arrivals[submitted] <= now:
+            engine.submit(prompts[submitted], max_new_tokens=tc.gen_tokens,
+                          temperature=tc.temperature, top_k=tc.top_k,
+                          arrival_time=arrivals[submitted])
+            submitted += 1
+        if not engine.sched.has_work():
+            # idle: sleep until the next arrival instead of spinning
+            time.sleep(max(0.0, arrivals[submitted] - now))
+            continue
+        engine.step()
+    elapsed = time.perf_counter() - t0
+
+    reqs = engine.sched.finished
+    itl: List[float] = []                      # inter-token latencies
+    ttft: List[float] = []                     # arrival → first token
+    for r in reqs:
+        ttft.append((r.first_token_time - t0) - r.arrival_time)
+        itl.extend(np.diff(r.token_times))
+    total_tokens = sum(len(r.generated) for r in reqs)
+    pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
+    occ = engine.stats["slot_occupancy"]
+    metrics = {
+        "n_requests": len(reqs),
+        "total_tokens": total_tokens,
+        "elapsed_s": elapsed,
+        "throughput_tok_s": total_tokens / elapsed,
+        "decode_steps": engine.stats["decode_steps"],
+        "mean_slot_occupancy": float(np.mean(occ)) if occ else 0.0,
+        "ttft_s": {"p50": pct(ttft, 50), "p95": pct(ttft, 95),
+                   "p99": pct(ttft, 99)},
+        "per_token_s": {"p50": pct(itl, 50), "p95": pct(itl, 95),
+                        "p99": pct(itl, 99)},
+    }
+    log(f"{len(reqs)} requests, {total_tokens} tokens in {elapsed:.2f}s "
+        f"→ {metrics['throughput_tok_s']:.1f} tok/s; "
+        f"mean occupancy {metrics['mean_slot_occupancy']:.2f}/"
+        f"{engine.ec.n_slots} slots")
+    log(f"TTFT p50/p95/p99: {metrics['ttft_s']['p50']*1e3:.1f}/"
+        f"{metrics['ttft_s']['p95']*1e3:.1f}/"
+        f"{metrics['ttft_s']['p99']*1e3:.1f} ms; per-token p50/p95/p99: "
+        f"{metrics['per_token_s']['p50']*1e3:.2f}/"
+        f"{metrics['per_token_s']['p95']*1e3:.2f}/"
+        f"{metrics['per_token_s']['p99']*1e3:.2f} ms")
+    return metrics
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def build_params(cfg: ModelConfig, log=print) -> PyTree:
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    if cfg.bcr_keep_frac > 0:
+        packed = pack_params(cfg, params)
+        log(f"packed weight bytes: "
+            f"{packed_fraction(params, packed):.3f}x dense")
+        params = packed
+    return params
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--mode", default="traffic", choices=["traffic", "static"])
+    p.add_argument("--batch", type=int, default=4, help="static-mode batch")
+    p.add_argument("--slots", type=int, default=8, help="engine decode slots")
+    p.add_argument("--capacity", type=int, default=128)
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--requests", type=int, default=32)
+    p.add_argument("--rate", type=float, default=8.0, help="req/s (Poisson)")
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--bcr-keep", type=float, default=0.0)
+    p.add_argument("--bcr-block", type=int, default=0,
+                   help="BCR block side; 0 → 16 for --smoke configs "
+                        "(whose d_model is too small for the 128 default), "
+                        "else the config default")
     p.add_argument("--impl", default="ref",
                    choices=["ref", "interpret", "pallas"])
+    p.add_argument("--json-out", default=None)
     args = p.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, bcr_keep_frac=args.bcr_keep,
                               kernel_impl=args.impl)
-    fns = model_fns(cfg)
-    params = fns.init_params(jax.random.PRNGKey(0))
-    if args.bcr_keep > 0:
-        packed = pack_params(cfg, params)
-        print(f"packed weight bytes: {packed_fraction(params, packed):.3f}x dense")
-        params = packed
-    generate(cfg, params, ServeConfig(batch=args.batch,
-                                      prompt_len=args.prompt_len,
-                                      gen_tokens=args.gen))
+    if args.bcr_block or args.smoke:
+        b = args.bcr_block or 16
+        cfg = dataclasses.replace(cfg, bcr_block=(b, b))
+    params = build_params(cfg)
+
+    if args.mode == "static":
+        generate(cfg, params, ServeConfig(batch=args.batch,
+                                          prompt_len=args.prompt_len,
+                                          gen_tokens=args.gen,
+                                          capacity=args.capacity))
+        return
+
+    engine = InferenceEngine(cfg, params, EngineConfig(
+        n_slots=args.slots, capacity=args.capacity))
+    # mixed prompt lengths around --prompt-len, clamped so every request
+    # fits its slot (prompt + gen ≤ capacity)
+    pmax = args.capacity - args.gen
+    if pmax < 1:
+        p.error(f"--capacity {args.capacity} leaves no room for prompts "
+                f"after --gen {args.gen}")
+    plens = {max(4, args.prompt_len // 2), args.prompt_len,
+             args.prompt_len * 2}
+    plens = tuple(sorted(min(max(x, 1), pmax) for x in plens))
+    tc = TrafficConfig(
+        n_requests=args.requests, rate=args.rate, gen_tokens=args.gen,
+        prompt_lens=plens,
+        temperature=args.temperature, top_k=args.top_k)
+    metrics = run_traffic(engine, tc)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(metrics, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -45,7 +45,8 @@ def model_fns(cfg: ModelConfig) -> ModelFns:
         init_params=functools.partial(causal_lm.init_params, cfg),
         loss_fn=lambda p, b: causal_lm.loss_fn(cfg, p, b),
         prefill=lambda p, b: causal_lm.prefill(
-            cfg, p, b["tokens"], image_embeds=b.get("image_embeds")),
+            cfg, p, b["tokens"], image_embeds=b.get("image_embeds"),
+            length=b.get("length")),
         decode_step=lambda p, b, c: causal_lm.decode_step(
             cfg, p, b["tokens"], c, b["cache_len"]),
         init_cache=functools.partial(causal_lm.init_cache, cfg),
@@ -87,9 +88,12 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
     if shape.kind == "decode":
         fns = model_fns(cfg)
         cache = jax.eval_shape(lambda: fns.init_cache(b, s))
+        # per-slot length vector: the continuous-batching engine decodes a
+        # ragged batch where every slot sits at its own position (scalar is
+        # still accepted by decode_step for uniform batches)
         batch = {
             "tokens": jax.ShapeDtypeStruct((b, 1), i32),
-            "cache_len": jax.ShapeDtypeStruct((), i32),
+            "cache_len": jax.ShapeDtypeStruct((b,), i32),
         }
         return {"batch": batch, "cache": cache}
 
@@ -108,7 +112,7 @@ def synth_inputs(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0
         if jnp.issubdtype(spec.dtype, jnp.integer):
             leafname = str(path)
             if "cache_len" in leafname:
-                return jnp.asarray(shape.seq_len - 1, spec.dtype)
+                return jnp.full(spec.shape, shape.seq_len - 1, spec.dtype)
             return jax.random.randint(sub, spec.shape, 0,
                                       min(cfg.vocab_size, 1024), spec.dtype)
         return (jax.random.normal(sub, spec.shape) * 0.02).astype(spec.dtype)

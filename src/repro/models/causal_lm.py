@@ -306,10 +306,18 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Params, cache_len: jax.Array) -> Tuple[jax.Array, Params]:
-    """One serving step: tokens (B, 1) + cache → (logits (B, 1, V), cache')."""
+    """One serving step: tokens (B, 1) + cache → (logits (B, 1, V), cache').
+
+    ``cache_len`` is a scalar (uniform batch) or a (B,) vector for ragged
+    continuous-batching decode: slot b writes its K/V at position
+    ``cache_len[b]`` and attends to its own history only.
+    """
     sp = stack_plan(cfg)
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.broadcast_to(cache_len, (b,))
+    positions = cache_len[:, None]
     x = _embed_tokens(cfg, params, tokens, None)
 
     new_prefix = []
@@ -336,10 +344,18 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
-            image_embeds: Optional[jax.Array] = None
+            image_embeds: Optional[jax.Array] = None,
+            length: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Params]:
     """Serving prefill: forward pass returning last-position logits + the
-    attention KV for the processed prompt (cache at length S)."""
+    attention KV for the processed prompt (cache at length S).
+
+    ``length`` (B,) gives each row's true prompt length when ``tokens`` is
+    right-padded to a bucket size: logits are taken at position
+    ``length - 1`` instead of S-1. Pad positions produce garbage KV, which
+    downstream decode masks out via per-slot ``cache_len`` — causality
+    guarantees real positions never attend to right-pads.
+    """
     sp = stack_plan(cfg)
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -365,5 +381,10 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
         x, new_stack = jax.lax.scan(body, x, params["stack"])
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = linear_apply(params["lm_head"], x[:, -1:], impl=cfg.kernel_impl)
+    if length is None:
+        last = x[:, -1:]
+    else:
+        idx = jnp.clip(jnp.asarray(length, jnp.int32) - 1, 0, s - 1)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = linear_apply(params["lm_head"], last, impl=cfg.kernel_impl)
     return logits, {"prefix": new_prefix, "stack": new_stack}

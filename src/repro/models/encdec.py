@@ -96,10 +96,17 @@ def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
 
 
 def _dec_embed(cfg, params, tokens, pos_offset):
+    """pos_offset: python/0-d int (uniform batch) or (B,) vector (ragged
+    continuous-batching decode: each slot sits at its own position)."""
     b, s = tokens.shape
     h = L.embed(params["dec_embed"], tokens).astype(cfg.act_dtype)
-    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_offset, s, axis=0)
-    return h + pos.astype(h.dtype)[None]
+    po = jnp.asarray(pos_offset)
+    if po.ndim == 0:
+        pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], po, s, axis=0)
+        return h + pos.astype(h.dtype)[None]
+    idx = po[:, None] + jnp.arange(s)[None]                  # (B, s)
+    pos = jnp.take(params["dec_pos"], idx, axis=0)           # (B, s, d)
+    return h + pos.astype(h.dtype)
 
 
 def decode_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
@@ -173,10 +180,17 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Params, cache_len: jax.Array
                 ) -> Tuple[jax.Array, Params]:
-    """One decoder step against self-KV cache + precomputed cross-KV."""
+    """One decoder step against self-KV cache + precomputed cross-KV.
+
+    ``cache_len``: scalar or (B,) vector (per-slot lengths for ragged
+    continuous-batching decode).
+    """
     b = tokens.shape[0]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.broadcast_to(cache_len, (b,))
     x = _dec_embed(cfg, params, tokens, cache_len)
-    positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+    positions = cache_len[:, None]
 
     def body(x, inp):
         lp, sk, sv, ck, cv = inp

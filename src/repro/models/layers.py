@@ -231,8 +231,10 @@ def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 512,
 def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     """Single-step attention against a (possibly partially filled) cache.
 
-    q: (B, 1, H, D); caches: (B, L, Hkv, D); cache_len: scalar int — number
-    of valid cache positions (the new token's K/V must already be written).
+    q: (B, 1, H, D); caches: (B, L, Hkv, D); cache_len: int — number of
+    valid cache positions (the new token's K/V must already be written).
+    Either a scalar (every row the same age) or a (B,) vector for ragged
+    continuous-batching decode where each slot attends to its own history.
 
     Context-parallel at scale: the cache L dim stays sharded over "model"
     (kv_seq rule); the softmax/weighted-sum contractions over L partition
@@ -251,8 +253,13 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                         preferred_element_type=jnp.float32) * d ** -0.5
     logits = part.act(logits, "batch", None, None, "kv_seq")
-    valid = jnp.arange(l) < cache_len
-    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        valid = jnp.arange(l) < cache_len                    # (L,)
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+    else:
+        valid = jnp.arange(l)[None] < cache_len[:, None]     # (B, L)
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     p = part.act(p, "batch", None, None, "kv_seq").astype(v_cache.dtype)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
@@ -272,13 +279,25 @@ def attention_apply(
     q, k, v = _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta, impl)
 
     if cache is not None:
-        # decode: write K/V at position cache_len, attend to ≤ cache_len+1
-        idx = cache_len
+        # decode: write K/V at position cache_len, attend to ≤ cache_len+1.
+        # cache_len is a scalar (uniform batch) or a (B,) vector (ragged
+        # continuous batch: each slot writes at and attends to its own
+        # length).
+        idx = jnp.asarray(cache_len)
         ck = part.act(cache["k"], "batch", "kv_seq", None, None)
         cv = part.act(cache["v"], "batch", "kv_seq", None, None)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), idx, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), idx, axis=1)
-        out = decode_attention(q, k_cache, v_cache, cache_len + s)
+        if idx.ndim == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), idx, axis=1)
+        else:
+            write = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=0))
+            k_cache = write(ck, k.astype(ck.dtype), idx)
+            v_cache = write(cv, v.astype(cv.dtype), idx)
+        out = decode_attention(q, k_cache, v_cache, idx + s)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         if attn_impl == "dense":

@@ -1,0 +1,13 @@
+"""Continuous-batching inference engine over BCR-packed weights.
+
+Layering (docs/serving.md has the full picture):
+
+  kv_slots   — slot-based KV/recurrent-state pool with per-slot lengths
+  scheduler  — FCFS request queue: admission into free slots, retirement
+  engine     — InferenceEngine: batched prefill for prompt ingestion, one
+               jit'd ragged decode step, greedy/temperature/top-k sampling
+"""
+
+from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: F401
+from repro.serving.kv_slots import SlotPool, seat_prefill  # noqa: F401
+from repro.serving.scheduler import Request, Scheduler  # noqa: F401

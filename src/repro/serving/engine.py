@@ -1,0 +1,289 @@
+"""InferenceEngine: continuous-batching serving over (BCR-packed) params.
+
+The engine owns the packed/dense param pytree, a SlotPool (decode cache +
+per-slot lengths) and a Scheduler. Each ``step()``:
+
+  1. admits waiting requests into free slots — each admission runs one real
+     batched ``prefill`` over the prompt (bucketed to bound retraces) and
+     seats the resulting KV/state into the slot;
+  2. runs ONE jit'd ``decode_step`` over the whole ragged slot batch with a
+     per-slot ``cache_len`` vector (donated cache buffers);
+  3. samples per-slot (greedy / temperature / top-k), advances lengths, and
+     retires finished requests.
+
+Free slots ride along as masked garbage rows — the per-slot length mask in
+``decode_attention`` keeps them from contaminating anything (attention,
+MLPs, and recurrent mixers are all row-independent), and admission
+overwrites their cache rows. MoE families are NOT served: capacity-factor
+routing couples rows through shared expert capacity, so garbage rows could
+evict real tokens — gated with NotImplementedError until the router is
+mask-aware.
+
+Prompt padding: for pure-attention families prompts are right-padded to a
+power-of-two bucket (causality keeps right-pads invisible to real
+positions; ``prefill(..., length=...)`` reads logits at the true last
+token). Recurrent families (ssm) prefill at exact prompt length instead —
+pads would advance the state. One retrace per distinct length, fine at
+serving granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import model_fns
+from repro.serving.kv_slots import SlotPool
+from repro.serving.scheduler import Request, Scheduler
+
+PyTree = Any
+
+_PADDED_FAMILIES = ("dense", "vlm")
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temps: jax.Array,
+                  topks: jax.Array, use_topk: bool = True) -> jax.Array:
+    """Per-slot sampling: temps==0 → greedy; topks>0 → top-k filtering.
+
+    logits (B, V); temps (B,) float; topks (B,) int. Vectorized so one jit
+    serves a batch mixing greedy and sampled requests. ``use_topk`` is a
+    static flag: the engine passes False when no active request uses top-k,
+    skipping the O(V log V) sort on the hot all-greedy decode path.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1)
+    z = logits
+    if use_topk:
+        srt = jnp.sort(logits, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(srt,
+                                  jnp.clip(topks - 1, 0, v - 1)[:, None],
+                                  axis=1)
+        allow = (topks[:, None] <= 0) | (logits >= kth)
+        z = jnp.where(allow, logits, -jnp.inf)
+    z = z / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, z, axis=-1)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 8
+    capacity: int = 128
+    seed: int = 0
+    max_admit_per_step: Optional[int] = None  # None → fill every free slot
+    pad_prefill: Optional[bool] = None        # None → auto by model family
+    min_bucket: int = 8
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree,
+                 ec: Optional[EngineConfig] = None):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "InferenceEngine serves decoder-only families; encdec "
+                "prefill needs encoder frames and a different cache tree")
+        if cfg.num_experts:
+            raise NotImplementedError(
+                "MoE routing is batch-coupled: garbage rows in free slots "
+                "consume expert capacity and can evict real tokens "
+                "(capacity-factor dispatch), so ragged decode diverges "
+                "from naive decode; needs a mask-aware router first")
+        self.cfg = cfg
+        self.ec = ec = ec or EngineConfig()
+        self.params = params
+        self.fns = fns = model_fns(cfg)
+        self.pool = SlotPool(fns.init_cache, ec.n_slots, ec.capacity)
+        self.sched = Scheduler(ec.n_slots)
+        self.pad_prefill = (cfg.family in _PADDED_FAMILIES
+                            if ec.pad_prefill is None else ec.pad_prefill)
+
+        # sampling is fused into the prefill/decode programs: one dispatch
+        # per engine step — at small model scale the extra host round-trip
+        # of a separate sampling call costs as much as the step itself
+        def prefill_sample(p, toks, length, key, temps, topks, use_topk):
+            logits, pcache = fns.prefill(p, {"tokens": toks,
+                                             "length": length})
+            tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
+            return tok, pcache
+
+        def decode_sample(p, toks, lens, cache, key, temps, topks, use_topk):
+            logits, cache = fns.decode_step(
+                p, {"tokens": toks, "cache_len": lens}, cache)
+            tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
+            return tok, cache
+
+        self._prefill = jax.jit(prefill_sample,
+                                static_argnames=("use_topk",))
+        self._decode = jax.jit(decode_sample, static_argnames=("use_topk",),
+                               donate_argnums=(3,))
+
+        self._key = jax.random.PRNGKey(ec.seed)
+        # per-slot decode-state rows (host-side mirrors of the ragged batch)
+        self._tokens = np.zeros((ec.n_slots, 1), np.int32)
+        self._temps = np.zeros((ec.n_slots,), np.float32)
+        self._topks = np.zeros((ec.n_slots,), np.int32)
+        self.stats: Dict[str, Any] = {}
+        self.reset_stats()
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
+               temperature: float = 0.0, top_k: int = 0,
+               eos_id: Optional[int] = None, arrival_time: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new_tokens > self.ec.capacity:
+            raise ValueError(
+                f"prompt_len {prompt.size} + max_new_tokens {max_new_tokens}"
+                f" exceeds slot capacity {self.ec.capacity}")
+        return self.sched.submit(Request(
+            prompt=prompt, max_new_tokens=max_new_tokens,
+            temperature=temperature, top_k=top_k, eos_id=eos_id,
+            arrival_time=arrival_time))
+
+    # -- internals ---------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        if not self.pad_prefill:
+            return n
+        b = self.ec.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.ec.capacity)
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _admit_group(self, group: List) -> None:
+        """One prefill dispatch for same-bucket admissions. Groups of ≥2 are
+        padded to ``n_slots`` rows so only two prefill programs exist per
+        bucket ({1, n_slots}); pad rows alias slot 0 of the group and are
+        overwritten by the real row (reverse-order writes in insert_rows)."""
+        k = len(group)
+        bucket = self._bucket(group[0][0].prompt_len)
+        k_pad = 1 if k == 1 else self.ec.n_slots
+        toks = np.zeros((k_pad, bucket), np.int32)
+        lens = np.ones((k_pad,), np.int32)
+        temps = np.zeros((k_pad,), np.float32)
+        topks = np.zeros((k_pad,), np.int32)
+        slots = np.zeros((k_pad,), np.int32)
+        for i, (req, slot) in enumerate(group):
+            p = req.prompt_len
+            toks[i, :p] = req.prompt
+            lens[i] = p
+            temps[i] = req.temperature
+            topks[i] = req.top_k
+            slots[i] = slot
+        slots[k:] = slots[0]
+        tok_dev, pcache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            self._next_key(), jnp.asarray(temps), jnp.asarray(topks),
+            use_topk=bool(topks.any()))
+        self.pool.insert_rows(pcache, slots, lens[:k])
+        self.stats["prefills"] += 1
+
+        toks_host = np.asarray(tok_dev)
+        now = time.perf_counter()
+        for i, (req, slot) in enumerate(group):
+            self._temps[slot] = req.temperature
+            self._topks[slot] = req.top_k
+            tok = int(toks_host[i])
+            req.admit_time = now
+            req.first_token_time = now
+            req.generated.append(tok)
+            req.token_times.append(now)
+            self._tokens[slot, 0] = tok
+            self.stats["tokens_generated"] += 1
+
+    def step(self) -> List[Request]:
+        """One engine iteration; returns requests that finished this step."""
+        admitted = self.sched.admit(self.ec.max_admit_per_step)
+        groups: Dict[int, List] = {}
+        for req, slot in admitted:
+            groups.setdefault(self._bucket(req.prompt_len),
+                              []).append((req, slot))
+        for group in groups.values():
+            self._admit_group(group)
+
+        finished: List[Request] = []
+        # requests whose first (prefill-sampled) token already completed them
+        for slot, req in list(self.sched.active.items()):
+            if req.is_finished():
+                self.pool.release(slot)
+                finished.append(self.sched.retire(slot))
+        if not self.sched.active:
+            return finished
+
+        self.stats["slot_occupancy"].append(len(self.sched.active))
+        tok_dev, self.pool.cache = self._decode(
+            self.params, jnp.asarray(self._tokens),
+            jnp.asarray(self.pool.lens), self.pool.cache,
+            self._next_key(), jnp.asarray(self._temps),
+            jnp.asarray(self._topks), use_topk=bool(self._topks.any()))
+        next_tok = np.asarray(tok_dev)
+        now = time.perf_counter()
+        self.stats["decode_steps"] += 1
+
+        for slot, req in list(self.sched.active.items()):
+            tok = int(next_tok[slot])
+            req.generated.append(tok)
+            req.token_times.append(now)
+            self.pool.advance(slot)
+            self._tokens[slot, 0] = tok
+            self.stats["tokens_generated"] += 1
+            if req.is_finished():
+                self.pool.release(slot)
+                finished.append(self.sched.retire(slot))
+        return finished
+
+    # -- convenience -------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        self.stats.clear()
+        self.stats.update(decode_steps=0, prefills=0, tokens_generated=0,
+                          slot_occupancy=[])
+
+    def warmup(self, prompt_lens: Sequence[int], gen: int = 2) -> None:
+        """Compile every prefill bucket (both admission tiers: single and
+        n_slots-padded burst) plus the decode/sample programs with throwaway
+        requests, then wipe the bookkeeping — so measured traffic doesn't
+        pay jit compilation inside the timed window."""
+        assert not self.sched.has_work(), "warmup() needs an idle engine"
+        buckets = sorted({self._bucket(max(1, int(p))) for p in prompt_lens})
+        lens = [min(b, self.ec.capacity - gen) for b in buckets]
+        for l in lens:  # burst tier: one grouped prefill padded to n_slots
+            self.generate([np.zeros((l,), np.int32)] * self.ec.n_slots,
+                          max_new_tokens=gen)
+        self.generate([np.zeros((l,), np.int32) for l in lens],
+                      max_new_tokens=gen)          # single tier per bucket
+        self.sched.finished.clear()
+        self.reset_stats()
+
+    def run(self) -> List[Request]:
+        """Drain: step until queue and slots are empty; finished requests in
+        completion order."""
+        done: List[Request] = []
+        while self.sched.has_work():
+            done.extend(self.step())
+        return done
+
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 16, temperature: float = 0.0,
+                 top_k: int = 0, eos_id: Optional[int] = None
+                 ) -> List[List[int]]:
+        """Batch convenience: submit all prompts, drain, return generated
+        token lists in submission order."""
+        rids = [self.submit(p, max_new_tokens=max_new_tokens,
+                            temperature=temperature, top_k=top_k,
+                            eos_id=eos_id) for p in prompts]
+        by_rid = {r.rid: r for r in self.run()}
+        return [by_rid[rid].generated for rid in rids]

@@ -1,0 +1,133 @@
+"""Slot-based KV / recurrent-state pool for continuous batching.
+
+One padded decode batch of ``n_slots`` rows serves requests of different
+ages: slot ``b`` owns row ``b`` of every cache leaf plus a per-slot length.
+Admission writes a batch-1 prefill cache into a free slot; decode steps the
+whole pool with a (B,) length vector; retirement just marks the slot free
+(stale KV beyond a slot's length is never attended to, so no zeroing).
+
+Cache pytrees differ per family (attention K/V with a capacity axis, SSM /
+RWKV recurrent state without one) and per layout (unstacked ``prefix``
+layers carry batch at axis 0, scanned ``stack`` layers at axis 1). Rather
+than hard-coding that, the batch axis of every leaf is discovered once by
+shape-probing ``init_cache`` — the pool works for any model whose prefill
+cache matches its ``init_cache`` tree structure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _first_diff_axis(a, b) -> int:
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x != y:
+            return i
+    return -1
+
+
+def cache_batch_axes(init_cache: Callable) -> PyTree:
+    """Per-leaf batch-axis index, discovered by probing ``init_cache`` with
+    two batch sizes (int leaves, same treedef as the cache)."""
+    s1 = jax.eval_shape(lambda: init_cache(1, 8))
+    s2 = jax.eval_shape(lambda: init_cache(2, 8))
+    axes = jax.tree_util.tree_map(
+        lambda a, b: _first_diff_axis(a.shape, b.shape), s1, s2)
+    for ax in jax.tree_util.tree_leaves(axes):
+        assert ax >= 0, "cache leaf without a batch axis"
+    return axes
+
+
+def write_slot(pool: PyTree, new: PyTree, batch_axes: PyTree,
+               slot: jax.Array) -> PyTree:
+    """Write a (batch=k, seq≤capacity) cache into pool rows [slot, slot+k).
+
+    jit-able with a traced ``slot``; seq-shorter updates land at position 0
+    of the capacity axis (prefill KV for a length-P prompt fills [0, P)).
+    """
+    def w(p, n, bax):
+        starts = [0] * p.ndim
+        starts[bax] = slot
+        return jax.lax.dynamic_update_slice(p, n.astype(p.dtype),
+                                            tuple(starts))
+    return jax.tree_util.tree_map(w, pool, new, batch_axes)
+
+
+def seat_prefill(init_cache: Callable, prefill_cache: PyTree, batch: int,
+                 capacity: int) -> PyTree:
+    """Expand a whole-batch prefill cache (seq axis = prompt length) into a
+    capacity-sized decode cache — the uniform-batch ``generate`` path."""
+    pool = init_cache(batch, capacity)
+    axes = cache_batch_axes(init_cache)
+    return write_slot(pool, prefill_cache, axes, jnp.asarray(0, jnp.int32))
+
+
+class SlotPool:
+    """Device-side cache pool + host-side per-slot lengths.
+
+    The pool owns the decode cache pytree; ``insert`` seats a batch-1
+    prefill cache into one slot (donating the old pool buffers), ``lens``
+    is the (n_slots,) vector handed to ``decode_step`` each step.
+    """
+
+    def __init__(self, init_cache: Callable, n_slots: int, capacity: int):
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.cache = init_cache(n_slots, capacity)
+        self._axes = cache_batch_axes(init_cache)
+        self.lens = np.zeros((n_slots,), np.int32)
+        self._insert = jax.jit(
+            lambda pool, new, slot: write_slot(pool, new, self._axes, slot),
+            donate_argnums=(0,))
+        self._insert_rows = jax.jit(self._insert_rows_fn, donate_argnums=(0,))
+
+    def _insert_rows_fn(self, pool: PyTree, new: PyTree,
+                        slots: jax.Array) -> PyTree:
+        """Seat each batch row of ``new`` into slot ``slots[i]``. Rows are
+        written in REVERSE order so grouped-admission padding works: pad
+        rows (i ≥ real count) alias ``slots[0]`` and get overwritten by the
+        real row 0, which lands last."""
+        def row(n, bax, i):
+            return jax.lax.slice_in_dim(n, i, i + 1, axis=bax)
+        k = {leaf.shape[bax] for leaf, bax in zip(
+            jax.tree_util.tree_leaves(new),
+            jax.tree_util.tree_leaves(self._axes))}
+        assert len(k) == 1, k
+        for i in reversed(range(k.pop())):
+            pool = jax.tree_util.tree_map(
+                lambda p, n, bax: jax.lax.dynamic_update_slice(
+                    p, row(n, bax, i).astype(p.dtype),
+                    tuple(slots[i] if d == bax else 0
+                          for d in range(p.ndim))),
+                pool, new, self._axes)
+        return pool
+
+    def insert(self, prefill_cache: PyTree, slot: int, length: int) -> None:
+        assert length <= self.capacity, (length, self.capacity)
+        self.cache = self._insert(self.cache, prefill_cache,
+                                  jnp.asarray(slot, jnp.int32))
+        self.lens[slot] = length
+
+    def insert_rows(self, prefill_cache: PyTree, slots: np.ndarray,
+                    lengths: np.ndarray) -> None:
+        """Grouped admission: batch rows of ``prefill_cache`` → slots.
+        ``slots``/``lengths`` cover only the real rows; pad rows of the
+        cache (if any) must already alias ``slots[0]`` in the full slots
+        vector handed to the device (see engine._admit_group)."""
+        assert max(lengths, default=0) <= self.capacity
+        self.cache = self._insert_rows(self.cache, prefill_cache,
+                                       jnp.asarray(slots, jnp.int32))
+        for s, l in zip(slots[:len(lengths)], lengths):
+            self.lens[s] = l
+
+    def advance(self, slot: int) -> None:
+        self.lens[slot] += 1
+
+    def release(self, slot: int) -> None:
+        self.lens[slot] = 0

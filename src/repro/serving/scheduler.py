@@ -1,0 +1,90 @@
+"""FCFS request scheduler for the continuous-batching engine.
+
+Pure host-side bookkeeping — no jax. The engine drives it each step:
+
+  submit() enqueues; admit() pops waiting requests into free slots (FCFS,
+  bounded by ``max_admit`` so prefill work interleaves with decode instead
+  of starving running requests); retire() frees a slot for reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its serving-lifetime bookkeeping."""
+
+    prompt: np.ndarray                  # (P,) int32 token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 → greedy
+    top_k: int = 0                      # 0 → no top-k filtering
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0           # driver clock, for latency metrics
+
+    # filled in by the scheduler/engine
+    rid: int = -1
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admit_time: float = 0.0
+    first_token_time: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    def is_finished(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and len(self.generated) > 0
+                and self.generated[-1] == self.eos_id)
+
+
+class Scheduler:
+    """FCFS queue over a fixed pool of decode slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.waiting: deque[Request] = deque()
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self._free: deque[int] = deque(range(n_slots))
+        self._ids = itertools.count()
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> int:
+        req.rid = next(self._ids)
+        self.waiting.append(req)
+        return req.rid
+
+    def admit(self, max_admit: Optional[int] = None) -> List[Tuple[Request, int]]:
+        """Seat waiting requests into free slots, FCFS; returns
+        (request, slot) pairs for the engine to prefill."""
+        out: List[Tuple[Request, int]] = []
+        while self.waiting and self._free:
+            if max_admit is not None and len(out) >= max_admit:
+                break
+            req = self.waiting.popleft()
+            slot = self._free.popleft()
+            req.slot = slot
+            self.active[slot] = req
+            out.append((req, slot))
+        return out
+
+    def retire(self, slot: int) -> Request:
+        req = self.active.pop(slot)
+        self._free.append(slot)
+        self.finished.append(req)
+        return req
+
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)

@@ -35,8 +35,18 @@ def test_skip_kernel_matches_oracle(n, k, block, keep):
 
 def test_skip_visits_only_survivors():
     """The grid length equals the survivor count — the traffic the kernel
-    DMAs is occupancy-proportional (the paper's empty-block skip)."""
-    x, packed = _case(96, 96, (32, 32), 0.05)
+    DMAs is occupancy-proportional (the paper's empty-block skip).
+
+    One block is scaled to ~0 so its stripes deterministically lose the
+    global energy ranking and the block packs away — relying on an iid
+    draw to leave some block empty is seed-dependent (at keep=0.05 the
+    sqrt split keeps 41 of 288 stripes, enough to touch all 9 blocks)."""
+    w = np.array(jax.random.normal(jax.random.PRNGKey(0), (96, 96),
+                                   jnp.float32))
+    w[:32, :32] *= 1e-4
+    spec = BCRSpec(block_shape=(32, 32), keep_frac=0.05, balanced=False,
+                   align=1)
+    packed = pack_skip(jnp.asarray(w), spec)
     total_blocks = (96 // 32) * (96 // 32)
     assert packed.tiles.shape[0] < total_blocks
     assert packed.nbytes() < 96 * 96 * 4

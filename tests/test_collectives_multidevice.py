@@ -6,6 +6,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# each test compiles multi-device programs in a fresh subprocess (minutes
+# apiece on CPU) — out of the default tier-1 run, like the dryrun cells
+pytestmark = pytest.mark.slow
+
 
 def _run(code: str) -> str:
     proc = subprocess.run(

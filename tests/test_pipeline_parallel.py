@@ -5,6 +5,13 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# 4 forced host devices contend for the box's few cores (the 2-core CI/dev
+# box livelocks past the 300s subprocess timeout) — out of the default
+# tier-1 run, like the other multidevice subprocess suites
+pytestmark = pytest.mark.slow
+
 
 def _run(code: str) -> str:
     proc = subprocess.run(

@@ -170,8 +170,10 @@ class TestHloCost:
         c = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
                              jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
         mine = analyze(c.as_text())["flops"]
-        xla = c.cost_analysis()["flops"]
-        assert mine == pytest.approx(xla, rel=0.05)
+        ca = c.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # newer jax: one dict per program
+            ca = ca[0]
+        assert mine == pytest.approx(ca["flops"], rel=0.05)
 
     def test_scan_equals_unroll(self):
         from repro.runtime.hlo_analysis import analyze
