@@ -1,0 +1,141 @@
+"""Kernel-level BCR matmul benchmark: latency, tok/s and bytes-moved across
+keep_frac × batch, plus an HLO guard that the packed path never
+dense-reconstructs W inside the jitted step. Emits BENCH_bcr_kernel.json.
+
+Compares, per (keep_frac, batch) cell on one layer shape:
+
+  dense       — jnp dense matmul (the baseline the packed path must beat)
+  dense_recon — the old ref path: tbcrc_unpack + dense matmul per call
+  packed_ref  — the pack-time-plan path: take + blockwise einsum +
+                scatter-add; weight bytes scale with keep_frac
+  grouped     — G=3 same-shape projections (Q/K/V analogue) fused into one
+                dispatch, reported per member
+
+    PYTHONPATH=src python benchmarks/bcr_kernel_bench.py \
+        --n 1024 --k 1024 --keeps 0.0625 0.125 0.25 0.5 --batches 1 8 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import timeit
+except ImportError:          # invoked as `python benchmarks/<script>.py`
+    from common import timeit
+from repro.core.bcr import BCRSpec
+from repro.core.bcrc import tbcrc_pack
+from repro.kernels.ops import bcr_matmul, bcr_matmul_grouped
+from repro.kernels.plan import pack_group, tune_packed, tuned_genome
+
+
+def hlo_dense_free(fn, *args, w_shape=None) -> bool:
+    """True iff the compiled HLO contains no W-shaped (N, K) intermediate —
+    i.e. the step never dense-reconstructs the packed weight."""
+    n, k = w_shape
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    needles = []
+    for a, b in ((n, k), (k, n)):
+        needles += [f"f32[{a},{b}]", f"bf16[{a},{b}]",
+                    f"tensor<{a}x{b}xf32>", f"tensor<{a}x{b}xbf16>"]
+    return not any(s in text for s in needles)
+
+
+def bench_cell(n, k, block, keep, m, dtype, iters):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (n, k), jnp.float32).astype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k),
+                          jnp.float32).astype(dtype)
+    dense = jax.jit(lambda x, w: jnp.dot(x, w.T))
+    t_dense = timeit(dense, x, w, iters=iters)
+
+    row = {"keep_frac": keep, "batch": m,
+           "dense": {"latency_s": t_dense, "tok_s": m / t_dense,
+                     "bytes": n * k * w.dtype.itemsize}}
+    if keep > 0:
+        spec = BCRSpec(block_shape=block, keep_frac=keep,
+                       align=min(8, block[0] // 2, block[1] // 2))
+        packed = tune_packed(tbcrc_pack(w, spec), m=m)
+        recon = jax.jit(lambda x, p: bcr_matmul(x, p, impl="dense_ref"))
+        pref = jax.jit(lambda x, p: bcr_matmul(x, p, impl="ref"))
+        t_recon = timeit(recon, x, packed, iters=iters)
+        t_pref = timeit(pref, x, packed, iters=iters)
+
+        members = [tbcrc_pack(jax.random.normal(
+            jax.random.fold_in(key, g), (n, k), jnp.float32).astype(dtype),
+            spec) for g in range(3)]
+        genome = tuned_genome(m, k, n, block,
+                              *members[0].vals.shape[-2:], max_group=3)
+        grouped = pack_group(members, genome)
+        gfn = jax.jit(lambda x, g: bcr_matmul_grouped(x, g, impl="ref"))
+        t_grp = timeit(gfn, x, grouped, iters=iters) / 3  # per member
+
+        row.update({
+            "dense_recon": {"latency_s": t_recon, "tok_s": m / t_recon},
+            "packed_ref": {
+                "latency_s": t_pref, "tok_s": m / t_pref,
+                "bytes": packed.nbytes(),
+                "speedup_vs_dense": t_dense / t_pref,
+                "speedup_vs_recon": t_recon / t_pref,
+                "hlo_dense_free": hlo_dense_free(
+                    lambda x, p: bcr_matmul(x, p, impl="ref"),
+                    x, packed, w_shape=(n, k)),
+            },
+            "grouped_per_member": {
+                "latency_s": t_grp, "tok_s": m / t_grp,
+                "group_size": grouped.group_size,
+                "speedup_vs_packed_ref": t_pref / t_grp,
+            },
+        })
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--k", type=int, default=1024)
+    ap.add_argument("--block", type=int, nargs=2, default=[64, 64])
+    ap.add_argument("--keeps", type=float, nargs="+",
+                    default=[0.0625, 0.125, 0.25, 0.5])
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--out", default="BENCH_bcr_kernel.json")
+    args = ap.parse_args()
+
+    dtype = jnp.dtype(args.dtype)
+    results = []
+    for keep in args.keeps:
+        for m in args.batches:
+            row = bench_cell(args.n, args.k, tuple(args.block), keep, m,
+                             dtype, args.iters)
+            results.append(row)
+            msg = (f"keep={keep} m={m}: dense "
+                   f"{row['dense']['latency_s']*1e6:.0f}us")
+            if "packed_ref" in row:
+                pr = row["packed_ref"]
+                msg += (f", recon {row['dense_recon']['latency_s']*1e6:.0f}us"
+                        f", packed_ref {pr['latency_s']*1e6:.0f}us "
+                        f"({pr['speedup_vs_dense']:.2f}x dense, "
+                        f"{pr['speedup_vs_recon']:.2f}x recon, "
+                        f"bytes {pr['bytes']/row['dense']['bytes']:.3f}x, "
+                        f"hlo_dense_free={pr['hlo_dense_free']}), "
+                        f"grouped {row['grouped_per_member']['latency_s']*1e6:.0f}us/member")
+            print(msg)
+
+    out = {"benchmark": "bcr_kernel",
+           "shape": {"n": args.n, "k": args.k, "block": args.block,
+                     "dtype": args.dtype},
+           "backend": jax.default_backend(),
+           "results": results}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

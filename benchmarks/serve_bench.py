@@ -92,13 +92,33 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--prompt-lens", type=int, nargs="+", default=[8, 16, 24])
+    # serving-scale overrides: the smoke configs are sized for test speed
+    # (d_model=64), where per-dispatch overhead swamps weight traffic and
+    # NO weight format can matter. The bench defaults scale the model up
+    # until the decode step is weight-bound — the regime GRIM targets.
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--layers", type=int, default=0, help="0 → smoke value")
+    ap.add_argument("--bcr-block", type=int, default=128)
+    ap.add_argument("--min-packed-vs-dense", type=float, default=0.0,
+                    help="exit 1 if packed engine tok/s ÷ dense engine "
+                         "tok/s at the largest --slots falls below this")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
     results = []
     for keep in args.keeps:
         cfg = get_smoke_config(args.arch)
-        cfg = dataclasses.replace(cfg, bcr_keep_frac=keep, bcr_block=(16, 16))
+        over = {"bcr_keep_frac": keep,
+                "bcr_block": (args.bcr_block, args.bcr_block)}
+        if args.d_model:
+            over.update(d_model=args.d_model,
+                        head_dim=args.d_model // cfg.num_heads)
+        if args.d_ff:
+            over["d_ff"] = args.d_ff
+        if args.layers:
+            over["num_layers"] = args.layers
+        cfg = dataclasses.replace(cfg, **over)
         fns = model_fns(cfg)
         params = fns.init_params(jax.random.PRNGKey(0))
         if keep > 0:
@@ -111,7 +131,7 @@ def main():
             sta = bench_static(cfg, params, prompts, gens, n_slots,
                                args.capacity)
             row = {"arch": args.arch, "keep_frac": keep, "batch": n_slots,
-                   "engine": eng, "static": sta,
+                   "d_model": cfg.d_model, "engine": eng, "static": sta,
                    "speedup": eng["tok_s"] / sta["tok_s"]}
             results.append(row)
             print(f"keep={keep} batch={n_slots}: engine "
@@ -119,9 +139,35 @@ def main():
                   f"{eng['mean_occupancy']:.2f}) vs static "
                   f"{sta['tok_s']:.1f} tok/s → {row['speedup']:.2f}x")
 
+    # packed-vs-dense engine throughput at equal load: the GRIM claim is
+    # that the pruning rate shows up as decode speedup, not storage alone
+    dense = {r["batch"]: r["engine"]["tok_s"]
+             for r in results if r["keep_frac"] == 0}
+    ratios = {}
+    for r in results:
+        if r["keep_frac"] > 0 and r["batch"] in dense:
+            ratio = r["engine"]["tok_s"] / dense[r["batch"]]
+            ratios[f"keep{r['keep_frac']}_batch{r['batch']}"] = ratio
+            r["packed_vs_dense"] = ratio
+            print(f"packed keep={r['keep_frac']} batch={r['batch']}: "
+                  f"{ratio:.2f}x dense engine")
+
     with open(args.out, "w") as f:
-        json.dump({"benchmark": "serve", "results": results}, f, indent=2)
+        json.dump({"benchmark": "serve", "packed_vs_dense": ratios,
+                   "results": results}, f, indent=2)
     print(f"wrote {args.out}")
+
+    if args.min_packed_vs_dense > 0:
+        if not ratios:
+            raise SystemExit(
+                "--min-packed-vs-dense needs both a dense (0) and a packed "
+                "(>0) entry in --keeps to evaluate the gate")
+        big = max(r["batch"] for r in results if r["keep_frac"] > 0)
+        worst = min(v for k, v in ratios.items() if k.endswith(f"_batch{big}"))
+        if worst < args.min_packed_vs_dense:
+            raise SystemExit(
+                f"PERF REGRESSION: packed path {worst:.2f}x dense at "
+                f"batch {big} (< {args.min_packed_vs_dense}x required)")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ Two formats live here:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -150,6 +150,11 @@ class TBCRC:
     ``row_idx``: (nb_r, nb_c, R_keep) int32    block-local surviving rows
     ``col_idx``: (nb_r, nb_c, C_keep) int32    block-local surviving cols
     ``shape``/``block_shape`` reconstruct the dense layout.
+    ``plan``:    optional :class:`repro.kernels.plan.BCRPlan` — pack-time
+                 execution plan (flat take/scatter index vectors, optional
+                 one-hot planes, tuned dispatch genome). ``tbcrc_pack``
+                 always attaches the default plan so the ref path never
+                 dense-reconstructs inside a jitted step.
     """
 
     vals: jax.Array
@@ -157,29 +162,35 @@ class TBCRC:
     col_idx: jax.Array
     shape: Tuple[int, int]
     block_shape: Tuple[int, int]
+    plan: Any = None
 
     def tree_flatten(self):
-        return (self.vals, self.row_idx, self.col_idx), (self.shape, self.block_shape)
+        return ((self.vals, self.row_idx, self.col_idx, self.plan),
+                (self.shape, self.block_shape))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        vals, row_idx, col_idx = children
-        return cls(vals, row_idx, col_idx, aux[0], aux[1])
+        vals, row_idx, col_idx, plan = children
+        return cls(vals, row_idx, col_idx, aux[0], aux[1], plan)
 
     @property
     def kept_counts(self) -> Tuple[int, int]:
-        return self.vals.shape[2], self.vals.shape[3]
+        return self.vals.shape[-2], self.vals.shape[-1]
 
     def nbytes(self) -> int:
-        return (
+        tot = (
             self.vals.size * self.vals.dtype.itemsize
             + self.row_idx.size * 4
             + self.col_idx.size * 4
         )
+        if self.plan is not None:
+            tot += self.plan.nbytes()
+        return tot
 
 
 def tbcrc_pack(w: jax.Array, spec: BCRSpec) -> TBCRC:
     """Project ``w`` onto the balanced BCR set and pack the survivors."""
+    from repro.kernels.plan import default_plan  # lazy: core <-> kernels
     row_idx, col_idx = bcr_mod.bcr_indices(w, spec)
     blocks = bcr_mod._to_blocks(w, spec.block_shape)  # (nb_r, nb_c, br, bc)
     # Gather rows then cols: (nb_r, nb_c, R_keep, C_keep)
@@ -191,6 +202,7 @@ def tbcrc_pack(w: jax.Array, spec: BCRSpec) -> TBCRC:
         col_idx=col_idx,
         shape=tuple(w.shape),
         block_shape=spec.block_shape,
+        plan=default_plan(row_idx, col_idx, spec.block_shape),
     )
 
 

@@ -49,9 +49,37 @@ def linear_apply(params: Params, x: jax.Array, *, impl: str = "ref") -> jax.Arra
     return y
 
 
-def pack_linear(params: Params, spec: BCRSpec) -> Params:
-    """Dense (ADMM-pruned) → packed serving representation."""
-    out = {"w_packed": tbcrc_pack(params["w"], spec)}
+def grouped_linear_apply(params: Params, x: jax.Array, *,
+                         impl: str = "ref") -> tuple:
+    """Apply a fused projection group ``{"w_group": GroupedTBCRC[, "b"]}``
+    sharing activation ``x``; returns one output per member (Q/K/V or
+    gate/up order is the member order used at fuse time)."""
+    from repro.kernels.ops import bcr_matmul_grouped  # lazy: core <-> kernels
+    g = params["w_group"].group_size
+    y = bcr_matmul_grouped(x, params["w_group"], impl=impl)  # (..., G, N)
+    outs = []
+    for gi in range(g):
+        o = y[..., gi, :]
+        if "b" in params:
+            o = o + params["b"][..., gi, :].astype(o.dtype)
+        outs.append(o)
+    return tuple(outs)
+
+
+def pack_linear(params: Params, spec: BCRSpec, *,
+                tune_m: Optional[int] = 8) -> Params:
+    """Dense (ADMM-pruned) → packed serving representation.
+
+    ``tune_m`` (decode-batch hint) wires in the §4.5 GA tuner: the packed
+    weight carries a pack-time execution plan whose dispatch genome
+    (m_tile, grid order, planes, group width) was search-optimized against
+    the analytic roofline fitness — pass ``None`` to keep the default plan.
+    """
+    packed = tbcrc_pack(params["w"], spec)
+    if tune_m:
+        from repro.kernels.plan import tune_packed  # lazy: core <-> kernels
+        packed = tune_packed(packed, m=tune_m)
+    out = {"w_packed": packed}
     if "b" in params:
         out["b"] = params["b"]
     return out

@@ -69,7 +69,10 @@ def genetic_search(
     best_g, best_f = None, float("inf")
     for gen in range(generations):
         scored = sorted(pop, key=fit)
-        if fit(scored[0]) < best_f:
+        # `<` alone never updates when every genome scores inf (an
+        # over-constrained space), returning best=None and crashing the
+        # caller — fall back to the least-bad genome seen so far.
+        if best_g is None or fit(scored[0]) < best_f:
             best_g, best_f = scored[0], fit(scored[0])
         history.append((gen, best_f))
         parents = scored[: max(elite, 2)]
@@ -85,6 +88,76 @@ def genetic_search(
 # ---------------------------------------------------------------------------
 # Default fitness: VMEM-aware roofline model for the BCR decode kernel.
 # ---------------------------------------------------------------------------
+
+def plan_cost_model(
+    m: int, k: int, n: int, block_shape: Tuple[int, int],
+    r_keep: int, c_keep: int, *, weight_bytes_per_el: int = 2,
+) -> Callable[[Genome], float]:
+    """Fitness for tuning a pack-time execution plan of an already-packed
+    TBCRC weight (block shape and kept counts are fixed by packing; the
+    genome picks dispatch knobs — see ``kernels.plan.plan_search_space``).
+
+    Genome keys:
+      ``m_tile``      rows of x per grid step
+      ``use_planes``  DMA precomputed int8 one-hot gather/scatter planes
+                      instead of rebuilding them on the VPU per grid step
+      ``grid_order``  'mij' (m outermost) vs 'imj' (block-row outermost);
+                      both keep the contraction dim innermost (accumulator
+                      correctness), and tie on this analytic model at
+                      decode shapes (m_steps == 1) — the knob matters for a
+                      wallclock fitness backend and for prefill tiling
+      ``group_size``  projections fused per kernel launch (Q/K/V, gate/up):
+                      the x block is DMA'd once per (i, j) step for the
+                      whole group and the per-step launch cost is amortized
+    """
+    from repro.core.block_search import (
+        GRID_STEP_OVERHEAD, HBM_BW, PEAK_FLOPS, VMEM_BYTES)
+    br, bc = block_shape
+    nb_r, nb_c = n // br, k // bc
+    vpu_flops = PEAK_FLOPS / 16.0   # VPU is ~an order below the MXU
+
+    def fitness(g: Genome) -> float:
+        mt = int(g["m_tile"])
+        planes = bool(g["use_planes"])
+        grp = int(g["group_size"])
+        if mt <= 0 or mt % 8:
+            return float("inf")
+        m_steps = -(-m // mt)
+        # VMEM per grid step: x block + per-member tile/indices/accumulator
+        vmem = mt * bc * 2 + grp * (
+            r_keep * c_keep * weight_bytes_per_el
+            + (r_keep + c_keep) * 4 + mt * br * 4)
+        if planes:
+            vmem += grp * (bc * c_keep + r_keep * br)
+        if vmem > VMEM_BYTES * 0.8:
+            return float("inf")
+        w_bytes = grp * nb_r * nb_c * (
+            r_keep * c_keep * weight_bytes_per_el + (r_keep + c_keep) * 4)
+        if planes:
+            w_bytes += grp * nb_r * nb_c * (bc * c_keep + r_keep * br)
+        # x is re-read once per output block row but SHARED across the
+        # group; each member emits its own output
+        act_bytes = m * k * 2 * nb_r + grp * m * n * 2
+        steps = m_steps * nb_r * nb_c
+        mxu_flops = 2 * m * grp * nb_r * nb_c * (
+            c_keep * r_keep + bc * c_keep + r_keep * br)
+        # one-hot rebuild per grid step (iota + compare + cast) when planes
+        # are not precomputed
+        vpu_work = 0.0 if planes else float(
+            steps * grp * 2 * (bc * c_keep + r_keep * br))
+        # every m step re-streams the packed weights (no reuse across the
+        # outermost grid dim in either legal order)
+        t = max((w_bytes * m_steps + act_bytes) / HBM_BW,
+                mxu_flops / PEAK_FLOPS,
+                vpu_work / vpu_flops)
+        t += steps * GRID_STEP_OVERHEAD
+        # normalize to time PER PROJECTION so group_size=1 (grp separate
+        # dispatches, each re-reading x and paying its own grid steps) and
+        # group_size=grp (one fused dispatch) are comparable
+        return t / grp
+
+    return fitness
+
 
 def kernel_cost_model(
     m: int, k: int, n: int, keep_frac: float,

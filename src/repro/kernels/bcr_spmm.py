@@ -12,12 +12,26 @@ Mechanics per grid step ``(i = output block-row, j = contraction block)``:
   1. ``x`` block ``(M_t, bc)`` and the packed tile are DMA'd to VMEM by the
      BlockSpec machinery (double-buffered by Pallas).
   2. gather   : one-hot ``(bc, C_keep)`` matmul on the MXU — selects the
-     surviving columns. (Index compare → one-hot is VPU work; the matmul
-     rides the systolic array which is idle at decode batch sizes.)
+     surviving columns.
   3. core     : ``(M_t, C_keep) x (C_keep, R_keep)`` dense tile matmul.
   4. scatter  : one-hot ``(R_keep, br)`` matmul back to block-row layout,
      accumulated in an fp32 VMEM scratch across ``j`` (revisiting pattern —
      the output block is written once, at the last contraction step).
+
+The pack-time execution plan (kernels/plan.py) steers dispatch:
+
+* ``plan.use_planes`` — the gather/scatter one-hots are precomputed int8
+  planes DMA'd with the tile instead of rebuilt from the index planes on
+  the VPU every grid step (the §4.5 tuner trades plane bytes vs VPU time
+  per layer shape).
+* ``plan.grid_order`` — 'mij' (m outermost) or 'imj' (block-row outermost);
+  the contraction dim stays innermost in both (accumulator correctness).
+* ``plan.m_tile`` — tuned rows of ``x`` per grid step.
+
+``bcr_spmm_grouped`` fuses G same-shaped packed weights that share the same
+activation (Q/K/V, gate/up): one ``pallas_call``, the ``x`` block is DMA'd
+once per (i, j) step for the whole group, the per-grid-step launch cost and
+the ``m·k·2·nb_r`` HBM x re-reads are amortized G-fold.
 
 Register-level LRE (§4.4) maps to: the accumulator and the ``x`` block stay
 resident in VMEM across grid steps that share them; the gather one-hot is
@@ -38,41 +52,86 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.bcrc import TBCRC
 
+_ORDERS = ("mij", "imj")
 
-def _kernel(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
-            nb_c: int, block_rows: int, block_cols: int):
-    j = pl.program_id(2)  # grid = (m_step, block_row i, contraction j)
+
+def _block_update(x, vals, gather, scatter):
+    """gather → core tile matmul → scatter; returns the fp32 (M_t, br)
+    contribution of one (i, j) block."""
+    xg = jnp.dot(x, gather, preferred_element_type=jnp.float32)
+    part = jax.lax.dot_general(
+        xg.astype(x.dtype), vals,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.dot(part, scatter, preferred_element_type=jnp.float32)
+
+
+def _onehots(cols, rows, block_rows, block_cols, dtype):
+    """Index planes → one-hot gather/scatter (VPU iota + compare)."""
+    iota_c = jax.lax.broadcasted_iota(jnp.int32,
+                                      (block_cols, cols.shape[0]), 0)
+    gather = (iota_c == cols[None, :]).astype(dtype)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32,
+                                      (rows.shape[0], block_rows), 1)
+    scatter = (iota_r == rows[:, None]).astype(jnp.float32)
+    return gather, scatter
+
+
+def _kernel_idx(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
+                nb_c: int, block_rows: int, block_cols: int):
+    j = pl.program_id(2)  # contraction dim is innermost in both orders
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]                      # (M_t, bc)
-    vals = vals_ref[0, 0]               # (R_keep, C_keep)
-    cols = col_ref[0, 0, :]             # (C_keep,) int32
-    rows = row_ref[0, 0, :]             # (R_keep,) int32
-    c_keep = cols.shape[0]
-    r_keep = rows.shape[0]
-
-    # gather: one-hot (bc, C_keep) — exact 0/1 values, safe in bf16
-    iota_c = jax.lax.broadcasted_iota(jnp.int32, (block_cols, c_keep), 0)
-    gather = (iota_c == cols[None, :]).astype(x.dtype)
-    xg = jnp.dot(x, gather, preferred_element_type=jnp.float32)      # (M_t, C_keep)
-
-    part = jax.lax.dot_general(                                      # (M_t, R_keep)
-        xg.astype(x.dtype), vals,
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-
-    # scatter: one-hot (R_keep, br)
-    iota_r = jax.lax.broadcasted_iota(jnp.int32, (r_keep, block_rows), 1)
-    scatter = (iota_r == rows[:, None]).astype(jnp.float32)
-    acc_ref[...] += jnp.dot(part, scatter, preferred_element_type=jnp.float32)
+    gather, scatter = _onehots(col_ref[0, 0, :], row_ref[0, 0, :],
+                               block_rows, block_cols, x.dtype)
+    acc_ref[...] += _block_update(x, vals_ref[0, 0], gather, scatter)
 
     @pl.when(j == nb_c - 1)
     def _emit():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, o_ref, acc_ref, *,
+                   nb_c: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    gather = gpl_ref[0, 0].astype(x.dtype)          # (bc, C_keep) int8 DMA
+    scatter = spl_ref[0, 0].astype(jnp.float32)     # (R_keep, br)
+    acc_ref[...] += _block_update(x, vals_ref[0, 0], gather, scatter)
+
+    @pl.when(j == nb_c - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _grid_and_maps(order: str, m_steps: int, nb_r: int, nb_c: int):
+    """Grid tuple + (x, tile, out) index-map factories for a legal order.
+
+    Index maps receive grid args positionally; we normalize to (s, i, j).
+    """
+    if order == "mij":
+        grid = (m_steps, nb_r, nb_c)
+        def norm(s, i, j):
+            return s, i, j
+    elif order == "imj":
+        grid = (nb_r, m_steps, nb_c)
+        def norm(i, s, j):
+            return s, i, j
+    else:
+        raise ValueError(f"grid_order {order!r} not in {_ORDERS}")
+    x_map = lambda *g: (norm(*g)[0], norm(*g)[2])
+    out_map = lambda *g: (norm(*g)[0], norm(*g)[1])
+    return grid, norm, x_map, out_map
 
 
 @functools.partial(jax.jit, static_argnames=("m_tile", "interpret"))
@@ -85,8 +144,9 @@ def bcr_spmm(
 ) -> jax.Array:
     """``y[M, N] = x[M, K] @ W.T`` for balanced-BCR packed ``W``.
 
-    ``m_tile``: rows of ``x`` per grid step (defaults to all of M — decode
-    batches fit VMEM comfortably; prefill callers tile).
+    ``m_tile``: rows of ``x`` per grid step; defaults to the plan's tuned
+    tile when one exists, else all of M (decode batches fit VMEM
+    comfortably; prefill callers tile).
     """
     m, k = x.shape
     n = packed.shape[0]
@@ -95,29 +155,165 @@ def bcr_spmm(
     if packed.shape[1] != k:
         raise ValueError(f"x K dim {k} != packed K dim {packed.shape[1]}")
 
+    plan = packed.plan
+    if m_tile is None and plan is not None and plan.m_tile:
+        m_tile = plan.m_tile if m % plan.m_tile == 0 else None
     m_tile = m_tile or m
     if m % m_tile:
         raise ValueError(f"M={m} not divisible by m_tile={m_tile}")
     m_steps = m // m_tile
+    order = plan.grid_order if plan is not None else "mij"
+    use_planes = plan is not None and plan.use_planes
 
-    grid = (m_steps, nb_r, nb_c)
+    grid, norm, x_map, out_map = _grid_and_maps(order, m_steps, nb_r, nb_c)
+    tile_i = lambda *g: (norm(*g)[1], norm(*g)[2], 0, 0)
+    plane_i = lambda *g: (norm(*g)[1], norm(*g)[2], 0, 0)
 
-    kernel = functools.partial(
-        _kernel, nb_c=nb_c, block_rows=br, block_cols=bc)
+    if use_planes:
+        kernel = functools.partial(_kernel_planes, nb_c=nb_c)
+        in_specs = [
+            pl.BlockSpec((m_tile, bc), x_map),
+            pl.BlockSpec((1, 1, r_keep, c_keep), tile_i),
+            pl.BlockSpec((1, 1, bc, c_keep), plane_i),
+            pl.BlockSpec((1, 1, r_keep, br), plane_i),
+        ]
+        operands = (x, packed.vals, plan.gather_planes, plan.scatter_planes)
+    else:
+        kernel = functools.partial(
+            _kernel_idx, nb_c=nb_c, block_rows=br, block_cols=bc)
+        in_specs = [
+            pl.BlockSpec((m_tile, bc), x_map),
+            pl.BlockSpec((1, 1, r_keep, c_keep), tile_i),
+            pl.BlockSpec((1, 1, r_keep), lambda *g: (norm(*g)[1], norm(*g)[2], 0)),
+            pl.BlockSpec((1, 1, c_keep), lambda *g: (norm(*g)[1], norm(*g)[2], 0)),
+        ]
+        operands = (x, packed.vals, packed.row_idx, packed.col_idx)
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((m_tile, bc), lambda s, i, j: (s, j)),
-            pl.BlockSpec((1, 1, r_keep, c_keep), lambda s, i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, r_keep), lambda s, i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, c_keep), lambda s, i, j: (i, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((m_tile, br), lambda s, i, j: (s, i)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m_tile, br), out_map),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((m_tile, br), jnp.float32)],
         interpret=interpret,
         name="bcr_spmm",
-    )(x, packed.vals, packed.row_idx, packed.col_idx)
+    )(*operands)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Grouped projections: G packed weights sharing one activation
+# ---------------------------------------------------------------------------
+
+
+def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
+                        nb_c: int, block_rows: int, block_cols: int,
+                        group: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                      # DMA'd ONCE for the whole group
+    for g in range(group):              # static unroll
+        gather, scatter = _onehots(col_ref[g, 0, 0, :], row_ref[g, 0, 0, :],
+                                   block_rows, block_cols, x.dtype)
+        acc_ref[g] += _block_update(x, vals_ref[g, 0, 0], gather, scatter)
+
+    @pl.when(j == nb_c - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _grouped_kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, o_ref,
+                           acc_ref, *, nb_c: int, group: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    for g in range(group):
+        gather = gpl_ref[g, 0, 0].astype(x.dtype)
+        scatter = spl_ref[g, 0, 0].astype(jnp.float32)
+        acc_ref[g] += _block_update(x, vals_ref[g, 0, 0], gather, scatter)
+
+    @pl.when(j == nb_c - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m_tile", "interpret"))
+def bcr_spmm_grouped(
+    x: jax.Array,
+    grouped,                       # plan.GroupedTBCRC
+    *,
+    m_tile: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """``y[G, M, N] = x[M, K] @ W_g.T`` for G same-shaped packed weights.
+
+    One grid step serves every group member: ``x``'s block (and the VMEM
+    residency the gathered form rides on) is shared, so activation HBM
+    traffic and grid-step overhead are both amortized G-fold vs G separate
+    ``bcr_spmm`` calls.
+    """
+    m, k = x.shape
+    n = grouped.shape[0]
+    br, bc = grouped.block_shape
+    g_size, nb_r, nb_c, r_keep, c_keep = grouped.vals.shape
+    if grouped.shape[1] != k:
+        raise ValueError(f"x K dim {k} != packed K dim {grouped.shape[1]}")
+
+    plan = grouped.plan
+    if m_tile is None and plan is not None and plan.m_tile:
+        m_tile = plan.m_tile if m % plan.m_tile == 0 else None
+    m_tile = m_tile or m
+    if m % m_tile:
+        raise ValueError(f"M={m} not divisible by m_tile={m_tile}")
+    m_steps = m // m_tile
+    order = plan.grid_order if plan is not None else "mij"
+    use_planes = plan is not None and plan.use_planes
+
+    grid, norm, x_map, out_map3 = _grid_and_maps(order, m_steps, nb_r, nb_c)
+    tile_i = lambda *g: (0, norm(*g)[1], norm(*g)[2], 0, 0)
+    out_map = lambda *g: (0,) + out_map3(*g)
+
+    if use_planes:
+        kernel = functools.partial(_grouped_kernel_planes, nb_c=nb_c,
+                                   group=g_size)
+        in_specs = [
+            pl.BlockSpec((m_tile, bc), x_map),
+            pl.BlockSpec((g_size, 1, 1, r_keep, c_keep), tile_i),
+            pl.BlockSpec((g_size, 1, 1, bc, c_keep), tile_i),
+            pl.BlockSpec((g_size, 1, 1, r_keep, br), tile_i),
+        ]
+        operands = (x, grouped.vals, plan.gather_planes, plan.scatter_planes)
+    else:
+        kernel = functools.partial(
+            _grouped_kernel_idx, nb_c=nb_c, block_rows=br, block_cols=bc,
+            group=g_size)
+        in_specs = [
+            pl.BlockSpec((m_tile, bc), x_map),
+            pl.BlockSpec((g_size, 1, 1, r_keep, c_keep), tile_i),
+            pl.BlockSpec((g_size, 1, 1, r_keep),
+                         lambda *g: (0, norm(*g)[1], norm(*g)[2], 0)),
+            pl.BlockSpec((g_size, 1, 1, c_keep),
+                         lambda *g: (0, norm(*g)[1], norm(*g)[2], 0)),
+        ]
+        operands = (x, grouped.vals, grouped.row_idx, grouped.col_idx)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((g_size, m_tile, br), out_map),
+        out_shape=jax.ShapeDtypeStruct((g_size, m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((g_size, m_tile, br), jnp.float32)],
+        interpret=interpret,
+        name="bcr_spmm_grouped",
+    )(*operands)
     return out

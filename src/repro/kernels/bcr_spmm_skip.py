@@ -40,18 +40,24 @@ class SkipPacked:
     last: jax.Array      # (num_nz,) int32 1 iff last tile of this bi
     shape: Tuple[int, int]
     block_shape: Tuple[int, int]
+    # (N,) bool — True where the output row's block row has ≥1 surviving
+    # tile. Precomputed at pack time (part of the execution plan) so the
+    # jitted hot loop doesn't rebuild the scatter-based mask every call.
+    row_mask: jax.Array = None
 
     def tree_flatten(self):
-        return ((self.tiles, self.bi, self.bj, self.last),
+        return ((self.tiles, self.bi, self.bj, self.last, self.row_mask),
                 (self.shape, self.block_shape))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, aux[0], aux[1])
+        tiles, bi, bj, last, row_mask = children
+        return cls(tiles, bi, bj, last, aux[0], aux[1], row_mask)
 
     def nbytes(self) -> int:
         return (self.tiles.size * self.tiles.dtype.itemsize
-                + 12 * self.bi.size)
+                + 12 * self.bi.size
+                + (self.row_mask.size if self.row_mask is not None else 0))
 
 
 def pack_skip(w: jax.Array, spec: BCRSpec) -> SkipPacked:
@@ -75,12 +81,19 @@ def pack_skip(w: jax.Array, spec: BCRSpec) -> SkipPacked:
     for i in range(len(bis)):
         if i + 1 == len(bis) or bis[i + 1] != bis[i]:
             last[i] = 1
+    # occupancy mask, hoisted out of the hot loop: output rows whose block
+    # row owns no surviving tile are never visited by the kernel and must
+    # be zeroed by the caller
+    occupancy = np.zeros((n // br,), bool)
+    occupancy[bis] = True        # visited block rows (incl. the zero pad
+    row_mask = np.repeat(occupancy, br)  # tile — it writes exact zeros)
     return SkipPacked(
         tiles=jnp.asarray(np.stack(tiles)),
         bi=jnp.asarray(bis),
         bj=jnp.asarray(np.asarray(bjs, np.int32)),
         last=jnp.asarray(last),
-        shape=(n, k), block_shape=(br, bc))
+        shape=(n, k), block_shape=(br, bc),
+        row_mask=jnp.asarray(row_mask))
 
 
 def _kernel(bi_ref, bj_ref, last_ref, x_ref, t_ref, o_ref, acc_ref):
@@ -136,10 +149,15 @@ def bcr_spmm_skip(x: jax.Array, packed: SkipPacked, *,
     )(packed.bi, packed.bj, packed.last, x, packed.tiles)
 
     # zero the never-visited output block rows (their buffer contents are
-    # undefined — where(), not multiply: garbage may be NaN)
-    nb_r = n // br
-    occupancy = jnp.zeros((nb_r,), jnp.float32).at[packed.bi].add(1.0) > 0
-    mask = jnp.repeat(occupancy, br)
+    # undefined — where(), not multiply: garbage may be NaN). The mask is
+    # precomputed at pack time (pack_skip) so the jitted hot loop doesn't
+    # rebuild the scatter every call; rebuild only for hand-rolled packs.
+    if packed.row_mask is not None:
+        mask = packed.row_mask
+    else:
+        nb_r = n // br
+        occupancy = jnp.zeros((nb_r,), jnp.float32).at[packed.bi].add(1.0) > 0
+        mask = jnp.repeat(occupancy, br)
     return jnp.where(mask[None, :], y, jnp.zeros_like(y))
 
 

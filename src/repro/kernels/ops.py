@@ -1,13 +1,26 @@
 """Public jit'd wrappers around the BCR kernels.
 
 ``bcr_matmul`` is the API the model layers call: handles arbitrary leading
-batch dims, pads M to the sublane granule, and dispatches between
+batch dims, pads M to the plan's tile granule, and dispatches between
 
   * ``pallas``     — the TPU kernel (compiled Mosaic; requires TPU),
   * ``interpret``  — same kernel body, Pallas interpret mode (CPU-validated),
-  * ``ref``        — dense-reconstruction oracle (used for dry-run lowering
-                     so the roofline reads clean HLO, see DESIGN.md §2),
+  * ``ref``        — reconstruction-free packed path when a pack-time plan
+                     exists (jnp take + blockwise einsum + scatter-add;
+                     weight bytes scale with keep_frac), else the dense-
+                     reconstruction oracle. The packed path can trail a
+                     true dense matmul at large M (gather expands the
+                     activation nb_r-fold), but at serving time dense W no
+                     longer exists and per-call reconstruction measures
+                     slower still at every M (BENCH_bcr_kernel.json), so
+                     it stays the best packed-weight choice for prefill
+                     and decode alike,
+  * ``dense_ref``  — dense-reconstruction oracle, always (kept for tests
+                     and dry-run lowering where W-shaped HLO is expected),
   * ``gather_ref`` — step-by-step jnp mirror of the kernel decomposition.
+
+``bcr_matmul_grouped`` is the grouped-projection analogue over a
+``plan.GroupedTBCRC`` (Q/K/V, gate/up fused into one dispatch).
 """
 
 from __future__ import annotations
@@ -20,9 +33,9 @@ import jax.numpy as jnp
 
 from repro.core.bcrc import TBCRC
 from repro.kernels import ref as ref_mod
-from repro.kernels.bcr_spmm import bcr_spmm
+from repro.kernels.bcr_spmm import bcr_spmm, bcr_spmm_grouped
 
-Impl = Literal["pallas", "interpret", "ref", "gather_ref"]
+Impl = Literal["pallas", "interpret", "ref", "dense_ref", "gather_ref"]
 
 _SUBLANE = 8
 
@@ -30,6 +43,20 @@ _SUBLANE = 8
 def default_impl() -> Impl:
     platform = jax.default_backend()
     return "pallas" if platform == "tpu" else "ref"
+
+
+def _pad_rows(x2: jax.Array, granule: int) -> jax.Array:
+    """Pad M to the sublane granule (or an explicitly requested m_tile).
+    A plan's tuned m_tile is deliberately NOT a padding granule: a plan
+    tuned for a larger batch than the actual call would multiply kernel
+    rows; instead bcr_spmm falls back to untiled when the tuned tile does
+    not divide the (sublane-padded) M."""
+    m = x2.shape[0]
+    pad = (-m) % granule
+    if pad:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((pad, x2.shape[1]), x2.dtype)], axis=0)
+    return x2
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "m_tile"))
@@ -47,16 +74,57 @@ def bcr_matmul(
     m = x2.shape[0]
 
     if impl in ("pallas", "interpret"):
-        pad = (-m) % _SUBLANE
-        if pad:
-            x2 = jnp.concatenate([x2, jnp.zeros((pad, k), x2.dtype)], axis=0)
+        x2 = _pad_rows(x2, m_tile or _SUBLANE)
         y2 = bcr_spmm(x2, packed, m_tile=m_tile,
                       interpret=(impl == "interpret"))
         y2 = y2[:m]
     elif impl == "ref":
+        y2 = (ref_mod.bcr_spmm_packed_ref(x2, packed)
+              if packed.plan is not None else
+              ref_mod.bcr_spmm_ref(x2, packed))
+    elif impl == "dense_ref":
         y2 = ref_mod.bcr_spmm_ref(x2, packed)
     elif impl == "gather_ref":
         y2 = ref_mod.bcr_spmm_gather_ref(x2, packed)
     else:
         raise ValueError(f"unknown impl {impl!r}")
     return y2.reshape(*batch, n)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "m_tile"))
+def bcr_matmul_grouped(
+    x: jax.Array,
+    grouped,                        # plan.GroupedTBCRC
+    *,
+    impl: Impl = "ref",
+    m_tile: int | None = None,
+) -> jax.Array:
+    """y[..., G, N] = x[..., K] @ W_g.T for G grouped packed weights.
+
+    One fused dispatch for the whole group (the activation is read once);
+    callers split the G axis back into Q/K/V (or gate/up).
+    """
+    *batch, k = x.shape
+    n = grouped.shape[0]
+    g = grouped.group_size
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    if impl in ("pallas", "interpret"):
+        x2 = _pad_rows(x2, m_tile or _SUBLANE)
+        yg = bcr_spmm_grouped(x2, grouped, m_tile=m_tile,
+                              interpret=(impl == "interpret"))
+        y2 = yg[:, :m].transpose(1, 0, 2)             # (M, G, N)
+    elif impl == "ref":
+        y2 = ref_mod.bcr_spmm_grouped_ref(x2, grouped)
+    elif impl == "dense_ref":
+        # per-member dense-reconstruction oracle (W-shaped HLO on purpose)
+        members = [TBCRC(vals=grouped.vals[gi], row_idx=grouped.row_idx[gi],
+                         col_idx=grouped.col_idx[gi], shape=grouped.shape,
+                         block_shape=grouped.block_shape)
+                   for gi in range(g)]
+        y2 = jnp.stack([ref_mod.bcr_spmm_ref(x2, mem) for mem in members],
+                       axis=1)
+    else:
+        raise ValueError(f"unknown impl {impl!r} for grouped matmul")
+    return y2.reshape(*batch, g, n)

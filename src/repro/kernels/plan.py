@@ -1,0 +1,404 @@
+"""Pack-time execution plans for BCR matmuls (GRIM §4.4–§4.5 on TPU).
+
+GRIM's speedup comes from *compile-time* work: the paper's code generator
+bakes the sparsity pattern into the emitted kernel so the runtime loop only
+streams surviving weights. Our serving hot loop previously did the opposite —
+the CPU/GPU ``ref`` impl dense-reconstructed ``W`` inside every jitted decode
+step, and the Pallas kernel rebuilt its one-hot gather/scatter planes from
+the index planes on every grid step. This module is the missing compile
+step: everything derivable from the (static) sparsity pattern is computed
+ONCE at pack time and carried alongside the packed weight.
+
+A :class:`BCRPlan` holds, per packed matrix:
+
+* ``gather_cols``  — flat int32 ``(nb_r·nb_c·C_keep,)`` global column ids,
+  ``j·bc + col_idx[i, j, c]``: one ``jnp.take`` gathers every surviving
+  activation for the reconstruction-free ref path
+  (:func:`repro.kernels.ref.bcr_spmm_packed_ref`).
+* ``scatter_rows`` — flat int32 ``(nb_r·nb_c·R_keep,)`` global output rows,
+  ``i·br + row_idx[i, j, r]``: one scatter-add accumulates the blockwise
+  partial products. Weight bytes touched per decode step scale with
+  ``keep_frac`` — no dense ``(N, K)`` tensor ever exists in the step HLO.
+* ``gather_planes`` / ``scatter_planes`` — optional precomputed int8
+  one-hot planes ``(nb_r, nb_c, bc, C_keep)`` / ``(nb_r, nb_c, R_keep, br)``
+  for the Pallas kernel: trades index→one-hot VPU work per grid step for
+  streaming int8 bytes (the §4.5 tuner decides per shape).
+* static dispatch genome — ``m_tile``, ``grid_order``, ``group_size`` —
+  chosen by the GA tuner (:func:`tuned_genome`) against the analytic
+  roofline fitness, cached per unique layer shape.
+
+:class:`GroupedTBCRC` fuses projections that share the same activation
+(Q/K/V, gate/up) into ONE kernel dispatch: the ``x`` block and its gathered
+form stay VMEM-resident across the group, amortizing the per-grid-step
+launch overhead and the ``m·k·2·nb_r`` HBM re-reads the cost model charges
+per separate call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcrc import TBCRC
+
+Genome = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Plan container
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BCRPlan:
+    """Precomputed hot-loop constants for one packed (or grouped) matrix.
+
+    Index vectors / planes are pytree children (they live next to the
+    weights in the params tree and are donated/sharded with them); the
+    dispatch genome is aux data (static under jit).
+    """
+
+    gather_cols: jax.Array                    # (L_c,) int32 flat global cols
+    scatter_rows: jax.Array                   # (L_r,) int32 flat global rows
+    gather_planes: Optional[jax.Array] = None   # (nb_r, nb_c, bc, C_keep) i8
+    scatter_planes: Optional[jax.Array] = None  # (nb_r, nb_c, R_keep, br) i8
+    m_tile: Optional[int] = None              # static: rows of x per step
+    grid_order: str = "mij"                   # static: 'mij' | 'imj'
+    group_size: int = 1                       # static: tuner's fusion width
+
+    def tree_flatten(self):
+        return ((self.gather_cols, self.scatter_rows,
+                 self.gather_planes, self.scatter_planes),
+                (self.m_tile, self.grid_order, self.group_size))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def use_planes(self) -> bool:
+        return self.gather_planes is not None
+
+    def nbytes(self) -> int:
+        tot = self.gather_cols.size * 4 + self.scatter_rows.size * 4
+        if self.gather_planes is not None:
+            tot += self.gather_planes.size + self.scatter_planes.size
+        return tot
+
+
+# ---------------------------------------------------------------------------
+# Plan construction (pure jnp — vmaps over stacked/scanned layer params)
+# ---------------------------------------------------------------------------
+
+
+def _index_vectors(row_idx: jax.Array, col_idx: jax.Array,
+                   block_shape: Tuple[int, int],
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Block-local index planes → flat global take/scatter vectors."""
+    br, bc = block_shape
+    nb_r, nb_c = col_idx.shape[0], col_idx.shape[1]
+    gcols = (jnp.arange(nb_c, dtype=jnp.int32)[None, :, None] * bc
+             + col_idx).reshape(-1)
+    srows = (jnp.arange(nb_r, dtype=jnp.int32)[:, None, None] * br
+             + row_idx).reshape(-1)
+    return gcols, srows
+
+
+def _onehot_planes(row_idx: jax.Array, col_idx: jax.Array,
+                   block_shape: Tuple[int, int],
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Materialize the kernel's gather/scatter one-hots once, in int8."""
+    br, bc = block_shape
+    c_keep = col_idx.shape[-1]
+    r_keep = row_idx.shape[-1]
+    iota_c = jnp.arange(bc, dtype=jnp.int32)[None, None, :, None]
+    gather = (iota_c == col_idx[:, :, None, :]).astype(jnp.int8)
+    iota_r = jnp.arange(br, dtype=jnp.int32)[None, None, None, :]
+    scatter = (row_idx[:, :, :, None] == iota_r).astype(jnp.int8)
+    assert gather.shape[-2:] == (bc, c_keep)
+    assert scatter.shape[-2:] == (r_keep, br)
+    return gather, scatter
+
+
+def default_plan(row_idx: jax.Array, col_idx: jax.Array,
+                 block_shape: Tuple[int, int]) -> BCRPlan:
+    """Minimal plan (index vectors only) — what ``tbcrc_pack`` attaches so
+    every packed weight is reconstruction-free on the ref path by default."""
+    gcols, srows = _index_vectors(row_idx, col_idx, block_shape)
+    return BCRPlan(gather_cols=gcols, scatter_rows=srows)
+
+
+def attach_plan(packed: TBCRC, genome: Optional[Genome] = None) -> TBCRC:
+    """Rebuild ``packed``'s plan with the dispatch genome applied.
+
+    Handles stacked (scanned-layer) packs by vmapping down to the 2-D
+    member; the genome is shape-derived and therefore identical across the
+    stack (static aux must agree under vmap).
+    """
+    if packed.vals.ndim > 4:
+        return jax.vmap(lambda p: attach_plan(p, genome))(packed)
+    genome = genome or {}
+    gcols, srows = _index_vectors(packed.row_idx, packed.col_idx,
+                                  packed.block_shape)
+    gpl = spl = None
+    if genome.get("use_planes"):
+        gpl, spl = _onehot_planes(packed.row_idx, packed.col_idx,
+                                  packed.block_shape)
+    plan = BCRPlan(
+        gather_cols=gcols, scatter_rows=srows,
+        gather_planes=gpl, scatter_planes=spl,
+        m_tile=genome.get("m_tile"),
+        grid_order=genome.get("grid_order", "mij"),
+        group_size=int(genome.get("group_size", 1)))
+    return TBCRC(vals=packed.vals, row_idx=packed.row_idx,
+                 col_idx=packed.col_idx, shape=packed.shape,
+                 block_shape=packed.block_shape, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# Grouped projections (Q/K/V, gate/up) sharing one activation
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GroupedTBCRC:
+    """G same-shaped TBCRC weights stacked for one fused kernel dispatch.
+
+    ``vals``/``row_idx``/``col_idx`` carry a leading group axis (after any
+    scanned-layer stacking dims); ``plan.gather_cols`` concatenates the
+    members' take vectors and ``plan.scatter_rows`` offsets member ``g`` by
+    ``g·N`` so the ref path scatters into one ``(M, G·N)`` output.
+    """
+
+    vals: jax.Array        # (G, nb_r, nb_c, R_keep, C_keep)
+    row_idx: jax.Array     # (G, nb_r, nb_c, R_keep)
+    col_idx: jax.Array     # (G, nb_r, nb_c, C_keep)
+    plan: Any
+    shape: Tuple[int, int]          # per-MEMBER dense (N, K)
+    block_shape: Tuple[int, int]
+    group_size: int
+
+    def tree_flatten(self):
+        return ((self.vals, self.row_idx, self.col_idx, self.plan),
+                (self.shape, self.block_shape, self.group_size))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0], aux[1], aux[2])
+
+    @property
+    def kept_counts(self) -> Tuple[int, int]:
+        return self.vals.shape[-2], self.vals.shape[-1]
+
+    def nbytes(self) -> int:
+        tot = (self.vals.size * self.vals.dtype.itemsize
+               + self.row_idx.size * 4 + self.col_idx.size * 4)
+        if self.plan is not None:
+            tot += self.plan.nbytes()
+        return tot
+
+
+def groupable(members: Sequence[TBCRC]) -> bool:
+    """Fusable = identical member geometry (shape, blocks, kept counts,
+    dtype). Q with GQA'd K/V usually fails this (different N) — K/V and
+    gate/up always pass."""
+    first = members[0]
+    return all(
+        m.shape == first.shape
+        and m.block_shape == first.block_shape
+        and m.vals.shape == first.vals.shape
+        and m.vals.dtype == first.vals.dtype
+        for m in members[1:])
+
+
+def pack_group(members: Sequence[TBCRC],
+               genome: Optional[Genome] = None) -> GroupedTBCRC:
+    """Stack same-shaped packed weights into one fused-dispatch group."""
+    members = list(members)
+    if not groupable(members):
+        raise ValueError("grouped members must share shape/block/kept/dtype")
+    if members[0].vals.ndim > 4:
+        return jax.vmap(lambda *ms: pack_group(ms, genome))(*members)
+    genome = dict(genome or {})
+    genome["group_size"] = len(members)
+    n = members[0].shape[0]
+    gcols_parts, srows_parts = [], []
+    for g, mem in enumerate(members):
+        gc, sr = _index_vectors(mem.row_idx, mem.col_idx, mem.block_shape)
+        gcols_parts.append(gc)
+        srows_parts.append(sr + g * n)
+    gpl = spl = None
+    if genome.get("use_planes"):
+        planes = [_onehot_planes(m.row_idx, m.col_idx, m.block_shape)
+                  for m in members]
+        gpl = jnp.stack([p[0] for p in planes])
+        spl = jnp.stack([p[1] for p in planes])
+    plan = BCRPlan(
+        gather_cols=jnp.concatenate(gcols_parts),
+        scatter_rows=jnp.concatenate(srows_parts),
+        gather_planes=gpl, scatter_planes=spl,
+        m_tile=genome.get("m_tile"),
+        grid_order=genome.get("grid_order", "mij"),
+        group_size=len(members))
+    return GroupedTBCRC(
+        vals=jnp.stack([m.vals for m in members]),
+        row_idx=jnp.stack([m.row_idx for m in members]),
+        col_idx=jnp.stack([m.col_idx for m in members]),
+        plan=plan, shape=members[0].shape,
+        block_shape=members[0].block_shape, group_size=len(members))
+
+
+# ---------------------------------------------------------------------------
+# GA tuner wiring (§4.5): one search per unique layer shape, cached
+# ---------------------------------------------------------------------------
+
+_GENOME_CACHE: Dict[Tuple, Genome] = {}
+
+
+def plan_search_space(m: int, block_shape: Tuple[int, int],
+                      max_group: int) -> Dict[str, Sequence[Any]]:
+    m_pad = -(-max(m, 1) // 8) * 8
+    tiles = sorted({mt for mt in (8, 16, 32, 64, 128, m_pad)
+                    if mt <= m_pad and m_pad % mt == 0})
+    return {
+        "m_tile": tiles,
+        "use_planes": [False, True],
+        "grid_order": ["mij", "imj"],
+        "group_size": sorted({1, max_group}),
+    }
+
+
+def tuned_genome(m: int, k: int, n: int, block_shape: Tuple[int, int],
+                 r_keep: int, c_keep: int, *, max_group: int = 1,
+                 weight_bytes_per_el: int = 2) -> Genome:
+    """§4.5 genetic search over (m_tile, grid order, group size, planes)
+    with the analytic roofline fitness; memoized per unique layer shape so
+    a 126-layer stack tunes once."""
+    key = (m, k, n, block_shape, r_keep, c_keep, max_group,
+           weight_bytes_per_el)
+    if key not in _GENOME_CACHE:
+        from repro.core.tuner import genetic_search, plan_cost_model
+        fitness = plan_cost_model(
+            m, k, n, block_shape, r_keep, c_keep,
+            weight_bytes_per_el=weight_bytes_per_el)
+        res = genetic_search(plan_search_space(m, block_shape, max_group),
+                             fitness, population=16, generations=8, seed=0)
+        _GENOME_CACHE[key] = dict(res.best)
+    return dict(_GENOME_CACHE[key])
+
+
+def tune_packed(packed: TBCRC, *, m: int = 8, max_group: int = 1) -> TBCRC:
+    """Attach a GA-tuned plan to ``packed`` (decode batch hint ``m``)."""
+    n, k = packed.shape
+    r_keep, c_keep = packed.vals.shape[-2], packed.vals.shape[-1]
+    genome = tuned_genome(
+        m, k, n, packed.block_shape, r_keep, c_keep, max_group=max_group,
+        weight_bytes_per_el=packed.vals.dtype.itemsize)
+    return attach_plan(packed, genome)
+
+
+# ---------------------------------------------------------------------------
+# Fusing packed projection groups inside a params tree
+# ---------------------------------------------------------------------------
+
+# dict-key patterns of projections sharing one activation (models/layers.py
+# naming): attention Q/K/V over x, SwiGLU gate/up over h. The fused entry
+# replaces its members with {"w_group": GroupedTBCRC[, "b": (G, N)]}.
+# `requires` keys must also be present — they identify the layer type:
+# RWKV mixers reuse "wk"/"wv"/"wg" for projections of DIFFERENT (token-
+# shifted) activations, but carry no "wq"/"wi", so requiring the attention
+# (resp. SwiGLU) sibling keeps them out of the fusion.
+_GROUPS = (
+    ("wqkv", ("wq", "wk", "wv"), ()),
+    ("wkv", ("wk", "wv"), ("wq",)),
+    ("wgi", ("wg", "wi"), ()),
+)
+
+
+def _packed_entry(node: Any) -> Optional[TBCRC]:
+    if isinstance(node, dict) and "w_packed" in node and isinstance(
+            node["w_packed"], TBCRC):
+        return node["w_packed"]
+    return None
+
+
+def _try_fuse(tree: Dict[str, Any], fused_key: str,
+              member_keys: Tuple[str, ...], m: int) -> bool:
+    members = [_packed_entry(tree.get(k)) for k in member_keys]
+    if any(p is None for p in members) or not groupable(members):
+        return False
+    has_bias = ["b" in tree[k] for k in member_keys]
+    if any(has_bias) and not all(has_bias):
+        return False
+    n, k = members[0].shape
+    r_keep, c_keep = members[0].vals.shape[-2], members[0].vals.shape[-1]
+    genome = tuned_genome(
+        m, k, n, members[0].block_shape, r_keep, c_keep,
+        max_group=len(members),
+        weight_bytes_per_el=members[0].vals.dtype.itemsize)
+    if int(genome.get("group_size", 1)) < len(members):
+        return False            # the tuner preferred separate dispatches
+    fused: Dict[str, Any] = {"w_group": pack_group(members, genome)}
+    if all(has_bias):
+        # group axis at -2 so scanned-layer stacking dims stay leading
+        # (lax.scan slices axis 0 of every leaf)
+        fused["b"] = jnp.stack([tree[k]["b"] for k in member_keys], axis=-2)
+    for k in member_keys:
+        del tree[k]
+    tree[fused_key] = fused
+    return True
+
+
+def fuse_packed_projections(tree: Any, *, m: int = 8,
+                            _key: Optional[str] = None) -> Any:
+    """Walk a packed params tree and fuse Q/K/V and gate/up projections
+    whose packed geometry matches (and whose tuned genome votes to fuse).
+    Returns a new tree; non-dict/list nodes are shared, not copied.
+
+    Cross-attention dicts (parent key ``cross_attn``) never fuse Q with
+    K/V: there Q projects the decoder stream while K/V project encoder
+    output — grouping them would compute-and-discard two projections per
+    dispatch. K/V still fuse (both genuinely over ``enc_out``).
+    """
+    if isinstance(tree, dict):
+        out = {k: fuse_packed_projections(v, m=m, _key=k)
+               for k, v in tree.items()}
+        for fused_key, member_keys, requires in _GROUPS:
+            if fused_key == "wqkv" and _key == "cross_attn":
+                continue
+            if (all(k in out for k in member_keys)
+                    and all(k in out for k in requires)):
+                _try_fuse(out, fused_key, member_keys, m)
+        return out
+    if isinstance(tree, list):
+        return [fuse_packed_projections(v, m=m, _key=_key) for v in tree]
+    return tree
+
+
+def plan_params(tree: Any, *, m: int = 8, fuse: bool = True) -> Any:
+    """Engine-build entry point: GA-tune every packed linear's plan and
+    (optionally) fuse shared-activation projection groups. Idempotent —
+    already-grouped entries and already-tuned plans (any plan with a
+    dispatch genome, i.e. ``m_tile`` set) are left alone; only the
+    default plans ``tbcrc_pack`` attaches get tuned."""
+    def tune(node: Any) -> Any:
+        if isinstance(node, dict):
+            if "w_packed" in node and isinstance(node["w_packed"], TBCRC):
+                packed = node["w_packed"]
+                if packed.plan is not None and packed.plan.m_tile is not None:
+                    return node          # caller already tuned this plan
+                node = dict(node)
+                node["w_packed"] = tune_packed(packed, m=m)
+                return node
+            return {k: tune(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [tune(v) for v in node]
+        return node
+
+    tree = tune(tree)
+    return fuse_packed_projections(tree, m=m) if fuse else tree

@@ -20,6 +20,53 @@ def bcr_spmm_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
     return jnp.dot(x, w.T.astype(x.dtype), preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def bcr_spmm_packed_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
+    """Reconstruction-free CPU/GPU path: ``y = x @ W.T`` straight off the
+    packed ``(nb_r, nb_c, R_keep, C_keep)`` vals.
+
+    Uses the pack-time plan's flat index vectors: ONE ``jnp.take`` gathers
+    every surviving activation, ONE batched einsum multiplies the dense
+    kept tiles, ONE scatter-add places the partial products. Weight bytes
+    and MXU flops scale with ``keep_frac``; no dense ``(N, K)`` tensor ever
+    appears in the jitted step (the old ``bcr_spmm_ref`` rebuilt ``W``
+    inside every decode step — the 0.79x-vs-dense regression).
+    """
+    plan = packed.plan
+    if plan is None:
+        raise ValueError("bcr_spmm_packed_ref needs a packed.plan "
+                         "(tbcrc_pack attaches one; see kernels/plan.py)")
+    m = x.shape[0]
+    nb_r, nb_c, r_keep, c_keep = packed.vals.shape
+    n = packed.shape[0]
+    xg = jnp.take(x, plan.gather_cols, axis=1)        # (M, nb_r·nb_c·Ck)
+    xg = xg.reshape(m, nb_r, nb_c, c_keep)
+    part = jnp.einsum("mijc,ijrc->mijr", xg.astype(jnp.float32),
+                      packed.vals.astype(jnp.float32))
+    y = jnp.zeros((m, n), jnp.float32)
+    y = y.at[:, plan.scatter_rows].add(part.reshape(m, -1))
+    return y.astype(x.dtype)
+
+
+def bcr_spmm_grouped_ref(x: jax.Array, grouped) -> jax.Array:
+    """Grouped-projection ref path: G same-shaped packed weights sharing
+    ``x`` (Q/K/V, gate/up) in one take + one einsum + one scatter-add.
+
+    Returns ``(M, G, N)``; the plan's scatter vector offsets member ``g``
+    by ``g·N`` so all partial products land in one output buffer.
+    """
+    plan = grouped.plan
+    m = x.shape[0]
+    g, nb_r, nb_c, r_keep, c_keep = grouped.vals.shape
+    n = grouped.shape[0]
+    xg = jnp.take(x, plan.gather_cols, axis=1)
+    xg = xg.reshape(m, g, nb_r, nb_c, c_keep)
+    part = jnp.einsum("mgijc,gijrc->mgijr", xg.astype(jnp.float32),
+                      grouped.vals.astype(jnp.float32))
+    y = jnp.zeros((m, g * n), jnp.float32)
+    y = y.at[:, plan.scatter_rows].add(part.reshape(m, -1))
+    return y.reshape(m, g, n).astype(x.dtype)
+
+
 def bcr_spmm_gather_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
     """Block-by-block gather/matmul/scatter — mirrors the Pallas kernel."""
     m, k = x.shape

@@ -53,8 +53,16 @@ def _pack_any(w: jax.Array, spec: BCRSpec):
     return jax.vmap(lambda x: _pack_any(x, spec))(w)
 
 
-def pack_params(cfg: ModelConfig, params: PyTree) -> PyTree:
-    """Replace every prunable linear's {"w"} with {"w_packed": TBCRC}."""
+def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
+                decode_m: int = 8) -> PyTree:
+    """Replace every prunable linear's {"w"} with {"w_packed": TBCRC}.
+
+    With ``plan=True`` (default) this is GRIM's full compile step: every
+    packed weight gets a GA-tuned pack-time execution plan and projections
+    sharing one activation (Q/K/V, gate/up) are fused into grouped
+    dispatches (kernels/plan.py). ``decode_m`` is the decode-batch hint the
+    tuner optimizes for.
+    """
     fil = default_prune_filter(cfg)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
@@ -78,7 +86,11 @@ def pack_params(cfg: ModelConfig, params: PyTree) -> PyTree:
                     for i, v in enumerate(node)]
         return node
 
-    return rewrite(params)
+    packed = rewrite(params)
+    if plan:
+        from repro.kernels.plan import plan_params
+        packed = plan_params(packed, m=decode_m)
+    return packed
 
 
 def packed_fraction(params: PyTree, packed: PyTree) -> float:
@@ -249,11 +261,13 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
 # ---------------------------------------------------------------------------
 
 
-def build_params(cfg: ModelConfig, log=print) -> PyTree:
+def build_params(cfg: ModelConfig, log=print, *, decode_m: int = 8) -> PyTree:
     fns = model_fns(cfg)
     params = fns.init_params(jax.random.PRNGKey(0))
     if cfg.bcr_keep_frac > 0:
-        packed = pack_params(cfg, params)
+        # tune the execution plans for the batch this server will decode
+        # at (the engine's plan_params preserves pre-tuned plans)
+        packed = pack_params(cfg, params, decode_m=decode_m)
         log(f"packed weight bytes: "
             f"{packed_fraction(params, packed):.3f}x dense")
         params = packed
@@ -290,7 +304,8 @@ def main() -> None:
     if args.bcr_block or args.smoke:
         b = args.bcr_block or 16
         cfg = dataclasses.replace(cfg, bcr_block=(b, b))
-    params = build_params(cfg)
+    params = build_params(
+        cfg, decode_m=(args.batch if args.mode == "static" else args.slots))
 
     if args.mode == "static":
         generate(cfg, params, ServeConfig(batch=args.batch,

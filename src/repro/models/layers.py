@@ -14,7 +14,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_linear import linear_apply, linear_init
+from repro.core.sparse_linear import (grouped_linear_apply, linear_apply,
+                                      linear_init)
 from repro.runtime import partitioning as part
 
 Params = Dict[str, Any]
@@ -97,9 +98,21 @@ def attention_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
 def _qkv(params: Params, x: jax.Array, n_heads: int, n_kv: int, head_dim: int,
          positions: jax.Array, rope_theta: float, impl: str):
     b, s, _ = x.shape
-    q = linear_apply(params["wq"], x, impl=impl).reshape(b, s, n_heads, head_dim)
-    k = linear_apply(params["wk"], x, impl=impl).reshape(b, s, n_kv, head_dim)
-    v = linear_apply(params["wv"], x, impl=impl).reshape(b, s, n_kv, head_dim)
+    # packed serving may fuse projections that share this activation into
+    # one grouped dispatch (kernels/plan.fuse_packed_projections): all of
+    # Q/K/V when GQA keeps their shapes equal, else K/V only
+    if "wqkv" in params:
+        q, k, v = grouped_linear_apply(params["wqkv"], x, impl=impl)
+    else:
+        if "wkv" in params:
+            k, v = grouped_linear_apply(params["wkv"], x, impl=impl)
+        else:
+            k = linear_apply(params["wk"], x, impl=impl)
+            v = linear_apply(params["wv"], x, impl=impl)
+        q = linear_apply(params["wq"], x, impl=impl)
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
     if rope_theta > 0:
         q = rope(q, positions, rope_theta)
         k = rope(k, positions, rope_theta)
@@ -333,7 +346,11 @@ def cross_attention_apply(
     params: Params, x: jax.Array, kv_cache: Params, *, n_heads: int,
     n_kv: int, head_dim: int, impl: str = "ref",
 ) -> jax.Array:
-    """Encoder-decoder cross attention against precomputed encoder K/V."""
+    """Encoder-decoder cross attention against precomputed encoder K/V.
+
+    Q always stays un-fused here (packing never groups it into a "wqkv"
+    for cross-attention — Q projects the decoder stream while K/V project
+    encoder output, see plan.fuse_packed_projections)."""
     b, s, _ = x.shape
     q = linear_apply(params["wq"], x, impl=impl).reshape(b, s, n_heads, head_dim)
     k, v = kv_cache["k"], kv_cache["v"]
@@ -348,9 +365,13 @@ def cross_attention_apply(
 def cross_kv(params: Params, enc_out: jax.Array, *, n_kv: int,
              head_dim: int, impl: str = "ref") -> Params:
     b, s, _ = enc_out.shape
-    k = linear_apply(params["wk"], enc_out, impl=impl).reshape(b, s, n_kv, head_dim)
-    v = linear_apply(params["wv"], enc_out, impl=impl).reshape(b, s, n_kv, head_dim)
-    return {"k": k, "v": v}
+    if "wkv" in params:
+        k, v = grouped_linear_apply(params["wkv"], enc_out, impl=impl)
+    else:
+        k = linear_apply(params["wk"], enc_out, impl=impl)
+        v = linear_apply(params["wv"], enc_out, impl=impl)
+    return {"k": k.reshape(b, s, n_kv, head_dim),
+            "v": v.reshape(b, s, n_kv, head_dim)}
 
 
 # ---------------------------------------------------------------------------
@@ -368,8 +389,11 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
 
 
 def swiglu_apply(params: Params, x: jax.Array, impl: str = "ref") -> jax.Array:
-    g = linear_apply(params["wg"], x, impl=impl)
-    h = linear_apply(params["wi"], x, impl=impl)
+    if "wgi" in params:          # packed serving: fused gate/up dispatch
+        g, h = grouped_linear_apply(params["wgi"], x, impl=impl)
+    else:
+        g = linear_apply(params["wg"], x, impl=impl)
+        h = linear_apply(params["wi"], x, impl=impl)
     h = part.act(jax.nn.silu(g) * h, "batch", "seq", "mlp")
     return linear_apply(params["wo"], h, impl=impl)
 

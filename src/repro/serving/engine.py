@@ -3,9 +3,12 @@
 The engine owns the packed/dense param pytree, a SlotPool (decode cache +
 per-slot lengths) and a Scheduler. Each ``step()``:
 
-  1. admits waiting requests into free slots — each admission runs one real
-     batched ``prefill`` over the prompt (bucketed to bound retraces) and
-     seats the resulting KV/state into the slot;
+  1. admits waiting requests into free slots — all admissions of a step
+     share ONE batched ``prefill`` (prompts bucketed, rows padded to a
+     compiled tier) and seat the resulting KV/state into their slots;
+     steady-state backfills are chunked (admission hysteresis, see
+     ``EngineConfig.backfill_chunk``) so retirements don't each pay a
+     single-row prefill dispatch;
   2. runs ONE jit'd ``decode_step`` over the whole ragged slot batch with a
      per-slot ``cache_len`` vector (donated cache buffers);
   3. samples per-slot (greedy / temperature / top-k), advances lengths, and
@@ -80,6 +83,17 @@ class EngineConfig:
     max_admit_per_step: Optional[int] = None  # None → fill every free slot
     pad_prefill: Optional[bool] = None        # None → auto by model family
     min_bucket: int = 8
+    # chunked backfill: in steady state requests retire one at a time, so
+    # naive admission runs a single-row prefill per retirement (~20% of
+    # step time at batch 8). Hold admissions until `backfill_chunk` can be
+    # seated together (or `backfill_max_defer` decode steps pass, or the
+    # engine is idle), then run ONE merged prefill dispatch for all of
+    # them. 1 disables deferral.
+    backfill_chunk: int = 2
+    backfill_max_defer: int = 2
+    # GA-tune pack-time execution plans for packed weights at engine build
+    # (no-op for dense params / already-planned trees)
+    plan_packed: bool = True
 
 
 class InferenceEngine:
@@ -97,6 +111,14 @@ class InferenceEngine:
                 "from naive decode; needs a mask-aware router first")
         self.cfg = cfg
         self.ec = ec = ec or EngineConfig()
+        if ec.plan_packed and params is not None:
+            # GRIM's compile step at engine build: attach GA-tuned
+            # execution plans to packed weights (default plans tune for
+            # this engine's decode batch; plans the packer already tuned —
+            # e.g. pack_params(decode_m=...) — are preserved) and fuse
+            # shared-activation projection groups
+            from repro.kernels.plan import plan_params
+            params = plan_params(params, m=ec.n_slots)
         self.params = params
         self.fns = fns = model_fns(cfg)
         self.pool = SlotPool(fns.init_cache, ec.n_slots, ec.capacity)
@@ -125,6 +147,7 @@ class InferenceEngine:
                                donate_argnums=(3,))
 
         self._key = jax.random.PRNGKey(ec.seed)
+        self._defer_steps = 0   # decode steps the current backfill waited
         # per-slot decode-state rows (host-side mirrors of the ragged batch)
         self._tokens = np.zeros((ec.n_slots, 1), np.int32)
         self._temps = np.zeros((ec.n_slots,), np.float32)
@@ -163,14 +186,28 @@ class InferenceEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _row_tiers(self) -> List[int]:
+        """Admission-batch row counts the prefill program is compiled for:
+        powers of two up to ``n_slots`` (plus ``n_slots`` itself). Bounds
+        retraces to O(log n_slots) per bucket while letting steady-state
+        backfills of 2–4 requests share one dispatch."""
+        tiers, t = [], 1
+        while t < self.ec.n_slots:
+            tiers.append(t)
+            t *= 2
+        tiers.append(self.ec.n_slots)
+        return tiers
+
     def _admit_group(self, group: List) -> None:
-        """One prefill dispatch for same-bucket admissions. Groups of ≥2 are
-        padded to ``n_slots`` rows so only two prefill programs exist per
-        bucket ({1, n_slots}); pad rows alias slot 0 of the group and are
-        overwritten by the real row (reverse-order writes in insert_rows)."""
+        """ONE prefill dispatch for a batch of admissions. Prompts are
+        right-padded to the largest member's bucket (causality keeps pads
+        invisible; per-row ``length`` reads the true last-token logits) and
+        rows are padded up to the next compiled row tier; pad rows alias
+        slot 0 of the group and are overwritten by the real row
+        (reverse-order writes in insert_rows)."""
         k = len(group)
-        bucket = self._bucket(group[0][0].prompt_len)
-        k_pad = 1 if k == 1 else self.ec.n_slots
+        bucket = max(self._bucket(req.prompt_len) for req, _ in group)
+        k_pad = next(t for t in self._row_tiers() if t >= k)
         toks = np.zeros((k_pad, bucket), np.int32)
         lens = np.ones((k_pad,), np.int32)
         temps = np.zeros((k_pad,), np.float32)
@@ -190,6 +227,7 @@ class InferenceEngine:
             use_topk=bool(topks.any()))
         self.pool.insert_rows(pcache, slots, lens[:k])
         self.stats["prefills"] += 1
+        self.stats["prefill_rows"] += k
 
         toks_host = np.asarray(tok_dev)
         now = time.perf_counter()
@@ -204,15 +242,41 @@ class InferenceEngine:
             self._tokens[slot, 0] = tok
             self.stats["tokens_generated"] += 1
 
+    def _should_admit(self) -> bool:
+        """Chunked-backfill hysteresis: batch steady-state admissions into
+        one merged prefill instead of a single-row dispatch per retirement.
+        Admit immediately when idle or when a full chunk can be seated;
+        otherwise defer up to ``backfill_max_defer`` decode steps."""
+        ready = min(self.sched.free_slots(), len(self.sched.waiting))
+        if ready == 0:
+            return False
+        chunk = max(1, min(self.ec.backfill_chunk, self.ec.n_slots))
+        if chunk <= 1 or not self.sched.active or ready >= chunk:
+            return True
+        if self._defer_steps >= self.ec.backfill_max_defer:
+            return True
+        self._defer_steps += 1
+        self.stats["deferred_admissions"] += 1
+        return False
+
     def step(self) -> List[Request]:
         """One engine iteration; returns requests that finished this step."""
-        admitted = self.sched.admit(self.ec.max_admit_per_step)
-        groups: Dict[int, List] = {}
-        for req, slot in admitted:
-            groups.setdefault(self._bucket(req.prompt_len),
-                              []).append((req, slot))
-        for group in groups.values():
-            self._admit_group(group)
+        admitted = self.sched.admit(self.ec.max_admit_per_step) \
+            if self._should_admit() else []
+        if admitted:
+            self._defer_steps = 0
+            if self.pad_prefill:
+                # padded families: ONE merged dispatch for the whole batch
+                # of admissions, whatever their prompt lengths
+                self._admit_group(admitted)
+            else:
+                # recurrent families prefill at exact length (pads would
+                # advance the state) — group by exact prompt length
+                groups: Dict[int, List] = {}
+                for req, slot in admitted:
+                    groups.setdefault(req.prompt_len, []).append((req, slot))
+                for group in groups.values():
+                    self._admit_group(group)
 
         finished: List[Request] = []
         # requests whose first (prefill-sampled) token already completed them
@@ -249,22 +313,22 @@ class InferenceEngine:
 
     def reset_stats(self) -> None:
         self.stats.clear()
-        self.stats.update(decode_steps=0, prefills=0, tokens_generated=0,
+        self.stats.update(decode_steps=0, prefills=0, prefill_rows=0,
+                          deferred_admissions=0, tokens_generated=0,
                           slot_occupancy=[])
 
     def warmup(self, prompt_lens: Sequence[int], gen: int = 2) -> None:
-        """Compile every prefill bucket (both admission tiers: single and
-        n_slots-padded burst) plus the decode/sample programs with throwaway
-        requests, then wipe the bookkeeping — so measured traffic doesn't
-        pay jit compilation inside the timed window."""
+        """Compile every (prefill bucket × admission row tier) program plus
+        the decode/sample programs with throwaway requests, then wipe the
+        bookkeeping — so measured traffic doesn't pay jit compilation
+        inside the timed window."""
         assert not self.sched.has_work(), "warmup() needs an idle engine"
         buckets = sorted({self._bucket(max(1, int(p))) for p in prompt_lens})
         lens = [min(b, self.ec.capacity - gen) for b in buckets]
-        for l in lens:  # burst tier: one grouped prefill padded to n_slots
-            self.generate([np.zeros((l,), np.int32)] * self.ec.n_slots,
-                          max_new_tokens=gen)
-        self.generate([np.zeros((l,), np.int32) for l in lens],
-                      max_new_tokens=gen)          # single tier per bucket
+        for l in lens:
+            for tier in self._row_tiers():
+                self.generate([np.zeros((l,), np.int32)] * tier,
+                              max_new_tokens=gen)
         self.sched.finished.clear()
         self.reset_stats()
 

@@ -1,0 +1,235 @@
+"""Pack-time execution plan layer: plan construction, the GA tuner wiring
+(including its inf-fitness fallback), precomputed one-hot planes, grouped
+packing, params-tree fusion, and the hoisted skip-kernel occupancy mask."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcr import BCRSpec
+from repro.core.bcrc import tbcrc_pack
+from repro.core.tuner import genetic_search, plan_cost_model
+from repro.kernels import bcr_matmul, bcr_matmul_grouped, bcr_spmm_ref
+from repro.kernels.plan import (attach_plan, fuse_packed_projections,
+                                pack_group, plan_params, tune_packed,
+                                tuned_genome)
+
+
+def _pack(n=64, k=96, block=(16, 32), keep=0.25, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (n, k), jnp.float32)
+    spec = BCRSpec(block_shape=block, keep_frac=keep, align=4)
+    return tbcrc_pack(w, spec)
+
+
+# ---------------------------------------------------------------------------
+# Tuner
+# ---------------------------------------------------------------------------
+
+
+def test_genetic_search_inf_everywhere_returns_least_bad():
+    """Over-constrained spaces used to return best=None and crash the
+    caller; now the least-bad genome is returned (fitness may be inf)."""
+    space = {"a": [1, 2, 3]}
+    res = genetic_search(space, lambda g: float("inf"), generations=3,
+                         population=4)
+    assert res.best is not None and res.best["a"] in space["a"]
+    assert res.best_fitness == float("inf")
+
+
+def test_tuned_genome_is_valid_and_cached():
+    g1 = tuned_genome(8, 96, 64, (16, 32), 8, 8, max_group=2)
+    g2 = tuned_genome(8, 96, 64, (16, 32), 8, 8, max_group=2)
+    assert g1 == g2
+    assert g1["m_tile"] % 8 == 0
+    assert g1["grid_order"] in ("mij", "imj")
+    assert g1["group_size"] in (1, 2)
+
+
+def test_plan_cost_model_monotone_in_keep():
+    """Less density → fewer modeled weight bytes → never slower."""
+    genome = {"m_tile": 8, "use_planes": False, "grid_order": "mij",
+              "group_size": 1}
+    t_sparse = plan_cost_model(8, 2048, 2048, (128, 128), 32, 32)(genome)
+    t_dense = plan_cost_model(8, 2048, 2048, (128, 128), 96, 96)(genome)
+    assert t_sparse <= t_dense
+
+
+# ---------------------------------------------------------------------------
+# Planes / grid order dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grid_order", ["mij", "imj"])
+@pytest.mark.parametrize("use_planes", [False, True])
+def test_planned_kernel_variants_match_oracle(grid_order, use_planes):
+    packed = attach_plan(_pack(), {"use_planes": use_planes,
+                                   "grid_order": grid_order, "m_tile": 8})
+    assert packed.plan.use_planes == use_planes
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 96), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(bcr_matmul(x, packed, impl="interpret")),
+        np.asarray(bcr_spmm_ref(x, packed)), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("use_planes", [False, True])
+def test_grouped_kernel_planes_match_per_member(use_planes):
+    members = [_pack(seed=s) for s in range(2)]
+    grouped = pack_group(members, {"use_planes": use_planes, "m_tile": 8})
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 96), jnp.float32)
+    y = bcr_matmul_grouped(x, grouped, impl="interpret")
+    for g, mem in enumerate(members):
+        np.testing.assert_allclose(np.asarray(y[:, g]),
+                                   np.asarray(bcr_spmm_ref(x, mem)),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_tune_packed_stacked_layers():
+    """Scanned-layer packs (leading stacking dim) tune via vmap; slicing
+    a layer out reproduces the per-layer result."""
+    ws = jax.random.normal(jax.random.PRNGKey(3), (3, 64, 96), jnp.float32)
+    spec = BCRSpec(block_shape=(16, 32), keep_frac=0.25, align=4)
+    stacked = tune_packed(jax.vmap(lambda w: tbcrc_pack(w, spec))(ws), m=8)
+    assert stacked.vals.ndim == 5
+    layer0 = jax.tree_util.tree_map(lambda a: a[0], stacked)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 96), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(bcr_matmul(x, layer0, impl="ref")),
+        np.asarray(bcr_matmul(x, tune_packed(tbcrc_pack(ws[0], spec), m=8),
+                              impl="ref")), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Params-tree fusion
+# ---------------------------------------------------------------------------
+
+
+def _linear(seed, n, k):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (n, k), jnp.float32)
+    spec = BCRSpec(block_shape=(16, 32), keep_frac=0.25, align=4)
+    return {"w": w, "packed": {"w_packed": tbcrc_pack(w, spec)}}
+
+
+def test_fuse_qkv_and_gate_up():
+    lin = {name: _linear(i, 64, 96)
+           for i, name in enumerate(("wq", "wk", "wv", "wo", "wg", "wi"))}
+    tree = {"attn": {k: dict(lin[k]["packed"]) for k in ("wq", "wk", "wv",
+                                                         "wo")},
+            "mlp": {k: dict(lin[k]["packed"]) for k in ("wg", "wi", "wo")}}
+    fused = fuse_packed_projections(tree, m=8)
+    assert "wqkv" in fused["attn"] and "wq" not in fused["attn"]
+    assert "wo" in fused["attn"]              # output proj left alone
+    assert "wgi" in fused["mlp"] and "wg" not in fused["mlp"]
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 96), jnp.float32)
+    y = bcr_matmul_grouped(x, fused["attn"]["wqkv"]["w_group"], impl="ref")
+    for g, name in enumerate(("wq", "wk", "wv")):
+        np.testing.assert_allclose(
+            np.asarray(y[:, g]),
+            np.asarray(bcr_matmul(x, lin[name]["packed"]["w_packed"],
+                                  impl="ref")),
+            atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+def test_fuse_skips_mismatched_shapes():
+    """GQA: wq (N≠) cannot group with wk/wv — only K/V fuse."""
+    tree = {"wq": dict(_linear(0, 128, 96)["packed"]),
+            "wk": dict(_linear(1, 64, 96)["packed"]),
+            "wv": dict(_linear(2, 64, 96)["packed"])}
+    fused = fuse_packed_projections(tree, m=8)
+    assert "wkv" in fused and "wq" in fused and "wk" not in fused
+
+
+def test_fuse_requires_layer_identifying_keys():
+    """RWKV mixers reuse wk/wv/wg for projections of DIFFERENT token-
+    shifted activations (no wq/wi present) — they must never fuse."""
+    tree = {"wr": dict(_linear(0, 64, 96)["packed"]),
+            "wk": dict(_linear(1, 64, 96)["packed"]),
+            "wv": dict(_linear(2, 64, 96)["packed"]),
+            "wg": dict(_linear(3, 64, 96)["packed"]),
+            "wo": dict(_linear(4, 64, 96)["packed"])}
+    fused = fuse_packed_projections(tree, m=8)
+    assert set(fused) == {"wr", "wk", "wv", "wg", "wo"}
+
+
+def test_cross_attention_never_fuses_q_with_kv():
+    """Cross-attention Q projects the decoder stream, K/V the encoder
+    output — only K/V may fuse, even when all three shapes match."""
+    tree = {"cross_attn": {k: dict(_linear(i, 64, 96)["packed"])
+                           for i, k in enumerate(("wq", "wk", "wv", "wo"))}}
+    fused = fuse_packed_projections(tree, m=8)
+    assert "wqkv" not in fused["cross_attn"]
+    assert "wq" in fused["cross_attn"] and "wkv" in fused["cross_attn"]
+
+
+def test_oversized_tuned_tile_does_not_expand_batch():
+    """A plan tuned for a larger batch must not inflate a small call's
+    padded row count — the kernel falls back to untiled instead."""
+    packed = attach_plan(_pack(), {"m_tile": 64})
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 96), jnp.float32)
+    y = bcr_matmul(x, packed, impl="interpret")
+    assert y.shape == (8, 64)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(bcr_spmm_ref(x, packed)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_plan_params_preserves_pretuned_plans():
+    """An explicitly tuned plan (m_tile set) must survive engine-build
+    re-planning with a different batch hint."""
+    packed = tune_packed(_pack(), m=64)
+    tree = {"lin": {"w_packed": packed}}
+    out = plan_params(tree, m=8)
+    assert out["lin"]["w_packed"].plan.m_tile == packed.plan.m_tile
+
+
+def test_plan_params_idempotent():
+    tree = {"attn": {k: dict(_linear(i, 64, 96)["packed"])
+                     for i, k in enumerate(("wq", "wk", "wv"))}}
+    once = plan_params(tree, m=8)
+    twice = plan_params(once, m=8)
+    assert "wqkv" in once["attn"]
+    assert jax.tree_util.tree_structure(once) == \
+        jax.tree_util.tree_structure(twice)
+
+
+def test_grouped_bias_split():
+    from repro.core.sparse_linear import grouped_linear_apply
+    members = [_pack(seed=s) for s in range(2)]
+    bs = [jnp.full((64,), float(s + 1)) for s in range(2)]
+    gp = {"w_group": pack_group(members),
+          "b": jnp.stack(bs, axis=-2)}
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 96), jnp.float32)
+    outs = grouped_linear_apply(gp, x, impl="ref")
+    for g, (mem, b) in enumerate(zip(members, bs)):
+        np.testing.assert_allclose(
+            np.asarray(outs[g]),
+            np.asarray(bcr_spmm_ref(x, mem) + b), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Skip-kernel occupancy mask hoist
+# ---------------------------------------------------------------------------
+
+
+def test_pack_skip_precomputes_row_mask():
+    from repro.kernels.bcr_spmm_skip import (SkipPacked, bcr_spmm_skip,
+                                             bcr_spmm_skip_ref, pack_skip)
+    w = np.array(jax.random.normal(jax.random.PRNGKey(0), (96, 96),
+                                   jnp.float32))
+    w[:32, :] = 0.0     # whole block row pruned → rows must mask to zero
+    spec = BCRSpec(block_shape=(32, 32), keep_frac=0.1, balanced=False,
+                   align=1)
+    packed = pack_skip(jnp.asarray(w), spec)
+    assert packed.row_mask is not None and packed.row_mask.shape == (96,)
+    assert not bool(packed.row_mask[:32].any())
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 96), jnp.float32)
+    y = bcr_spmm_skip(x, packed, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(bcr_spmm_skip_ref(x, packed)),
+                               atol=1e-4, rtol=1e-4)
+    # hand-rolled packs without the precomputed mask still work (rebuilt
+    # in-call)
+    legacy = SkipPacked(packed.tiles, packed.bi, packed.bj, packed.last,
+                        packed.shape, packed.block_shape)
+    y2 = bcr_spmm_skip(x, legacy, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y), atol=1e-5)
