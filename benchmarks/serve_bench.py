@@ -8,6 +8,13 @@ freed slots immediately, so the padded decode batch stays full.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --arch llama3.2-1b \
         --slots 4 8 --keeps 0 0.25 --requests 16 --gen 16
+
+``--long-context`` adds the block-paged KV section: at capacity ≥ 2048
+with mixed mostly-short prompts, the paged engine (page pool + block
+tables + length-aware decode) is measured against the masked-dense engine
+at matched occupancy, with per-step KV bytes-read accounting for both
+(`paged_vs_masked` / `long_context` in the JSON; ``--min-paged-vs-masked``
+turns the ratio into a CI gate).
 """
 
 from __future__ import annotations
@@ -26,6 +33,23 @@ from repro.models.api import model_fns
 from repro.serving import EngineConfig, InferenceEngine
 
 
+def scaled_cfg(args, keep):
+    """The sweep's serving-scale smoke config (shared with the long-context
+    section so both measure the same model body): d_model/d_ff/layers
+    overrides until the decode step is weight-bound."""
+    cfg = get_smoke_config(args.arch)
+    over = {"bcr_keep_frac": keep,
+            "bcr_block": (args.bcr_block, args.bcr_block)}
+    if args.d_model:
+        over.update(d_model=args.d_model,
+                    head_dim=args.d_model // cfg.num_heads)
+    if args.d_ff:
+        over["d_ff"] = args.d_ff
+    if args.layers:
+        over["num_layers"] = args.layers
+    return dataclasses.replace(cfg, **over)
+
+
 def make_requests(cfg, n, prompt_lens, gen_max, seed=0):
     """Mixed load: per-request prompt length AND generation length (real
     traffic never finishes in lockstep — that raggedness is exactly what
@@ -38,11 +62,14 @@ def make_requests(cfg, n, prompt_lens, gen_max, seed=0):
     return prompts, gens
 
 
-def bench_engine(cfg, params, prompts, gens, n_slots, capacity):
+def bench_engine(cfg, params, prompts, gens, n_slots, capacity,
+                 page_size=0):
     eng = InferenceEngine(cfg, params,
-                          EngineConfig(n_slots=n_slots, capacity=capacity))
-    # jit compiles (prefill buckets, decode, sample) stay outside the timed
-    # window; warmup() wipes the bookkeeping afterwards
+                          EngineConfig(n_slots=n_slots, capacity=capacity,
+                                       page_size=page_size))
+    # jit compiles (prefill buckets, decode — incl. every paged
+    # block-table width — and sample) stay outside the timed window;
+    # warmup() wipes the bookkeeping afterwards
     eng.warmup([len(p) for p in prompts])
     t0 = time.perf_counter()
     rids = [eng.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
@@ -50,9 +77,53 @@ def bench_engine(cfg, params, prompts, gens, n_slots, capacity):
     dt = time.perf_counter() - t0
     toks = sum(len(done[r].generated) for r in rids)
     occ = eng.stats["slot_occupancy"]
+    steps = max(eng.stats["decode_steps"], 1)
     return {"tok_s": toks / dt, "elapsed_s": dt, "tokens": toks,
             "decode_steps": eng.stats["decode_steps"],
-            "mean_occupancy": float(np.mean(occ)) if occ else 0.0}
+            "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+            # KV traffic accounting: what the decode dispatch reads
+            # (masked-dense → B×capacity; paged → B×live-bucket) and the
+            # per-slot live-page floor the Pallas kernel achieves
+            "kv_bytes_per_step": eng.stats["kv_bytes_read"] / steps,
+            "kv_bytes_per_step_live": (eng.stats["kv_bytes_read_live"]
+                                       / steps)}
+
+
+def bench_long_context(args):
+    """Capacity-dominated regime (capacity ≥ 2048, mixed mostly-short
+    prompts): masked-dense decode pays the full provisioned cache every
+    step, paged decode pays the live bucket. Dense weights on purpose —
+    this isolates the KV-traffic lever from the weight-format lever the
+    main sweep measures."""
+    cap = args.long_capacity
+    cfg = scaled_cfg(args, keep=0.0)
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    prompts, gens = make_requests(cfg, args.long_requests,
+                                  args.long_prompt_lens, args.long_gen,
+                                  seed=1)
+    n_slots = max(args.slots)
+    masked = bench_engine(cfg, params, prompts, gens, n_slots, cap)
+    paged = bench_engine(cfg, params, prompts, gens, n_slots, cap,
+                         page_size=args.page_size)
+    row = {
+        "section": "long_context", "arch": args.arch, "batch": n_slots,
+        "capacity": cap, "page_size": args.page_size,
+        "prompt_lens": list(args.long_prompt_lens),
+        "d_model": cfg.d_model,
+        "paged": paged, "masked": masked,
+        "paged_vs_masked": paged["tok_s"] / masked["tok_s"],
+        "kv_bytes_capacity_ratio": (paged["kv_bytes_per_step"]
+                                    / masked["kv_bytes_per_step"]),
+    }
+    print(f"long-context cap={cap} batch={n_slots}: paged "
+          f"{paged['tok_s']:.1f} tok/s vs masked-dense "
+          f"{masked['tok_s']:.1f} tok/s → {row['paged_vs_masked']:.2f}x; "
+          f"KV bytes/step {paged['kv_bytes_per_step']/1e3:.0f}K (live "
+          f"{paged['kv_bytes_per_step_live']/1e3:.0f}K) vs "
+          f"{masked['kv_bytes_per_step']/1e3:.0f}K "
+          f"({row['kv_bytes_capacity_ratio']:.2f}x of capacity reads)")
+    return row
 
 
 def bench_static(cfg, params, prompts, gens, batch, capacity):
@@ -103,22 +174,26 @@ def main():
     ap.add_argument("--min-packed-vs-dense", type=float, default=0.0,
                     help="exit 1 if packed engine tok/s ÷ dense engine "
                          "tok/s at the largest --slots falls below this")
+    # long-context paged-KV section: capacity ≥ 2048 with mixed mostly-
+    # short prompts — the regime where masked-dense decode pays capacity
+    # bandwidth every step and block paging pays live tokens
+    ap.add_argument("--long-context", action="store_true",
+                    help="also run the paged-vs-masked long-context bench")
+    ap.add_argument("--long-capacity", type=int, default=4096)
+    ap.add_argument("--long-prompt-lens", type=int, nargs="+",
+                    default=[16, 64, 256])
+    ap.add_argument("--long-requests", type=int, default=10)
+    ap.add_argument("--long-gen", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--min-paged-vs-masked", type=float, default=0.0,
+                    help="exit 1 if long-context paged tok/s ÷ masked-"
+                         "dense tok/s falls below this")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
     results = []
     for keep in args.keeps:
-        cfg = get_smoke_config(args.arch)
-        over = {"bcr_keep_frac": keep,
-                "bcr_block": (args.bcr_block, args.bcr_block)}
-        if args.d_model:
-            over.update(d_model=args.d_model,
-                        head_dim=args.d_model // cfg.num_heads)
-        if args.d_ff:
-            over["d_ff"] = args.d_ff
-        if args.layers:
-            over["num_layers"] = args.layers
-        cfg = dataclasses.replace(cfg, **over)
+        cfg = scaled_cfg(args, keep)
         fns = model_fns(cfg)
         params = fns.init_params(jax.random.PRNGKey(0))
         if keep > 0:
@@ -152,10 +227,29 @@ def main():
             print(f"packed keep={r['keep_frac']} batch={r['batch']}: "
                   f"{ratio:.2f}x dense engine")
 
+    long_row = None
+    if args.long_context:
+        long_row = bench_long_context(args)
+        results.append(long_row)
+
+    payload = {"benchmark": "serve", "packed_vs_dense": ratios,
+               "results": results}
+    if long_row is not None:
+        payload["paged_vs_masked"] = long_row["paged_vs_masked"]
+        payload["long_context"] = long_row
     with open(args.out, "w") as f:
-        json.dump({"benchmark": "serve", "packed_vs_dense": ratios,
-                   "results": results}, f, indent=2)
+        json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
+
+    if args.min_paged_vs_masked > 0:
+        if long_row is None:
+            raise SystemExit("--min-paged-vs-masked needs --long-context")
+        if long_row["paged_vs_masked"] < args.min_paged_vs_masked:
+            raise SystemExit(
+                f"PERF REGRESSION: paged decode "
+                f"{long_row['paged_vs_masked']:.2f}x masked-dense at "
+                f"matched occupancy (< {args.min_paged_vs_masked}x "
+                f"required)")
 
     if args.min_packed_vs_dense > 0:
         if not ratios:

@@ -56,7 +56,11 @@ class ModelConfig:
     dtype: str = "bfloat16"           # activation/compute dtype
     param_dtype: str = "float32"
     cache_dtype: str = "bfloat16"
-    attn_impl: str = "flash"          # flash | dense
+    # flash | dense | pallas | pallas_interpret, plus paged |
+    # paged_interpret which select the Pallas flash-decode kernel for
+    # block-paged decode (prefill then behaves like flash); any other
+    # value with a paged cache uses the pure-JAX gather ref
+    attn_impl: str = "flash"
     q_chunk: int = 512
     kv_chunk: int = 1024
     scan_layers: bool = True

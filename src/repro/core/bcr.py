@@ -85,6 +85,13 @@ class BCRSpec:
         return best[1]
 
 
+def kept_align(block_shape: Tuple[int, int]) -> int:
+    """Kept-count granule for a block shape: 8 (TPU sublane) when the block
+    affords it, finer for small blocks so small keep_fracs stay reachable.
+    Shared by the pack-time prune filter and auto block-size selection."""
+    return max(1, min(8, block_shape[0] // 4, block_shape[1] // 4))
+
+
 def choose_block_shape(
     shape: Tuple[int, int], target: Tuple[int, int] = (256, 256)
 ) -> Tuple[int, int]:

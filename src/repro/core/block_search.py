@@ -92,6 +92,65 @@ def wallclock_cpu_runner(layer: SynthLayer, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def wallclock_plan_fitness(m: int, k: int, n: int,
+                           block_shape: Tuple[int, int], r_keep: int,
+                           c_keep: int, *, impl: str = "ref",
+                           iters: int = 3) -> Callable[[dict], float]:
+    """Measured-latency fitness for the §4.5 plan tuner (opt-in backend —
+    ``tuner.plan_cost_model``'s analytic roofline stays the default).
+
+    Extends ``wallclock_cpu_runner``'s mechanism to the dispatch genome: a
+    packed weight with EXACTLY this geometry — (nb_r, nb_c, r_keep,
+    c_keep) vals, arange index planes; per §5.1 only the rate matters for
+    latency, not which weights survive — is synthesized once, then each
+    genome is applied via ``attach_plan``/``pack_group`` and the jitted
+    matmul is timed on the host. ``impl`` must be the path serving will
+    actually dispatch (``launch.serve --plan-fitness`` wires
+    ``cfg.kernel_impl`` through) — timing a different impl would rank
+    knobs by noise. Genomes whose ``m_tile`` cannot tile the padded batch
+    score ``inf``.
+    """
+    from repro.core.bcrc import TBCRC
+
+    br, bc = block_shape
+    nb_r, nb_c = n // br, k // bc
+    key = jax.random.PRNGKey(0)
+    vals = jax.random.normal(key, (nb_r, nb_c, r_keep, c_keep), jnp.float32)
+    row_idx = jnp.broadcast_to(jnp.arange(r_keep, dtype=jnp.int32),
+                               (nb_r, nb_c, r_keep))
+    col_idx = jnp.broadcast_to(jnp.arange(c_keep, dtype=jnp.int32),
+                               (nb_r, nb_c, c_keep))
+    packed = TBCRC(vals=vals, row_idx=row_idx, col_idx=col_idx,
+                   shape=(n, k), block_shape=block_shape)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+
+    def fitness(genome: dict) -> float:
+        from repro.kernels.ops import bcr_matmul, bcr_matmul_grouped
+        from repro.kernels.plan import attach_plan, pack_group
+
+        mt = int(genome.get("m_tile", 8) or 8)
+        if mt <= 0 or mt % 8:
+            return float("inf")   # same legality rule as plan_cost_model
+        grp = int(genome.get("group_size", 1))
+        try:
+            if grp > 1:
+                grouped = pack_group([packed] * grp, genome)
+                fn = jax.jit(lambda a: bcr_matmul_grouped(
+                    a, grouped, impl=impl))
+            else:
+                planned = attach_plan(packed, genome)
+                fn = jax.jit(lambda a: bcr_matmul(a, planned, impl=impl))
+            fn(x).block_until_ready()
+        except Exception:
+            return float("inf")     # illegal genome for this shape
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(x).block_until_ready()
+        return (time.perf_counter() - t0) / iters / grp
+
+    return fitness
+
+
 def find_opt_blk(
     m: int, k: int, n: int, keep_frac: float,
     block_sizes: Sequence[Tuple[int, int]],

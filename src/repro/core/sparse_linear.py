@@ -49,21 +49,24 @@ def linear_apply(params: Params, x: jax.Array, *, impl: str = "ref") -> jax.Arra
     return y
 
 
-def grouped_linear_apply(params: Params, x: jax.Array, *,
-                         impl: str = "ref") -> tuple:
+def grouped_linear_apply(params: Params, x: jax.Array, *, impl: str = "ref",
+                         epilogue: Optional[str] = None):
     """Apply a fused projection group ``{"w_group": GroupedTBCRC[, "b"]}``
     sharing activation ``x``; returns one output per member (Q/K/V or
-    gate/up order is the member order used at fuse time)."""
+    gate/up order is the member order used at fuse time).
+
+    Bias and ``epilogue`` fuse into the matmul dispatch (the Pallas
+    kernel's emit step / the ref path's fp32 accumulator) instead of
+    running as a separate elementwise pass. ``epilogue="swiglu"`` returns
+    the single activated hidden ``silu(y_gate) * y_up`` directly.
+    """
     from repro.kernels.ops import bcr_matmul_grouped  # lazy: core <-> kernels
     g = params["w_group"].group_size
-    y = bcr_matmul_grouped(x, params["w_group"], impl=impl)  # (..., G, N)
-    outs = []
-    for gi in range(g):
-        o = y[..., gi, :]
-        if "b" in params:
-            o = o + params["b"][..., gi, :].astype(o.dtype)
-        outs.append(o)
-    return tuple(outs)
+    y = bcr_matmul_grouped(x, params["w_group"], impl=impl,
+                           bias=params.get("b"), epilogue=epilogue)
+    if epilogue == "swiglu":
+        return y                                       # (..., N)
+    return tuple(y[..., gi, :] for gi in range(g))     # (..., G, N) split
 
 
 def pack_linear(params: Params, spec: BCRSpec, *,

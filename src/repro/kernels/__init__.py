@@ -1,6 +1,6 @@
 """Pallas TPU kernels: BCR sparse matmul (balanced + grouped-projection +
-block-skipping) and fused flash attention, with jnp oracles and the
-pack-time execution-plan layer."""
+block-skipping), fused flash attention, and block-paged flash-decode, with
+jnp oracles and the pack-time execution-plan layer."""
 
 from repro.kernels.bcr_spmm import bcr_spmm, bcr_spmm_grouped  # noqa: F401
 from repro.kernels.bcr_spmm_skip import (  # noqa: F401
@@ -12,11 +12,14 @@ from repro.kernels.flash_attention import (  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     bcr_matmul, bcr_matmul_grouped, default_impl,
 )
+from repro.kernels.paged_decode_attention import (  # noqa: F401
+    paged_decode_attention, paged_kv_bytes,
+)
 from repro.kernels.plan import (  # noqa: F401
     BCRPlan, GroupedTBCRC, attach_plan, fuse_packed_projections, pack_group,
     plan_params, tune_packed, tuned_genome,
 )
 from repro.kernels.ref import (  # noqa: F401
     bcr_spmm_gather_ref, bcr_spmm_grouped_ref, bcr_spmm_packed_ref,
-    bcr_spmm_ref, masked_dense_ref,
+    bcr_spmm_ref, masked_dense_ref, paged_decode_attention_ref,
 )

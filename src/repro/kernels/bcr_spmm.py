@@ -31,7 +31,10 @@ The pack-time execution plan (kernels/plan.py) steers dispatch:
 ``bcr_spmm_grouped`` fuses G same-shaped packed weights that share the same
 activation (Q/K/V, gate/up): one ``pallas_call``, the ``x`` block is DMA'd
 once per (i, j) step for the whole group, the per-grid-step launch cost and
-the ``m·k·2·nb_r`` HBM x re-reads are amortized G-fold.
+the ``m·k·2·nb_r`` HBM x re-reads are amortized G-fold. Its emit step fuses
+the per-member bias add and (for gate/up) the SwiGLU activation straight
+off the fp32 VMEM accumulator, so grouped projections pay no separate
+elementwise dispatch after the matmul.
 
 Register-level LRE (§4.4) maps to: the accumulator and the ``x`` block stay
 resident in VMEM across grid steps that share them; the gather one-hot is
@@ -207,9 +210,31 @@ def bcr_spmm(
 # ---------------------------------------------------------------------------
 
 
-def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
+def _grouped_emit(o_ref, acc_ref, bias_ref, epilogue):
+    """Fused epilogue at the last contraction step: per-member bias add
+    (fp32, straight off the accumulator) and optionally the gate/up
+    activation — the elementwise passes the model otherwise dispatches
+    separately after the matmul.
+
+    ``epilogue``: None → emit every member ``(G, M_t, br)``; ``"swiglu"``
+    → emit ``silu(acc[0]) * acc[1]`` as one ``(M_t, br)`` block (valid
+    per-block: the accumulator is already dense in output coordinates, and
+    SwiGLU is elementwise over N).
+    """
+    acc = acc_ref[...]
+    if bias_ref is not None:
+        acc = acc + bias_ref[...].astype(jnp.float32)[:, None, :]
+    if epilogue == "swiglu":
+        o_ref[...] = (jax.nn.silu(acc[0]) * acc[1]).astype(o_ref.dtype)
+    else:
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, *rest,
                         nb_c: int, block_rows: int, block_cols: int,
-                        group: int):
+                        group: int, has_bias: bool, epilogue):
+    bias_ref = rest[0] if has_bias else None
+    o_ref, acc_ref = rest[-2], rest[-1]
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -224,11 +249,13 @@ def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
 
     @pl.when(j == nb_c - 1)
     def _emit():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        _grouped_emit(o_ref, acc_ref, bias_ref, epilogue)
 
 
-def _grouped_kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, o_ref,
-                           acc_ref, *, nb_c: int, group: int):
+def _grouped_kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, *rest,
+                           nb_c: int, group: int, has_bias: bool, epilogue):
+    bias_ref = rest[0] if has_bias else None
+    o_ref, acc_ref = rest[-2], rest[-1]
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -243,14 +270,17 @@ def _grouped_kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, o_ref,
 
     @pl.when(j == nb_c - 1)
     def _emit():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        _grouped_emit(o_ref, acc_ref, bias_ref, epilogue)
 
 
-@functools.partial(jax.jit, static_argnames=("m_tile", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("m_tile", "epilogue", "interpret"))
 def bcr_spmm_grouped(
     x: jax.Array,
     grouped,                       # plan.GroupedTBCRC
     *,
+    bias: Optional[jax.Array] = None,      # (G, N)
+    epilogue: Optional[str] = None,        # None | "swiglu"
     m_tile: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -259,7 +289,10 @@ def bcr_spmm_grouped(
     One grid step serves every group member: ``x``'s block (and the VMEM
     residency the gathered form rides on) is shared, so activation HBM
     traffic and grid-step overhead are both amortized G-fold vs G separate
-    ``bcr_spmm`` calls.
+    ``bcr_spmm`` calls. ``bias``/``epilogue`` fuse the post-matmul
+    elementwise pass into the emit step (off the fp32 VMEM accumulator, no
+    extra HBM round-trip); ``epilogue="swiglu"`` collapses a G=2 gate/up
+    group into its ``(M, N)`` activated hidden.
     """
     m, k = x.shape
     n = grouped.shape[0]
@@ -278,24 +311,28 @@ def bcr_spmm_grouped(
     order = plan.grid_order if plan is not None else "mij"
     use_planes = plan is not None and plan.use_planes
 
+    if epilogue == "swiglu" and g_size != 2:
+        raise ValueError(f"swiglu epilogue needs a gate/up pair, got "
+                         f"group_size={g_size}")
     grid, norm, x_map, out_map3 = _grid_and_maps(order, m_steps, nb_r, nb_c)
     tile_i = lambda *g: (0, norm(*g)[1], norm(*g)[2], 0, 0)
     out_map = lambda *g: (0,) + out_map3(*g)
 
     if use_planes:
         kernel = functools.partial(_grouped_kernel_planes, nb_c=nb_c,
-                                   group=g_size)
+                                   group=g_size, has_bias=bias is not None,
+                                   epilogue=epilogue)
         in_specs = [
             pl.BlockSpec((m_tile, bc), x_map),
             pl.BlockSpec((g_size, 1, 1, r_keep, c_keep), tile_i),
             pl.BlockSpec((g_size, 1, 1, bc, c_keep), tile_i),
             pl.BlockSpec((g_size, 1, 1, r_keep, br), tile_i),
         ]
-        operands = (x, grouped.vals, plan.gather_planes, plan.scatter_planes)
+        operands = [x, grouped.vals, plan.gather_planes, plan.scatter_planes]
     else:
         kernel = functools.partial(
             _grouped_kernel_idx, nb_c=nb_c, block_rows=br, block_cols=bc,
-            group=g_size)
+            group=g_size, has_bias=bias is not None, epilogue=epilogue)
         in_specs = [
             pl.BlockSpec((m_tile, bc), x_map),
             pl.BlockSpec((g_size, 1, 1, r_keep, c_keep), tile_i),
@@ -304,14 +341,25 @@ def bcr_spmm_grouped(
             pl.BlockSpec((g_size, 1, 1, c_keep),
                          lambda *g: (0, norm(*g)[1], norm(*g)[2], 0)),
         ]
-        operands = (x, grouped.vals, grouped.row_idx, grouped.col_idx)
+        operands = [x, grouped.vals, grouped.row_idx, grouped.col_idx]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec(
+            (g_size, br), lambda *g: (0, norm(*g)[1])))
+        operands.append(bias)
+
+    if epilogue == "swiglu":
+        out_spec = pl.BlockSpec((m_tile, br), out_map3)
+        out_shape = jax.ShapeDtypeStruct((m, n), x.dtype)
+    else:
+        out_spec = pl.BlockSpec((g_size, m_tile, br), out_map)
+        out_shape = jax.ShapeDtypeStruct((g_size, m, n), x.dtype)
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((g_size, m_tile, br), out_map),
-        out_shape=jax.ShapeDtypeStruct((g_size, m, n), x.dtype),
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((g_size, m_tile, br), jnp.float32)],
         interpret=interpret,
         name="bcr_spmm_grouped",

@@ -91,18 +91,23 @@ def bcr_matmul(
     return y2.reshape(*batch, n)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "m_tile"))
+@functools.partial(jax.jit, static_argnames=("impl", "m_tile", "epilogue"))
 def bcr_matmul_grouped(
     x: jax.Array,
     grouped,                        # plan.GroupedTBCRC
     *,
     impl: Impl = "ref",
     m_tile: int | None = None,
+    bias: jax.Array | None = None,        # (G, N)
+    epilogue: str | None = None,          # None | "swiglu"
 ) -> jax.Array:
     """y[..., G, N] = x[..., K] @ W_g.T for G grouped packed weights.
 
     One fused dispatch for the whole group (the activation is read once);
-    callers split the G axis back into Q/K/V (or gate/up).
+    callers split the G axis back into Q/K/V (or gate/up). ``bias`` and
+    ``epilogue`` ride the kernel's emit step (or the ref path's fp32
+    accumulator), so grouped projections pay no separate elementwise pass;
+    ``epilogue="swiglu"`` returns the activated ``(..., N)`` hidden.
     """
     *batch, k = x.shape
     n = grouped.shape[0]
@@ -112,11 +117,16 @@ def bcr_matmul_grouped(
 
     if impl in ("pallas", "interpret"):
         x2 = _pad_rows(x2, m_tile or _SUBLANE)
-        yg = bcr_spmm_grouped(x2, grouped, m_tile=m_tile,
+        yg = bcr_spmm_grouped(x2, grouped, bias=bias, epilogue=epilogue,
+                              m_tile=m_tile,
                               interpret=(impl == "interpret"))
+        if epilogue == "swiglu":
+            return yg[:m].reshape(*batch, n)
         y2 = yg[:, :m].transpose(1, 0, 2)             # (M, G, N)
+        return y2.reshape(*batch, g, n)
     elif impl == "ref":
-        y2 = ref_mod.bcr_spmm_grouped_ref(x2, grouped)
+        y2 = ref_mod.bcr_spmm_grouped_ref(x2, grouped, bias=bias,
+                                          epilogue=epilogue)
     elif impl == "dense_ref":
         # per-member dense-reconstruction oracle (W-shaped HLO on purpose)
         members = [TBCRC(vals=grouped.vals[gi], row_idx=grouped.row_idx[gi],
@@ -124,7 +134,10 @@ def bcr_matmul_grouped(
                          block_shape=grouped.block_shape)
                    for gi in range(g)]
         y2 = jnp.stack([ref_mod.bcr_spmm_ref(x2, mem) for mem in members],
-                       axis=1)
+                       axis=1).astype(jnp.float32)
+        y2 = ref_mod.grouped_epilogue(y2, bias, epilogue, x.dtype)
     else:
         raise ValueError(f"unknown impl {impl!r} for grouped matmul")
+    if epilogue == "swiglu":
+        return y2.reshape(*batch, n)
     return y2.reshape(*batch, g, n)

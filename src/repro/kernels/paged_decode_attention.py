@@ -1,0 +1,169 @@
+"""Pallas TPU flash-decode over a block-paged KV cache.
+
+The masked-dense ``decode_attention`` reads the ENTIRE ``(B, capacity, Hkv,
+D)`` cache every step and relies on a ``-1e30`` mask to discard dead
+positions — bytes per step scale with provisioned capacity, not with what
+any request has actually generated. This kernel applies GRIM's core move
+(skip pruned blocks at block granularity instead of masking them) to the
+KV cache: K/V live in a shared page pool ``(n_pages, page_size, Hkv, D)``
+and each slot owns a block table of physical page ids, so the grid only
+*reads* each slot's live pages.
+
+grid = (B, Hkv, n_table_cols), pages innermost. Per (slot b, kv-head h):
+
+  1. the block table and length vector arrive via scalar prefetch, so the
+     K/V BlockSpec index maps can translate the logical page ``p`` of slot
+     ``b`` into a physical page id *before* the body runs;
+  2. dead steps (``p`` at/past the slot's live page count) clamp the index
+     map to the last live page — Pallas elides the DMA when consecutive
+     grid steps map to the same block, so a slot's HBM traffic is its live
+     pages, not the table width — and skip all compute via ``pl.when``;
+  3. live steps run one online-softmax accumulation over the page: all G
+     q-heads of kv-head h (GQA group) share the page read; only the FINAL
+     partial page pays a positional mask (interior pages are fully live);
+  4. the output block is revisited across the page sweep and written once,
+     at the last grid step.
+
+VMEM residency per (b, h): q (G, D), one K page + one V page, and the
+(G, 1)/(G, D) online-softmax state — independent of context length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+_SUBLANE = 8
+
+
+def _kernel(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_size: int, n_cols: int,
+            scale: float):
+    p = pl.program_id(2)                  # logical page of this slot
+    b = pl.program_id(0)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(p * page_size < length)
+    def _page():
+        q = q_ref[0, 0]                   # (G, D)
+        k = k_ref[0, :, 0, :]             # (page_size, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page_size)
+        # only the final partial page has dead tail positions
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]               # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        prob = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + prob.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            prob.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_cols - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jax.Array,              # (B, 1, H, D)
+    k_pages: jax.Array,        # (n_pages, page_size, Hkv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_cols) int32 physical page ids
+    cache_len: jax.Array,      # (B,) valid positions incl. the new token
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-step attention against each slot's live pages only.
+
+    ``block_tables`` may be narrower than the slot's full capacity — the
+    caller hands over only as many columns as the longest live slot needs
+    (bucketed by the engine); entries past a slot's live pages are never
+    read (index-map clamp + ``pl.when``). Returns ``(B, 1, H, D)``.
+    """
+    b, s, h, d = q.shape
+    assert s == 1, "paged_decode_attention is a single-step kernel"
+    n_pages, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    n_cols = block_tables.shape[1]
+    scale = d ** -0.5
+
+    # (B, Hkv, G, D) with the GQA group padded to the sublane granule so
+    # the (G, page_size) logits tile is legal on TPU
+    qg = q.reshape(b, hkv, g, d)
+    gp = -(-g // _SUBLANE) * _SUBLANE
+    if gp != g:
+        qg = jnp.concatenate(
+            [qg, jnp.zeros((b, hkv, gp - g, d), qg.dtype)], axis=2)
+
+    lens = jnp.asarray(cache_len, jnp.int32)
+    # live page count per slot, floored at 1 so the dead-step clamp below
+    # always lands on a real table entry
+    live = jnp.maximum(-(-lens // page_size), 1)
+
+    def k_map(b_, h_, p_, bt_ref, live_ref, len_ref):
+        # dead steps re-reference the slot's last live page: the block
+        # index is unchanged from the previous step, so Pallas skips the
+        # DMA — per-slot HBM traffic is live pages, not table width
+        return bt_ref[b_, jnp.minimum(p_, live_ref[b_] - 1)], 0, h_, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_cols),
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, d),
+                         lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d), k_map),
+            pl.BlockSpec((1, page_size, 1, d), k_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, d),
+                               lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gp, 1), jnp.float32),    # running max m
+            pltpu.VMEM((gp, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((gp, d), jnp.float32),    # output accumulator
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, page_size=page_size, n_cols=n_cols, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, d), q.dtype),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(block_tables.astype(jnp.int32), live, lens, qg, k_pages, v_pages)
+    return out[:, :, :g, :].reshape(b, 1, h, d)
+
+
+def paged_kv_bytes(cache_len, page_size: int, hkv: int, d: int,
+                   dtype_bytes: int = 2) -> int:
+    """HBM bytes this kernel reads per layer per step: each slot's live
+    pages, K + V (the masked-dense path reads B × capacity instead).
+
+    ``cache_len`` follows the kernel's contract — valid positions
+    INCLUDING the step's new token (the engine's ``kv_bytes_read_live``
+    stat is the same sum over all attention layers, fed ``lens + 1``
+    since pool lengths exclude the token being decoded)."""
+    import numpy as np
+    lens = np.maximum(np.asarray(cache_len), 0)
+    pages = np.maximum(-(-lens // page_size), 1) * (lens > 0)
+    return int(pages.sum()) * page_size * hkv * d * dtype_bytes * 2

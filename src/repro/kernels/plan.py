@@ -275,30 +275,51 @@ def plan_search_space(m: int, block_shape: Tuple[int, int],
 
 def tuned_genome(m: int, k: int, n: int, block_shape: Tuple[int, int],
                  r_keep: int, c_keep: int, *, max_group: int = 1,
-                 weight_bytes_per_el: int = 2) -> Genome:
-    """§4.5 genetic search over (m_tile, grid order, group size, planes)
-    with the analytic roofline fitness; memoized per unique layer shape so
-    a 126-layer stack tunes once."""
+                 weight_bytes_per_el: int = 2, fitness: str = "analytic",
+                 fitness_impl: str = "ref") -> Genome:
+    """§4.5 genetic search over (m_tile, grid order, group size, planes);
+    memoized per unique layer shape so a 126-layer stack tunes once.
+
+    ``fitness`` picks the backend: "analytic" (default — the
+    ``tuner.plan_cost_model`` roofline, no hardware in the loop) or
+    "wallclock" (opt-in — ``block_search.wallclock_plan_fitness`` times
+    the jitted matmul per genome on the host, resolving knobs the
+    analytic model ties on). ``fitness_impl`` is the kernel impl the
+    wallclock backend times — it must match what serving will dispatch
+    (callers thread ``cfg.kernel_impl`` through), since e.g. the ref path
+    is insensitive to m_tile/grid_order/planes."""
     key = (m, k, n, block_shape, r_keep, c_keep, max_group,
-           weight_bytes_per_el)
+           weight_bytes_per_el, fitness, fitness_impl)
     if key not in _GENOME_CACHE:
         from repro.core.tuner import genetic_search, plan_cost_model
-        fitness = plan_cost_model(
-            m, k, n, block_shape, r_keep, c_keep,
-            weight_bytes_per_el=weight_bytes_per_el)
+        if fitness == "wallclock":
+            from repro.core.block_search import wallclock_plan_fitness
+            fit = wallclock_plan_fitness(m, k, n, block_shape, r_keep,
+                                         c_keep, impl=fitness_impl)
+            pop, gens = 8, 4     # measured evals are pricier than math
+        elif fitness == "analytic":
+            fit = plan_cost_model(
+                m, k, n, block_shape, r_keep, c_keep,
+                weight_bytes_per_el=weight_bytes_per_el)
+            pop, gens = 16, 8
+        else:
+            raise ValueError(f"unknown plan fitness backend {fitness!r}")
         res = genetic_search(plan_search_space(m, block_shape, max_group),
-                             fitness, population=16, generations=8, seed=0)
+                             fit, population=pop, generations=gens, seed=0)
         _GENOME_CACHE[key] = dict(res.best)
     return dict(_GENOME_CACHE[key])
 
 
-def tune_packed(packed: TBCRC, *, m: int = 8, max_group: int = 1) -> TBCRC:
+def tune_packed(packed: TBCRC, *, m: int = 8, max_group: int = 1,
+                fitness: str = "analytic",
+                fitness_impl: str = "ref") -> TBCRC:
     """Attach a GA-tuned plan to ``packed`` (decode batch hint ``m``)."""
     n, k = packed.shape
     r_keep, c_keep = packed.vals.shape[-2], packed.vals.shape[-1]
     genome = tuned_genome(
         m, k, n, packed.block_shape, r_keep, c_keep, max_group=max_group,
-        weight_bytes_per_el=packed.vals.dtype.itemsize)
+        weight_bytes_per_el=packed.vals.dtype.itemsize, fitness=fitness,
+        fitness_impl=fitness_impl)
     return attach_plan(packed, genome)
 
 
@@ -328,7 +349,9 @@ def _packed_entry(node: Any) -> Optional[TBCRC]:
 
 
 def _try_fuse(tree: Dict[str, Any], fused_key: str,
-              member_keys: Tuple[str, ...], m: int) -> bool:
+              member_keys: Tuple[str, ...], m: int,
+              fitness: str = "analytic",
+              fitness_impl: str = "ref") -> bool:
     members = [_packed_entry(tree.get(k)) for k in member_keys]
     if any(p is None for p in members) or not groupable(members):
         return False
@@ -340,7 +363,8 @@ def _try_fuse(tree: Dict[str, Any], fused_key: str,
     genome = tuned_genome(
         m, k, n, members[0].block_shape, r_keep, c_keep,
         max_group=len(members),
-        weight_bytes_per_el=members[0].vals.dtype.itemsize)
+        weight_bytes_per_el=members[0].vals.dtype.itemsize,
+        fitness=fitness, fitness_impl=fitness_impl)
     if int(genome.get("group_size", 1)) < len(members):
         return False            # the tuner preferred separate dispatches
     fused: Dict[str, Any] = {"w_group": pack_group(members, genome)}
@@ -355,6 +379,8 @@ def _try_fuse(tree: Dict[str, Any], fused_key: str,
 
 
 def fuse_packed_projections(tree: Any, *, m: int = 8,
+                            fitness: str = "analytic",
+                            fitness_impl: str = "ref",
                             _key: Optional[str] = None) -> Any:
     """Walk a packed params tree and fuse Q/K/V and gate/up projections
     whose packed geometry matches (and whose tuned genome votes to fuse).
@@ -366,26 +392,34 @@ def fuse_packed_projections(tree: Any, *, m: int = 8,
     dispatch. K/V still fuse (both genuinely over ``enc_out``).
     """
     if isinstance(tree, dict):
-        out = {k: fuse_packed_projections(v, m=m, _key=k)
+        out = {k: fuse_packed_projections(v, m=m, fitness=fitness,
+                                          fitness_impl=fitness_impl, _key=k)
                for k, v in tree.items()}
         for fused_key, member_keys, requires in _GROUPS:
             if fused_key == "wqkv" and _key == "cross_attn":
                 continue
             if (all(k in out for k in member_keys)
                     and all(k in out for k in requires)):
-                _try_fuse(out, fused_key, member_keys, m)
+                _try_fuse(out, fused_key, member_keys, m, fitness,
+                          fitness_impl)
         return out
     if isinstance(tree, list):
-        return [fuse_packed_projections(v, m=m, _key=_key) for v in tree]
+        return [fuse_packed_projections(v, m=m, fitness=fitness,
+                                        fitness_impl=fitness_impl, _key=_key)
+                for v in tree]
     return tree
 
 
-def plan_params(tree: Any, *, m: int = 8, fuse: bool = True) -> Any:
+def plan_params(tree: Any, *, m: int = 8, fuse: bool = True,
+                fitness: str = "analytic",
+                fitness_impl: str = "ref") -> Any:
     """Engine-build entry point: GA-tune every packed linear's plan and
     (optionally) fuse shared-activation projection groups. Idempotent —
     already-grouped entries and already-tuned plans (any plan with a
     dispatch genome, i.e. ``m_tile`` set) are left alone; only the
-    default plans ``tbcrc_pack`` attaches get tuned."""
+    default plans ``tbcrc_pack`` attaches get tuned. ``fitness`` selects
+    the GA backend ("analytic" roofline, or the opt-in "wallclock" host
+    timing — see ``tuned_genome``)."""
     def tune(node: Any) -> Any:
         if isinstance(node, dict):
             if "w_packed" in node and isinstance(node["w_packed"], TBCRC):
@@ -393,7 +427,8 @@ def plan_params(tree: Any, *, m: int = 8, fuse: bool = True) -> Any:
                 if packed.plan is not None and packed.plan.m_tile is not None:
                     return node          # caller already tuned this plan
                 node = dict(node)
-                node["w_packed"] = tune_packed(packed, m=m)
+                node["w_packed"] = tune_packed(packed, m=m, fitness=fitness,
+                                               fitness_impl=fitness_impl)
                 return node
             return {k: tune(v) for k, v in node.items()}
         if isinstance(node, list):
@@ -401,4 +436,6 @@ def plan_params(tree: Any, *, m: int = 8, fuse: bool = True) -> Any:
         return node
 
     tree = tune(tree)
-    return fuse_packed_projections(tree, m=m) if fuse else tree
+    return fuse_packed_projections(tree, m=m, fitness=fitness,
+                                   fitness_impl=fitness_impl) \
+        if fuse else tree

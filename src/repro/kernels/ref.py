@@ -47,12 +47,37 @@ def bcr_spmm_packed_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
     return y.astype(x.dtype)
 
 
-def bcr_spmm_grouped_ref(x: jax.Array, grouped) -> jax.Array:
+def grouped_epilogue(y: jax.Array, bias, epilogue: str | None,
+                     out_dtype) -> jax.Array:
+    """Shared epilogue semantics for the grouped paths: fp32 ``y`` is
+    ``(..., G, N)``; bias ``(G, N)`` adds before the activation.
+
+    ``epilogue``:
+      * ``None``     — plain (bias-added) group outputs, ``(..., G, N)``
+      * ``"swiglu"`` — ``silu(y[0]) * y[1]`` collapsing G=2 gate/up into
+        one ``(..., N)`` hidden — the elementwise pass the MLP otherwise
+        runs after the matmul dispatch.
+    """
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if epilogue == "swiglu":
+        assert y.shape[-2] == 2, "swiglu epilogue needs a gate/up pair"
+        y = jax.nn.silu(y[..., 0, :]) * y[..., 1, :]
+    elif epilogue is not None:
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    return y.astype(out_dtype)
+
+
+def bcr_spmm_grouped_ref(x: jax.Array, grouped, bias=None,
+                         epilogue: str | None = None) -> jax.Array:
     """Grouped-projection ref path: G same-shaped packed weights sharing
     ``x`` (Q/K/V, gate/up) in one take + one einsum + one scatter-add.
 
     Returns ``(M, G, N)``; the plan's scatter vector offsets member ``g``
-    by ``g·N`` so all partial products land in one output buffer.
+    by ``g·N`` so all partial products land in one output buffer. ``bias``
+    ``(G, N)`` and the activation ``epilogue`` fuse into the same fp32
+    accumulator pass (no separate elementwise dispatch afterwards); with
+    ``epilogue="swiglu"`` the result is ``(M, N)``.
     """
     plan = grouped.plan
     m = x.shape[0]
@@ -64,7 +89,7 @@ def bcr_spmm_grouped_ref(x: jax.Array, grouped) -> jax.Array:
                       grouped.vals.astype(jnp.float32))
     y = jnp.zeros((m, g * n), jnp.float32)
     y = y.at[:, plan.scatter_rows].add(part.reshape(m, -1))
-    return y.reshape(m, g, n).astype(x.dtype)
+    return grouped_epilogue(y.reshape(m, g, n), bias, epilogue, x.dtype)
 
 
 def bcr_spmm_gather_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
@@ -92,6 +117,38 @@ def bcr_spmm_gather_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
 
     y = jnp.zeros((m, n), x.dtype)
     return jax.lax.fori_loop(0, nb_r, block_row, y)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               cache_len: jax.Array) -> jax.Array:
+    """Pure-JAX oracle for the paged flash-decode kernel: gather each
+    slot's table pages, then masked single-step attention.
+
+    q ``(B, 1, H, D)``; pages ``(n_pages, page_size, Hkv, D)``; tables
+    ``(B, n_cols)``; cache_len ``(B,)`` counts valid positions including
+    the step's new token. Bytes read scale with the table WIDTH handed in
+    (the engine buckets it to the longest live slot) — the Pallas kernel
+    further drops per-slot dead columns via its index-map clamp.
+    """
+    b, s, h, d = q.shape
+    assert s == 1
+    n_pages, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    n_cols = block_tables.shape[1]
+    l = n_cols * page_size
+    # (B, n_cols, page_size, Hkv, D) -> (B, L, Hkv, D) contiguous history
+    k = jnp.take(k_pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    v = jnp.take(v_pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    qg = q.reshape(b, hkv, g, d).astype(k.dtype)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    valid = jnp.arange(l)[None] < jnp.asarray(cache_len)[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
 def masked_dense_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:

@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
-from repro.core.bcr import BCRSpec
+from repro.core.bcr import BCRSpec, kept_align
 from repro.core.bcrc import tbcrc_pack
 from repro.launch.train import default_prune_filter
 from repro.models.api import model_fns
@@ -53,8 +53,34 @@ def _pack_any(w: jax.Array, spec: BCRSpec):
     return jax.vmap(lambda x: _pack_any(x, spec))(w)
 
 
+def _auto_block_spec(spec: BCRSpec, shape, keep_frac: float, decode_m: int,
+                     run_layer=None, _cache={}) -> BCRSpec:
+    """keep_frac-aware block-size selection (GRIM §5.1, Listing 1) at pack
+    time: sweep candidate block sizes with ``block_search.find_opt_blk``
+    for THIS layer's (M, K, N, keep_frac) and take its verdict instead of
+    the config's block as-is (block 128 beats 32 by ~3x on the CPU ref
+    path at serving keep_fracs). Memoized per unique layer geometry."""
+    from repro.core.block_search import (analytic_tpu_latency,
+                                         default_candidates, find_opt_blk)
+    n, k = int(shape[0]), int(shape[1])
+    run_layer = run_layer or analytic_tpu_latency
+    key = (n, k, keep_frac, decode_m, run_layer)
+    if key not in _cache:
+        cands = {c for c in default_candidates(n, k)}
+        cands |= {(b, b) for b in (16, 32, 64, 128, 256)
+                  if n % b == 0 and k % b == 0}
+        cands.add(spec.block_shape)
+        best, _ = find_opt_blk(decode_m, k, n, keep_frac, sorted(cands),
+                               run_layer=run_layer)
+        _cache[key] = best
+    block = _cache[key]
+    return BCRSpec(block_shape=block, keep_frac=keep_frac,
+                   align=kept_align(block))
+
+
 def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
-                decode_m: int = 8) -> PyTree:
+                decode_m: int = 8, auto_block: bool = False,
+                block_runner=None, plan_fitness: str = "analytic") -> PyTree:
     """Replace every prunable linear's {"w"} with {"w_packed": TBCRC}.
 
     With ``plan=True`` (default) this is GRIM's full compile step: every
@@ -62,6 +88,13 @@ def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
     sharing one activation (Q/K/V, gate/up) are fused into grouped
     dispatches (kernels/plan.py). ``decode_m`` is the decode-batch hint the
     tuner optimizes for.
+
+    ``auto_block=True`` runs the paper's Listing-1 block-size search per
+    layer geometry before packing (``block_runner`` overrides the latency
+    backend — e.g. ``block_search.wallclock_cpu_runner``); the config's
+    ``bcr_block`` then only seeds the candidate set. ``plan_fitness``
+    selects the GA tuner's fitness backend ("analytic" roofline, default,
+    or "wallclock" host timing).
     """
     fil = default_prune_filter(cfg)
 
@@ -74,6 +107,10 @@ def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
             leafpath = path + (jax.tree_util.DictKey("w"),)
             spec = fil(leafpath, node["w"])
             if spec is not None:
+                if auto_block:
+                    spec = _auto_block_spec(
+                        spec, node["w"].shape[-2:], cfg.bcr_keep_frac,
+                        decode_m, block_runner)
                 out = {"w_packed": _pack_any(node["w"], spec)}
                 if "b" in node:
                     out["b"] = node["b"]
@@ -89,7 +126,8 @@ def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
     packed = rewrite(params)
     if plan:
         from repro.kernels.plan import plan_params
-        packed = plan_params(packed, m=decode_m)
+        packed = plan_params(packed, m=decode_m, fitness=plan_fitness,
+                             fitness_impl=cfg.kernel_impl)
     return packed
 
 
@@ -261,13 +299,17 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
 # ---------------------------------------------------------------------------
 
 
-def build_params(cfg: ModelConfig, log=print, *, decode_m: int = 8) -> PyTree:
+def build_params(cfg: ModelConfig, log=print, *, decode_m: int = 8,
+                 auto_block: bool = False,
+                 plan_fitness: str = "analytic") -> PyTree:
     fns = model_fns(cfg)
     params = fns.init_params(jax.random.PRNGKey(0))
     if cfg.bcr_keep_frac > 0:
         # tune the execution plans for the batch this server will decode
         # at (the engine's plan_params preserves pre-tuned plans)
-        packed = pack_params(cfg, params, decode_m=decode_m)
+        packed = pack_params(cfg, params, decode_m=decode_m,
+                             auto_block=auto_block,
+                             plan_fitness=plan_fitness)
         log(f"packed weight bytes: "
             f"{packed_fraction(params, packed):.3f}x dense")
         params = packed
@@ -282,6 +324,13 @@ def main() -> None:
     p.add_argument("--batch", type=int, default=4, help="static-mode batch")
     p.add_argument("--slots", type=int, default=8, help="engine decode slots")
     p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--page-size", type=int, default=0,
+                   help="block-paged KV page size (tokens); 0 → capacity-"
+                        "dense slots")
+    p.add_argument("--kv-pages", type=int, default=0,
+                   help="total KV pages per layer (0 → full provisioning); "
+                        "< slots×capacity/page oversubscribes HBM with "
+                        "page-budget admission control")
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--requests", type=int, default=32)
@@ -295,6 +344,13 @@ def main() -> None:
                         "else the config default")
     p.add_argument("--impl", default="ref",
                    choices=["ref", "interpret", "pallas"])
+    p.add_argument("--auto-block", action="store_true",
+                   help="Listing-1 block-size search per layer geometry at "
+                        "pack time instead of taking the config block")
+    p.add_argument("--plan-fitness", default="analytic",
+                   choices=["analytic", "wallclock"],
+                   help="GA plan-tuner fitness backend (wallclock times "
+                        "the jitted matmul per genome on this host)")
     p.add_argument("--json-out", default=None)
     args = p.parse_args()
 
@@ -305,7 +361,8 @@ def main() -> None:
         b = args.bcr_block or 16
         cfg = dataclasses.replace(cfg, bcr_block=(b, b))
     params = build_params(
-        cfg, decode_m=(args.batch if args.mode == "static" else args.slots))
+        cfg, decode_m=(args.batch if args.mode == "static" else args.slots),
+        auto_block=args.auto_block, plan_fitness=args.plan_fitness)
 
     if args.mode == "static":
         generate(cfg, params, ServeConfig(batch=args.batch,
@@ -315,7 +372,8 @@ def main() -> None:
         return
 
     engine = InferenceEngine(cfg, params, EngineConfig(
-        n_slots=args.slots, capacity=args.capacity))
+        n_slots=args.slots, capacity=args.capacity,
+        page_size=args.page_size, kv_pages=args.kv_pages or None))
     # mixed prompt lengths around --prompt-len, clamped so every request
     # fits its slot (prompt + gen ≤ capacity)
     pmax = args.capacity - args.gen

@@ -26,7 +26,7 @@ from repro.checkpoint.checkpointing import CheckpointManager
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
 from repro.core import admm as admm_mod
-from repro.core.bcr import BCRSpec, choose_block_shape
+from repro.core.bcr import BCRSpec, choose_block_shape, kept_align
 from repro.data.pipeline import DataConfig, TokenSource
 from repro.models.api import model_fns
 from repro.optim import adamw
@@ -56,11 +56,8 @@ def default_prune_filter(cfg: ModelConfig):
         if leaf.ndim < 2 or min(leaf.shape[-2:]) < 2 * min(cfg.bcr_block):
             return None
         block = choose_block_shape(tuple(leaf.shape[-2:]), cfg.bcr_block)
-        # kept-count granule: 8 (TPU sublane) when the block affords it,
-        # finer for small blocks so the target keep_frac stays reachable
-        align = max(1, min(8, block[0] // 4, block[1] // 4))
         return BCRSpec(block_shape=block, keep_frac=cfg.bcr_keep_frac,
-                       align=align)
+                       align=kept_align(block))
 
     return fil
 

@@ -28,7 +28,7 @@ class ModelFns:
     loss_fn: Callable            # (params, batch) -> scalar
     prefill: Callable            # (params, batch) -> (logits, cache)
     decode_step: Callable        # (params, batch, cache) -> (logits, cache)
-    init_cache: Callable         # (batch, capacity) -> cache
+    init_cache: Callable         # (batch, capacity[, kv_pages, page_size])
 
 
 def model_fns(cfg: ModelConfig) -> ModelFns:
@@ -48,7 +48,8 @@ def model_fns(cfg: ModelConfig) -> ModelFns:
             cfg, p, b["tokens"], image_embeds=b.get("image_embeds"),
             length=b.get("length")),
         decode_step=lambda p, b, c: causal_lm.decode_step(
-            cfg, p, b["tokens"], c, b["cache_len"]),
+            cfg, p, b["tokens"], c, b["cache_len"],
+            b.get("block_tables")),
         init_cache=functools.partial(causal_lm.init_cache, cfg),
     )
 

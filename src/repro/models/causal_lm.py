@@ -113,8 +113,16 @@ def layer_init(key, kinds: Tuple[str, str], cfg: ModelConfig) -> Params:
     }
 
 
-def _mixer_cache_init(kind: str, cfg: ModelConfig, batch: int, capacity: int):
+def _mixer_cache_init(kind: str, cfg: ModelConfig, batch: int, capacity: int,
+                      kv_pages: int = 0, page_size: int = 0):
     if kind == "attn":
+        if page_size > 0:
+            # block-paged layout: one shared page pool per layer, indexed
+            # by per-slot block tables at decode (page 0 reserved as the
+            # null sink for pad/inactive writes)
+            shape = (kv_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shape, cfg.c_dtype),
+                    "v": jnp.zeros(shape, cfg.c_dtype)}
         return {
             "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim),
                            cfg.c_dtype),
@@ -135,9 +143,10 @@ def _ffn_cache_init(kind: str, cfg: ModelConfig, batch: int):
 
 
 def layer_cache_init(kinds: Tuple[str, str], cfg: ModelConfig, batch: int,
-                     capacity: int):
+                     capacity: int, kv_pages: int = 0, page_size: int = 0):
     return {
-        "mixer": _mixer_cache_init(kinds[0], cfg, batch, capacity),
+        "mixer": _mixer_cache_init(kinds[0], cfg, batch, capacity,
+                                   kv_pages, page_size),
         "ffn": _ffn_cache_init(kinds[1], cfg, batch),
     }
 
@@ -145,7 +154,8 @@ def layer_cache_init(kinds: Tuple[str, str], cfg: ModelConfig, batch: int,
 def layer_apply(
     kinds: Tuple[str, str], lp: Params, x: jax.Array, cfg: ModelConfig, *,
     positions: jax.Array, cache: Optional[Params] = None,
-    cache_len: Optional[jax.Array] = None, want_cache: bool = False,
+    cache_len: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None, want_cache: bool = False,
 ) -> Tuple[jax.Array, Optional[Params]]:
     """One transformer/SSM layer; decode when ``cache`` is provided."""
     mixer_kind, ffn_kind = kinds
@@ -160,7 +170,8 @@ def layer_apply(
             head_dim=cfg.head_dim, positions=positions,
             rope_theta=cfg.rope_theta, causal=True,
             cache=(cache["mixer"] if cache is not None else None),
-            cache_len=cache_len, attn_impl=cfg.attn_impl,
+            cache_len=cache_len, block_tables=block_tables,
+            attn_impl=cfg.attn_impl,
             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, impl=impl)
         if cache is not None or want_cache:
             new_cache["mixer"] = {
@@ -288,15 +299,24 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
     return L.cross_entropy(logits, batch["targets"], batch.get("mask"))
 
 
-def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
-    """Decode cache pytree, stacked to mirror the param layout."""
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, *,
+               kv_pages: int = 0, page_size: int = 0) -> Params:
+    """Decode cache pytree, stacked to mirror the param layout.
+
+    With ``page_size > 0`` attention K/V leaves become a shared page pool
+    ``(kv_pages, page_size, Hkv, D)`` per layer (block tables supplied to
+    ``decode_step`` map slots onto pages); recurrent-state leaves keep the
+    per-slot batch layout either way.
+    """
     sp = stack_plan(cfg)
     cache: Params = {
-        "prefix": [layer_cache_init(kinds, cfg, batch, capacity)
+        "prefix": [layer_cache_init(kinds, cfg, batch, capacity,
+                                    kv_pages, page_size)
                    for kinds in sp.prefix],
     }
     if sp.repeats:
-        one = lambda _: [layer_cache_init(kinds, cfg, batch, capacity)
+        one = lambda _: [layer_cache_init(kinds, cfg, batch, capacity,
+                                          kv_pages, page_size)
                          for kinds in sp.pattern]
         cache["stack"] = jax.vmap(one)(jnp.arange(sp.repeats))
     else:
@@ -305,12 +325,19 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Params:
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
-                cache: Params, cache_len: jax.Array) -> Tuple[jax.Array, Params]:
+                cache: Params, cache_len: jax.Array,
+                block_tables: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
     """One serving step: tokens (B, 1) + cache → (logits (B, 1, V), cache').
 
     ``cache_len`` is a scalar (uniform batch) or a (B,) vector for ragged
     continuous-batching decode: slot b writes its K/V at position
     ``cache_len[b]`` and attends to its own history only.
+
+    ``block_tables`` (B, n_cols) switches attention layers to the paged
+    cache layout: KV bytes touched per step scale with the table width the
+    caller hands over (bucketed to the longest live slot) instead of the
+    provisioned capacity.
     """
     sp = stack_plan(cfg)
     b = tokens.shape[0]
@@ -323,7 +350,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     new_prefix = []
     for kinds, lp, c in zip(sp.prefix, params["prefix"], cache["prefix"]):
         x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
-                            cache=c, cache_len=cache_len)
+                            cache=c, cache_len=cache_len,
+                            block_tables=block_tables)
         new_prefix.append(nc)
 
     new_stack = cache["stack"]
@@ -333,7 +361,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
             ncs = []
             for kinds, lp, c in zip(sp.pattern, rep_params, rep_cache):
                 x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
-                                    cache=c, cache_len=cache_len)
+                                    cache=c, cache_len=cache_len,
+                                    block_tables=block_tables)
                 ncs.append(nc)
             return x, ncs
         x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))

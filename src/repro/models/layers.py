@@ -280,18 +280,60 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_dispatch(q, k_pages, v_pages, block_tables,
+                                    cache_len, attn_impl: str) -> jax.Array:
+    """Paged single-step attention: the Pallas flash-decode kernel when
+    ``attn_impl`` asks for it ("paged" compiled, "paged_interpret" for CPU
+    validation), else the pure-JAX gather ref — whose bytes still scale
+    with the table width handed in, not the slot capacity."""
+    from repro.kernels.paged_decode_attention import paged_decode_attention
+    from repro.kernels.ref import paged_decode_attention_ref
+    if attn_impl in ("paged", "paged_interpret"):
+        return paged_decode_attention(
+            q, k_pages, v_pages, block_tables, cache_len,
+            interpret=(attn_impl == "paged_interpret"))
+    return paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
+                                      cache_len)
+
+
 def attention_apply(
     params: Params, x: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
     positions: jax.Array, rope_theta: float = 10000.0, causal: bool = True,
     cache: Optional[Params] = None, cache_len: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
     attn_impl: str = "flash", q_chunk: int = 512, kv_chunk: int = 1024,
     impl: str = "ref",
 ) -> Tuple[jax.Array, Optional[Params]]:
-    """Full attention block. With ``cache`` → single-token decode step."""
+    """Full attention block. With ``cache`` → single-token decode step.
+
+    With ``block_tables`` the cache leaves are a shared page pool
+    ``(n_pages, page_size, Hkv, D)`` instead of per-slot capacity rows:
+    the step's K/V scatter into each slot's current page and attention
+    reads only table pages (see kernels/paged_decode_attention.py).
+    """
     b, s, _ = x.shape
     q, k, v = _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta, impl)
 
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # paged decode: write K/V at flat position table[b, len // ps] * ps
+        # + len % ps. Inactive slots (len 0, zeroed table row) land in the
+        # reserved null page 0, which no live table entry ever points at.
+        assert s == 1, "paged attention is a single-step decode path"
+        idx = jnp.asarray(cache_len)
+        ck, cv = cache["k"], cache["v"]
+        n_pages, page_size = ck.shape[0], ck.shape[1]
+        dest = (jnp.take_along_axis(
+            block_tables, (idx // page_size)[:, None], axis=1)[:, 0]
+            * page_size + idx % page_size)
+        flat = (-1, n_kv, head_dim)
+        k_pages = ck.reshape(flat).at[dest].set(
+            k[:, 0].astype(ck.dtype)).reshape(ck.shape)
+        v_pages = cv.reshape(flat).at[dest].set(
+            v[:, 0].astype(cv.dtype)).reshape(cv.shape)
+        out = paged_decode_attention_dispatch(
+            q, k_pages, v_pages, block_tables, idx + 1, attn_impl)
+        new_cache = {"k": k_pages, "v": v_pages}
+    elif cache is not None:
         # decode: write K/V at position cache_len, attend to ≤ cache_len+1.
         # cache_len is a scalar (uniform batch) or a (B,) vector (ragged
         # continuous batch: each slot writes at and attends to its own
@@ -389,12 +431,17 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
 
 
 def swiglu_apply(params: Params, x: jax.Array, impl: str = "ref") -> jax.Array:
-    if "wgi" in params:          # packed serving: fused gate/up dispatch
-        g, h = grouped_linear_apply(params["wgi"], x, impl=impl)
+    if "wgi" in params:
+        # packed serving: ONE fused gate/up dispatch whose epilogue applies
+        # bias + silu(g)·h in the matmul's emit step — no separate
+        # elementwise pass over the (B, S, d_ff) hidden
+        h = grouped_linear_apply(params["wgi"], x, impl=impl,
+                                 epilogue="swiglu")
     else:
         g = linear_apply(params["wg"], x, impl=impl)
-        h = linear_apply(params["wi"], x, impl=impl)
-    h = part.act(jax.nn.silu(g) * h, "batch", "seq", "mlp")
+        hu = linear_apply(params["wi"], x, impl=impl)
+        h = jax.nn.silu(g) * hu
+    h = part.act(h, "batch", "seq", "mlp")
     return linear_apply(params["wo"], h, impl=impl)
 
 

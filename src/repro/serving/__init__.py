@@ -2,12 +2,16 @@
 
 Layering (docs/serving.md has the full picture):
 
-  kv_slots   — slot-based KV/recurrent-state pool with per-slot lengths
+  kv_slots   — slot-based KV/recurrent-state pools with per-slot lengths
+               (capacity-dense SlotPool, block-paged PagedSlotPool)
   scheduler  — FCFS request queue: admission into free slots, retirement
   engine     — InferenceEngine: batched prefill for prompt ingestion, one
-               jit'd ragged decode step, greedy/temperature/top-k sampling
+               jit'd ragged decode step (optionally over block-paged KV),
+               greedy/temperature/top-k sampling
 """
 
 from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: F401
-from repro.serving.kv_slots import SlotPool, seat_prefill  # noqa: F401
+from repro.serving.kv_slots import (  # noqa: F401
+    PagedSlotPool, SlotPool, seat_prefill,
+)
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401

@@ -10,7 +10,12 @@ per-slot lengths) and a Scheduler. Each ``step()``:
      ``EngineConfig.backfill_chunk``) so retirements don't each pay a
      single-row prefill dispatch;
   2. runs ONE jit'd ``decode_step`` over the whole ragged slot batch with a
-     per-slot ``cache_len`` vector (donated cache buffers);
+     per-slot ``cache_len`` vector (donated cache buffers) — with block
+     paging on (``EngineConfig.page_size``), the step also gets each
+     slot's block-table rows, sliced to the pow2-bucketed live width, so
+     KV bytes read scale with live context instead of capacity (pages are
+     reserved at admission, allocated on advance, freed on retire —
+     admission control requeues requests the page pool cannot cover);
   3. samples per-slot (greedy / temperature / top-k), advances lengths, and
      retires finished requests.
 
@@ -42,7 +47,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import model_fns
-from repro.serving.kv_slots import SlotPool
+from repro.serving.kv_slots import PagedSlotPool, SlotPool
 from repro.serving.scheduler import Request, Scheduler
 
 PyTree = Any
@@ -83,6 +88,14 @@ class EngineConfig:
     max_admit_per_step: Optional[int] = None  # None → fill every free slot
     pad_prefill: Optional[bool] = None        # None → auto by model family
     min_bucket: int = 8
+    # block-paged KV: page_size > 0 swaps the capacity-dense SlotPool for a
+    # PagedSlotPool — attention K/V live in a shared page pool indexed by
+    # per-slot block tables, decode reads scale with live lengths instead
+    # of n_slots × capacity, and kv_pages (None → full provisioning) lets
+    # capacity oversubscribe HBM when requests are short. Ignored for
+    # recurrent-state families (no attention K/V to page).
+    page_size: int = 0
+    kv_pages: Optional[int] = None
     # chunked backfill: in steady state requests retire one at a time, so
     # naive admission runs a single-row prefill per retirement (~20% of
     # step time at batch 8). Hold admissions until `backfill_chunk` can be
@@ -92,8 +105,11 @@ class EngineConfig:
     backfill_chunk: int = 2
     backfill_max_defer: int = 2
     # GA-tune pack-time execution plans for packed weights at engine build
-    # (no-op for dense params / already-planned trees)
+    # (no-op for dense params / already-planned trees); plan_fitness picks
+    # the tuner backend — "analytic" roofline (default) or "wallclock"
+    # host timing (block_search.wallclock_plan_fitness, opt-in)
     plan_packed: bool = True
+    plan_fitness: str = "analytic"
 
 
 class InferenceEngine:
@@ -118,13 +134,27 @@ class InferenceEngine:
             # e.g. pack_params(decode_m=...) — are preserved) and fuse
             # shared-activation projection groups
             from repro.kernels.plan import plan_params
-            params = plan_params(params, m=ec.n_slots)
+            params = plan_params(params, m=ec.n_slots,
+                                 fitness=ec.plan_fitness,
+                                 fitness_impl=cfg.kernel_impl)
         self.params = params
         self.fns = fns = model_fns(cfg)
-        self.pool = SlotPool(fns.init_cache, ec.n_slots, ec.capacity)
+        self.paged = bool(ec.page_size) and cfg.family != "ssm"
+        if self.paged:
+            self.pool: Any = PagedSlotPool(
+                fns.init_cache, ec.n_slots, ec.capacity,
+                page_size=ec.page_size, n_pages=ec.kv_pages)
+        else:
+            self.pool = SlotPool(fns.init_cache, ec.n_slots, ec.capacity)
         self.sched = Scheduler(ec.n_slots)
         self.pad_prefill = (cfg.family in _PADDED_FAMILIES
                             if ec.pad_prefill is None else ec.pad_prefill)
+        # per-decode-step KV traffic accounting (BENCH/bench reporting):
+        # bytes one cache row (K+V, all attention layers) costs to read
+        from repro.models.causal_lm import layer_plan
+        n_attn = sum(1 for mixer, _ in layer_plan(cfg) if mixer == "attn")
+        self._kv_row_bytes = (2 * cfg.num_kv_heads * cfg.head_dim
+                              * cfg.c_dtype.itemsize * n_attn)
 
         # sampling is fused into the prefill/decode programs: one dispatch
         # per engine step — at small model scale the extra host round-trip
@@ -135,9 +165,11 @@ class InferenceEngine:
             tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
             return tok, pcache
 
-        def decode_sample(p, toks, lens, cache, key, temps, topks, use_topk):
+        def decode_sample(p, toks, lens, cache, key, temps, topks, bt,
+                          use_topk):
             logits, cache = fns.decode_step(
-                p, {"tokens": toks, "cache_len": lens}, cache)
+                p, {"tokens": toks, "cache_len": lens,
+                    "block_tables": bt}, cache)
             tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
             return tok, cache
 
@@ -167,6 +199,12 @@ class InferenceEngine:
             raise ValueError(
                 f"prompt_len {prompt.size} + max_new_tokens {max_new_tokens}"
                 f" exceeds slot capacity {self.ec.capacity}")
+        if self.paged:
+            need = self.pool.pages_needed(prompt.size + max_new_tokens)
+            if need > self.pool.n_pages - 1:
+                raise ValueError(
+                    f"request needs {need} KV pages but the pool only has "
+                    f"{self.pool.n_pages - 1} allocatable pages")
         return self.sched.submit(Request(
             prompt=prompt, max_new_tokens=max_new_tokens,
             temperature=temperature, top_k=top_k, eos_id=eos_id,
@@ -263,6 +301,22 @@ class InferenceEngine:
         """One engine iteration; returns requests that finished this step."""
         admitted = self.sched.admit(self.ec.max_admit_per_step) \
             if self._should_admit() else []
+        if admitted and self.paged:
+            # page-budget admission control: each admission reserves its
+            # worst-case page count (prompt + max_new_tokens) so a running
+            # request can never strand without a page mid-decode. Strict
+            # FCFS — the first request that doesn't fit requeues itself and
+            # everything behind it (reverse order restores queue order).
+            fit = len(admitted)
+            for i, (req, slot) in enumerate(admitted):
+                if not self.pool.reserve(
+                        slot, req.prompt_len + req.max_new_tokens):
+                    fit = i
+                    break
+            for req, slot in reversed(admitted[fit:]):
+                self.sched.requeue(slot)
+                self.stats["page_stalls"] += 1
+            admitted = admitted[:fit]
         if admitted:
             self._defer_steps = 0
             if self.pad_prefill:
@@ -288,11 +342,28 @@ class InferenceEngine:
             return finished
 
         self.stats["slot_occupancy"].append(len(self.sched.active))
+        if self.paged:
+            # alloc-on-advance: the step writes K/V at position len, so the
+            # page covering it must exist before the dispatch (drawn from
+            # the admission-time reservation, never from thin air)
+            for slot in self.sched.active:
+                self.pool.ensure(slot, int(self.pool.lens[slot]) + 1)
+            bt = self.pool.device_tables()
+            self.stats["kv_bytes_read"] += (bt.shape[1] * self.ec.page_size
+                                            * self.ec.n_slots
+                                            * self._kv_row_bytes)
+            self.stats["kv_bytes_read_live"] += (self.pool.live_page_rows()
+                                                 * self._kv_row_bytes)
+        else:
+            bt = None
+            rows = self.ec.n_slots * self.ec.capacity
+            self.stats["kv_bytes_read"] += rows * self._kv_row_bytes
+            self.stats["kv_bytes_read_live"] += rows * self._kv_row_bytes
         tok_dev, self.pool.cache = self._decode(
             self.params, jnp.asarray(self._tokens),
             jnp.asarray(self.pool.lens), self.pool.cache,
             self._next_key(), jnp.asarray(self._temps),
-            jnp.asarray(self._topks), use_topk=bool(self._topks.any()))
+            jnp.asarray(self._topks), bt, use_topk=bool(self._topks.any()))
         next_tok = np.asarray(tok_dev)
         now = time.perf_counter()
         self.stats["decode_steps"] += 1
@@ -315,7 +386,8 @@ class InferenceEngine:
         self.stats.clear()
         self.stats.update(decode_steps=0, prefills=0, prefill_rows=0,
                           deferred_admissions=0, tokens_generated=0,
-                          slot_occupancy=[])
+                          page_stalls=0, kv_bytes_read=0,
+                          kv_bytes_read_live=0, slot_occupancy=[])
 
     def warmup(self, prompt_lens: Sequence[int], gen: int = 2) -> None:
         """Compile every (prefill bucket × admission row tier) program plus
@@ -329,6 +401,27 @@ class InferenceEngine:
             for tier in self._row_tiers():
                 self.generate([np.zeros((l,), np.int32)] * tier,
                               max_new_tokens=gen)
+        if self.paged:
+            # compile the decode program for every block-table width the
+            # pow2 bucketing can produce — decode bucket growth mid-traffic
+            # must not pay jit inside the measured window. All-zero tables
+            # route the throwaway writes into the null page.
+            widths, w = [], 1
+            while True:
+                widths.append(min(w, self.pool.max_pages))
+                if w >= self.pool.max_pages:
+                    break
+                w *= 2
+            toks = jnp.zeros((self.ec.n_slots, 1), jnp.int32)
+            zeros = jnp.zeros((self.ec.n_slots,), jnp.float32)
+            lens0 = jnp.zeros((self.ec.n_slots,), jnp.int32)
+            for w in widths:
+                bt = jnp.zeros((self.ec.n_slots, w), jnp.int32)
+                for use_topk in (False, True):   # both static sample paths
+                    _, self.pool.cache = self._decode(
+                        self.params, toks, lens0, self.pool.cache,
+                        self._next_key(), zeros, zeros.astype(jnp.int32),
+                        bt, use_topk=use_topk)
         self.sched.finished.clear()
         self.reset_stats()
 

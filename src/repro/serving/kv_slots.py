@@ -1,4 +1,4 @@
-"""Slot-based KV / recurrent-state pool for continuous batching.
+"""Slot-based KV / recurrent-state pools for continuous batching.
 
 One padded decode batch of ``n_slots`` rows serves requests of different
 ages: slot ``b`` owns row ``b`` of every cache leaf plus a per-slot length.
@@ -12,11 +12,25 @@ layers carry batch at axis 0, scanned ``stack`` layers at axis 1). Rather
 than hard-coding that, the batch axis of every leaf is discovered once by
 shape-probing ``init_cache`` — the pool works for any model whose prefill
 cache matches its ``init_cache`` tree structure.
+
+Two pools share that probing trick:
+
+* :class:`SlotPool` — capacity-dense: every slot owns ``capacity`` cache
+  rows whether it uses them or not.
+* :class:`PagedSlotPool` — block-paged: attention K/V leaves become a
+  shared page pool ``(n_pages, page_size, Hkv, D)`` plus per-slot block
+  tables (physical page ids); pages are reserved at admission, allocated
+  lazily as a slot's length crosses page boundaries, and returned on
+  retirement. Slot count decouples from context capacity: provisioned HBM
+  is ``n_pages`` pages, not ``n_slots × capacity`` rows, and decode reads
+  scale with live lengths (see kernels/paged_decode_attention.py).
+  Physical page 0 is reserved as the null sink for pad/inactive writes.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from collections import deque
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -130,4 +144,211 @@ class SlotPool:
         self.lens[slot] += 1
 
     def release(self, slot: int) -> None:
+        self.lens[slot] = 0
+
+
+class PagedSlotPool:
+    """Block-paged decode cache: a shared page pool per attention leaf +
+    per-slot block tables, with recurrent-state leaves kept slot-major.
+
+    Leaf classes are discovered by shape-probing ``init_cache`` twice:
+    leaves that change with the batch size are slot leaves (recurrent
+    state), leaves that change with ``kv_pages`` are page leaves. The jit'd
+    writer scatters prefill KV rows into table-mapped pages and seats slot
+    leaves exactly like :class:`SlotPool`.
+
+    Allocator lifecycle: ``reserve`` claims a slot's worst-case page budget
+    at admission (so decode can never strand a running request without a
+    page — oversubscription is resolved by admission control, not
+    preemption); ``ensure`` allocates lazily from that budget as the
+    length crosses page boundaries; ``release`` returns every allocated
+    page to the free list and drops the remaining reservation.
+    """
+
+    def __init__(self, init_cache: Callable, n_slots: int, capacity: int, *,
+                 page_size: int, n_pages: Optional[int] = None):
+        assert page_size > 0
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.page_size = page_size
+        self.max_pages = -(-capacity // page_size)
+        if n_pages is None:               # full provisioning (+ null page)
+            n_pages = n_slots * self.max_pages + 1
+        assert n_pages > 1, "need at least one page beyond the null page"
+        self.n_pages = n_pages
+        self.cache = init_cache(n_slots, capacity, kv_pages=n_pages,
+                                page_size=page_size)
+
+        probe = lambda b, p: jax.eval_shape(
+            lambda: init_cache(b, capacity, kv_pages=p,
+                               page_size=page_size))
+        diff = lambda a, b: jax.tree_util.tree_map(
+            lambda x, y: _first_diff_axis(x.shape, y.shape), a, b)
+        self._batch_axes = diff(probe(1, n_pages), probe(2, n_pages))
+        self._page_axes = diff(probe(1, n_pages), probe(1, n_pages + 1))
+        for bax, pax in zip(jax.tree_util.tree_leaves(self._batch_axes),
+                            jax.tree_util.tree_leaves(self._page_axes)):
+            assert (bax >= 0) != (pax >= 0), \
+                "cache leaf is neither slot-major nor paged"
+        assert any(p >= 0
+                   for p in jax.tree_util.tree_leaves(self._page_axes)), \
+            "no attention K/V leaf to page — use SlotPool for this family"
+
+        self.lens = np.zeros((n_slots,), np.int32)
+        self.table = np.zeros((n_slots, self.max_pages), np.int32)
+        self._free: deque[int] = deque(range(1, n_pages))   # 0 = null
+        self._n_alloc = np.zeros((n_slots,), np.int32)
+        self._reserved = np.zeros((n_slots,), np.int32)     # unallocated
+        self._write = jax.jit(self._write_fn, donate_argnums=(0,))
+
+    # -- allocator ---------------------------------------------------------
+
+    def free_pages(self) -> int:
+        """Pages neither allocated nor earmarked by a reservation."""
+        return len(self._free) - int(self._reserved.sum())
+
+    def pages_needed(self, total_len: int) -> int:
+        return -(-total_len // self.page_size)
+
+    def reserve(self, slot: int, total_len: int) -> bool:
+        """Admission control: claim the slot's worst-case page budget
+        (prompt + max_new_tokens). False → the caller must requeue."""
+        need = self.pages_needed(total_len) - int(self._n_alloc[slot])
+        if need > self.free_pages():
+            return False
+        self._reserved[slot] = max(need, 0)
+        return True
+
+    def _alloc_page(self, slot: int) -> None:
+        assert self._free, "page pool exhausted past its reservations"
+        assert self._n_alloc[slot] < self.max_pages, \
+            f"slot {slot} exceeds capacity {self.capacity}"
+        pid = self._free.popleft()
+        self.table[slot, self._n_alloc[slot]] = pid
+        self._n_alloc[slot] += 1
+        self._reserved[slot] = max(0, self._reserved[slot] - 1)
+
+    def ensure(self, slot: int, length: int) -> None:
+        """Alloc-on-advance: guarantee pages cover positions [0, length)."""
+        while int(self._n_alloc[slot]) * self.page_size < length:
+            self._alloc_page(slot)
+
+    # -- cache writes ------------------------------------------------------
+
+    def _write_fn(self, pool: PyTree, new: PyTree, dest: jax.Array,
+                  slots: jax.Array) -> PyTree:
+        """Paged leaves: one scatter of every (row, position) prefill entry
+        into its flat pool row ``table[row, pos // ps] * ps + pos % ps``
+        (pad rows / positions past a slot's pages carry table id 0 and land
+        in the null page). Slot leaves: reverse-order row writes as in
+        :meth:`SlotPool._insert_rows_fn`."""
+        def w(p, n, bax, pax):
+            if pax >= 0:
+                # merge (n_pages, page_size) / (batch, seq) axis pairs: the
+                # pool's page axis sits where the prefill leaf's batch axis
+                # sits (both trees share the leading stacking dims), so one
+                # fancy-index set covers prefix and stack layouts
+                flat = p.reshape(p.shape[:pax] + (-1,) + p.shape[pax + 2:])
+                src = n.reshape(n.shape[:pax] + (-1,) + n.shape[pax + 2:])
+                idx = (slice(None),) * pax + (dest,)
+                flat = flat.at[idx].set(src.astype(p.dtype))
+                return flat.reshape(p.shape)
+            return p
+
+        pool = jax.tree_util.tree_map(w, pool, new, self._batch_axes,
+                                      self._page_axes)
+
+        def row(n, bax, i):
+            return jax.lax.slice_in_dim(n, i, i + 1, axis=bax)
+
+        def w_slot(p, n, bax, pax, i):
+            if pax >= 0:
+                return p
+            return jax.lax.dynamic_update_slice(
+                p, row(n, bax, i).astype(p.dtype),
+                tuple(slots[i] if d == bax else 0 for d in range(p.ndim)))
+
+        k_rows = slots.shape[0]
+        for i in reversed(range(k_rows)):
+            pool = jax.tree_util.tree_map(
+                lambda p, n, bax, pax: w_slot(p, n, bax, pax, i),
+                pool, new, self._batch_axes, self._page_axes)
+        return pool
+
+    def insert_rows(self, prefill_cache: PyTree, slots: np.ndarray,
+                    lengths: np.ndarray) -> None:
+        """Seat a batched prefill cache: allocate each real slot's prompt
+        pages, then scatter the (right-padded) KV rows into them. ``slots``
+        may carry pad rows past ``len(lengths)``; their table rows are
+        zeroed so pad writes land in the null page."""
+        assert max(lengths, default=0) <= self.capacity
+        k = len(lengths)
+        for s, l in zip(slots[:k], lengths):
+            self.ensure(int(s), int(l))
+        # prefill seq length from any paged leaf: the axis after the page
+        # axis in the pool is (batch, seq) in the prefill cache
+        seq = None
+        for leaf, pax in zip(jax.tree_util.tree_leaves(prefill_cache),
+                             jax.tree_util.tree_leaves(self._page_axes)):
+            if pax >= 0:
+                seq = leaf.shape[pax + 1]
+        assert seq is not None
+        k_pad = len(slots)
+        nbp = -(-seq // self.page_size)
+        bt = np.zeros((k_pad, nbp), np.int32)
+        bt[:k, :] = self.table[np.asarray(slots[:k]), :nbp]
+        # clamp columns past each slot's allocated pages to the null page
+        # (bucket padding may cover more pages than the prompt needs)
+        cols = np.arange(nbp)[None, :]
+        bt[:k] = np.where(cols < self._n_alloc[np.asarray(slots[:k]), None],
+                          bt[:k], 0)
+        pos = np.arange(seq)
+        dest = (bt[:, pos // self.page_size] * self.page_size
+                + (pos % self.page_size)[None, :])       # (k_pad, seq)
+        self.cache = self._write(self.cache, prefill_cache,
+                                 jnp.asarray(dest.reshape(-1), jnp.int32),
+                                 jnp.asarray(slots, jnp.int32))
+        for s, l in zip(slots[:k], lengths):
+            self.lens[s] = l
+
+    def insert(self, prefill_cache: PyTree, slot: int, length: int) -> None:
+        assert length <= self.capacity, (length, self.capacity)
+        self.insert_rows(prefill_cache, np.asarray([slot]),
+                         np.asarray([length]))
+
+    # -- decode-step views -------------------------------------------------
+
+    def table_width(self) -> int:
+        """Block-table columns the next decode step needs: pages covering
+        ``len + 1`` for the longest live slot, bucketed to a power of two
+        so jit retraces stay O(log max_pages)."""
+        live = self.lens[self.lens > 0]
+        need = self.pages_needed(int(live.max()) + 1) if live.size else 1
+        w = 1
+        while w < need:
+            w *= 2
+        return min(w, self.max_pages)
+
+    def device_tables(self, width: Optional[int] = None) -> jax.Array:
+        width = self.table_width() if width is None else width
+        return jnp.asarray(self.table[:, :width])
+
+    def live_page_rows(self) -> int:
+        """Cache rows the length-aware kernel reads this step (sum of live
+        pages × page_size over occupied slots)."""
+        live = self.lens[self.lens > 0] + 1
+        pages = -(-live // self.page_size)
+        return int(pages.sum()) * self.page_size
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def advance(self, slot: int) -> None:
+        self.lens[slot] += 1
+
+    def release(self, slot: int) -> None:
+        n = int(self._n_alloc[slot])
+        self._free.extend(int(p) for p in self.table[slot, :n])
+        self.table[slot, :] = 0
+        self._n_alloc[slot] = 0
+        self._reserved[slot] = 0
         self.lens[slot] = 0

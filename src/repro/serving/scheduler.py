@@ -77,6 +77,17 @@ class Scheduler:
             out.append((req, slot))
         return out
 
+    def requeue(self, slot: int) -> Request:
+        """Undo an admission (e.g. the KV page pool could not cover the
+        request): the request returns to the FRONT of the waiting queue and
+        the slot frees. Callers unwinding several admissions must requeue
+        them in reverse admission order to preserve FCFS."""
+        req = self.active.pop(slot)
+        req.slot = -1
+        self._free.append(slot)
+        self.waiting.appendleft(req)
+        return req
+
     def retire(self, slot: int) -> Request:
         req = self.active.pop(slot)
         self._free.append(slot)

@@ -148,6 +148,58 @@ def test_fully_pruned_block_edge_case():
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("impl", ["ref", "interpret", "dense_ref"])
+@pytest.mark.parametrize("use_planes", [False, True])
+def test_grouped_fused_swiglu_epilogue(impl, use_planes):
+    """bias + silu(gate)·up fused into the grouped dispatch's emit step
+    must equal the unfused per-member compute, on every impl and both
+    kernel variants (index planes vs precomputed one-hots)."""
+    from repro.kernels import bcr_matmul_grouped
+    from repro.kernels.plan import pack_group
+    members = [_pack(64, 96, (16, 32), 0.25, jnp.float32, seed=s)
+               for s in (21, 22)]
+    genome = {"use_planes": True} if use_planes else None
+    grouped = pack_group(members, genome)
+    bias = jnp.stack([jnp.full((64,), 0.25), jnp.full((64,), -0.5)])
+    x = jax.random.normal(jax.random.PRNGKey(13), (8, 96), jnp.float32)
+    want = (jax.nn.silu(bcr_spmm_ref(x, members[0]) + 0.25)
+            * (bcr_spmm_ref(x, members[1]) - 0.5))
+    got = bcr_matmul_grouped(x, grouped, impl=impl, bias=bias,
+                             epilogue="swiglu")
+    assert got.shape == (8, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_fused_bias_without_activation():
+    """bias-only fusion (Q/KV groups) still returns per-member outputs."""
+    from repro.kernels import bcr_matmul_grouped
+    from repro.kernels.plan import pack_group
+    members = [_pack(64, 96, (16, 32), 0.25, jnp.float32, seed=s)
+               for s in (23, 24, 25)]
+    grouped = pack_group(members)
+    bias = jnp.stack([jnp.full((64,), float(i)) for i in range(3)])
+    x = jax.random.normal(jax.random.PRNGKey(14), (8, 96), jnp.float32)
+    for impl in ("ref", "interpret"):
+        y = bcr_matmul_grouped(x, grouped, impl=impl, bias=bias)
+        assert y.shape == (8, 3, 64)
+        for g, mem in enumerate(members):
+            np.testing.assert_allclose(
+                np.asarray(y[:, g]),
+                np.asarray(bcr_spmm_ref(x, mem) + float(g)),
+                atol=1e-4, rtol=1e-4, err_msg=f"member {g}")
+
+
+def test_swiglu_epilogue_rejects_bad_group():
+    from repro.kernels import bcr_matmul_grouped
+    from repro.kernels.plan import pack_group
+    grouped = pack_group([_pack(64, 96, (16, 32), 0.25, jnp.float32, seed=s)
+                          for s in (26, 27, 28)])
+    x = jnp.zeros((8, 96), jnp.float32)
+    with pytest.raises(ValueError):
+        bcr_matmul_grouped(x, grouped, impl="interpret", epilogue="swiglu")
+
+
 def _w_shaped_in_hlo(fn, args, n, k) -> bool:
     """True iff the compiled step materializes any W-shaped (N, K) tensor
     (checks both HLO `f32[n,k]` and StableHLO `tensor<nxkxf32>` spellings)."""

@@ -55,6 +55,68 @@ def test_plan_cost_model_monotone_in_keep():
     assert t_sparse <= t_dense
 
 
+def test_wallclock_fitness_backend():
+    """Opt-in measured-latency fitness: finite on a legal genome, inf on an
+    illegal m_tile, and the GA tuner runs end-to-end with it. The plans it
+    produces compute the same numbers (dispatch knobs only)."""
+    from repro.core.block_search import wallclock_plan_fitness
+    fit = wallclock_plan_fitness(8, 96, 64, (16, 32), 8, 8, iters=1)
+    legal = {"m_tile": 8, "use_planes": False, "grid_order": "mij",
+             "group_size": 1}
+    t = fit(legal)
+    assert np.isfinite(t) and t > 0
+    assert fit({**legal, "m_tile": 7}) == float("inf")
+    g = tuned_genome(8, 96, 64, (16, 32), 8, 8, max_group=2,
+                     fitness="wallclock")
+    assert g["m_tile"] % 8 == 0 and g["grid_order"] in ("mij", "imj")
+    packed = tune_packed(_pack(), m=8, fitness="wallclock")
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 96), jnp.float32)
+    np.testing.assert_allclose(np.asarray(bcr_matmul(x, packed, impl="ref")),
+                               np.asarray(bcr_spmm_ref(x, packed)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_unknown_fitness_backend_rejected():
+    with pytest.raises(ValueError):
+        tuned_genome(8, 96, 64, (16, 32), 8, 8, fitness="oracle")
+
+
+def test_auto_block_selection_prefers_fewer_grid_steps():
+    """pack_params(auto_block=True): Listing-1 latency-only selection — at
+    serving shapes the analytic backend never picks a smaller block that
+    multiplies grid steps without saving bytes (block 128 beat 32 by ~3x
+    measured on the CPU ref path)."""
+    from repro.core.block_search import analytic_tpu_latency, synthesize
+    from repro.launch.serve import _auto_block_spec
+    spec = BCRSpec(block_shape=(32, 32), keep_frac=0.25, align=8)
+    picked = _auto_block_spec(spec, (512, 512), 0.25, 8)
+    t_picked = analytic_tpu_latency(
+        synthesize(8, 512, 512, 0.25, picked.block_shape))
+    t_small = analytic_tpu_latency(synthesize(8, 512, 512, 0.25, (32, 32)))
+    assert t_picked <= t_small
+    assert picked.block_shape[0] >= 32      # never *worse* than the config
+    # cached per geometry
+    again = _auto_block_spec(spec, (512, 512), 0.25, 8)
+    assert again.block_shape == picked.block_shape
+
+
+def test_pack_params_auto_block_end_to_end():
+    """auto_block packing serves the same numbers as config-block packing
+    (block size is a latency knob, not a semantics knob)."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import pack_params
+    from repro.models.api import model_fns
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              bcr_keep_frac=0.5, bcr_block=(16, 16))
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    packed = pack_params(cfg, params, auto_block=True)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = fns.prefill(packed, {"tokens": toks})
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
 # ---------------------------------------------------------------------------
 # Planes / grid order dispatch
 # ---------------------------------------------------------------------------
