@@ -126,6 +126,91 @@ def bench_long_context(args):
     return row
 
 
+def bench_shared_prefix(args):
+    """Prefix-cache payoff at batch 8: TTFT of a prefix-hit admission
+    (suffix-only prefill over adopted pages) vs a cold prefill of the full
+    prompt, plus total pages allocated vs the unshared paged engine on the
+    SAME workload (dense weights — isolates the sharing lever).
+
+    Workload: two admission waves of `batch` requests, every prompt =
+    one shared system prompt (`--system-len`) + a short per-request user
+    suffix. Wave 1 is cold and publishes the system pages; wave 2 hits.
+    TTFT is measured per request from submit to the recorded first-token
+    time (the decode step after admission is excluded), with all programs
+    precompiled by warmup."""
+    sfx_lens = list(args.sfx_lens)
+    cap = args.system_len + max(sfx_lens) + args.long_gen + args.page_size
+    cfg = scaled_cfg(args, keep=0.0)
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    batch = max(args.slots)
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab_size,
+                          size=args.system_len).astype(np.int32)
+
+    def wave(seed):
+        r = np.random.default_rng(seed)
+        return [np.concatenate([system, r.integers(
+            0, cfg.vocab_size,
+            size=int(sfx_lens[i % len(sfx_lens)])).astype(np.int32)])
+            for i in range(batch)]
+
+    def admit_ttft(eng, prompts):
+        """Submit a full batch, run the admission step, read per-request
+        TTFT off the engine's own first-token timestamps."""
+        t0 = time.perf_counter()
+        rids = [eng.submit(p, max_new_tokens=args.long_gen)
+                for p in prompts]
+        eng.step()
+        reqs = {r.rid: r for r in list(eng.sched.active.values())
+                + eng.sched.finished}
+        ttft = [reqs[rid].first_token_time - t0 for rid in rids]
+        done = {r.rid: r.generated for r in eng.run()}
+        return float(np.mean(ttft)), [done[rid] for rid in rids]
+
+    waves = [wave(11), wave(12)]
+    results = {}
+    for shared in (True, False):
+        eng = InferenceEngine(cfg, params, EngineConfig(
+            n_slots=batch, capacity=cap, page_size=args.page_size,
+            prefix_cache=shared))
+        eng.warmup([len(p) for p in waves[0]],
+                   suffix_lens=[max(sfx_lens) + args.page_size, 1])
+        t_cold, toks_cold = admit_ttft(eng, waves[0])
+        t_second, toks_second = admit_ttft(eng, waves[1])
+        results[shared] = dict(
+            ttft_cold=t_cold, ttft_second=t_second,
+            tokens=toks_cold + toks_second,
+            pages_allocated=eng.stats["pages_allocated"],
+            prefix_hit_tokens=eng.stats["prefix_hit_tokens"],
+            pages_shared=eng.stats["pages_shared"],
+            cow_copies=eng.stats["cow_copies"])
+    assert results[True]["tokens"] == results[False]["tokens"], \
+        "prefix sharing changed generated tokens"
+    sh, un = results[True], results[False]
+    row = {
+        "section": "shared_prefix", "arch": args.arch, "batch": batch,
+        "system_len": args.system_len, "sfx_lens": sfx_lens,
+        "page_size": args.page_size, "capacity": cap,
+        "d_model": cfg.d_model,
+        "ttft_cold_s": sh["ttft_cold"], "ttft_hit_s": sh["ttft_second"],
+        "prefix_ttft_speedup": sh["ttft_cold"] / sh["ttft_second"],
+        "prefix_hit_tokens": sh["prefix_hit_tokens"],
+        "pages_shared": sh["pages_shared"],
+        "cow_copies": sh["cow_copies"],
+        "pages_allocated": sh["pages_allocated"],
+        "pages_allocated_unshared": un["pages_allocated"],
+        "tokens_match_unshared": True,
+    }
+    print(f"shared-prefix batch={batch} sys={args.system_len}: hit TTFT "
+          f"{sh['ttft_second']*1e3:.1f} ms vs cold "
+          f"{sh['ttft_cold']*1e3:.1f} ms → "
+          f"{row['prefix_ttft_speedup']:.2f}x; pages allocated "
+          f"{sh['pages_allocated']} vs {un['pages_allocated']} unshared "
+          f"({sh['pages_shared']} adopted, {sh['cow_copies']} CoW)")
+    return row
+
+
 def bench_static(cfg, params, prompts, gens, batch, capacity):
     """Legacy one-batch-at-a-time loop at equal useful load: fixed batches
     in arrival order, uniform prompt padding, every batch decoded to its
@@ -188,6 +273,16 @@ def main():
     ap.add_argument("--min-paged-vs-masked", type=float, default=0.0,
                     help="exit 1 if long-context paged tok/s ÷ masked-"
                          "dense tok/s falls below this")
+    # shared-prefix prefix-cache section: every request shares one system
+    # prompt; wave 2 admissions hit the cache and prefill only their
+    # short user suffixes
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="also run the prefix-cache TTFT/pages bench")
+    ap.add_argument("--system-len", type=int, default=96)
+    ap.add_argument("--sfx-lens", type=int, nargs="+", default=[4, 8, 12])
+    ap.add_argument("--min-prefix-ttft-speedup", type=float, default=0.0,
+                    help="exit 1 if prefix-hit admission TTFT speedup "
+                         "over cold prefill falls below this")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -232,14 +327,40 @@ def main():
         long_row = bench_long_context(args)
         results.append(long_row)
 
+    prefix_row = None
+    if args.shared_prefix:
+        prefix_row = bench_shared_prefix(args)
+        results.append(prefix_row)
+
     payload = {"benchmark": "serve", "packed_vs_dense": ratios,
                "results": results}
     if long_row is not None:
         payload["paged_vs_masked"] = long_row["paged_vs_masked"]
         payload["long_context"] = long_row
+    if prefix_row is not None:
+        payload["prefix_ttft_speedup"] = prefix_row["prefix_ttft_speedup"]
+        payload["shared_prefix"] = prefix_row
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
+
+    if args.min_prefix_ttft_speedup > 0:
+        if prefix_row is None:
+            raise SystemExit("--min-prefix-ttft-speedup needs "
+                             "--shared-prefix")
+        if prefix_row["prefix_ttft_speedup"] < args.min_prefix_ttft_speedup:
+            raise SystemExit(
+                f"PERF REGRESSION: prefix-hit admission TTFT "
+                f"{prefix_row['prefix_ttft_speedup']:.2f}x cold prefill "
+                f"at batch {prefix_row['batch']} "
+                f"(< {args.min_prefix_ttft_speedup}x required)")
+        if (prefix_row["pages_allocated"]
+                >= prefix_row["pages_allocated_unshared"]):
+            raise SystemExit(
+                f"PERF REGRESSION: prefix sharing allocated "
+                f"{prefix_row['pages_allocated']} pages vs "
+                f"{prefix_row['pages_allocated_unshared']} unshared — "
+                f"sharing must strictly reduce page demand")
 
     if args.min_paged_vs_masked > 0:
         if long_row is None:
@@ -256,7 +377,8 @@ def main():
             raise SystemExit(
                 "--min-packed-vs-dense needs both a dense (0) and a packed "
                 "(>0) entry in --keeps to evaluate the gate")
-        big = max(r["batch"] for r in results if r["keep_frac"] > 0)
+        big = max(r["batch"] for r in results
+                  if r.get("keep_frac", 0) > 0)
         worst = min(v for k, v in ratios.items() if k.endswith(f"_batch{big}"))
         if worst < args.min_packed_vs_dense:
             raise SystemExit(

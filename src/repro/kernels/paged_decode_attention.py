@@ -1,4 +1,4 @@
-"""Pallas TPU flash-decode over a block-paged KV cache.
+"""Pallas TPU flash attention over a block-paged KV cache.
 
 The masked-dense ``decode_attention`` reads the ENTIRE ``(B, capacity, Hkv,
 D)`` cache every step and relies on a ``-1e30`` mask to discard dead
@@ -9,23 +9,39 @@ KV cache: K/V live in a shared page pool ``(n_pages, page_size, Hkv, D)``
 and each slot owns a block table of physical page ids, so the grid only
 *reads* each slot's live pages.
 
+ONE kernel body serves two entry points:
+
+* :func:`paged_decode_attention` — the decode hot loop: 1 query row per
+  slot (``S = 1``), each at position ``cache_len - 1``.
+* :func:`paged_prefill_append_attention` — suffix prefill over a shared
+  prefix: an ``S``-row query block per slot whose row ``i`` sits at
+  absolute position ``prefix_len + i`` and attends to every cached page
+  position ``<= prefix_len + i`` (online softmax over the prefix pages,
+  causal mask inside the chunk). The suffix K/V must already be scattered
+  into the slot's pages before the call — the kernel reads *pages only*.
+
 grid = (B, Hkv, n_table_cols), pages innermost. Per (slot b, kv-head h):
 
-  1. the block table and length vector arrive via scalar prefetch, so the
-     K/V BlockSpec index maps can translate the logical page ``p`` of slot
-     ``b`` into a physical page id *before* the body runs;
+  1. the block table, live-page counts and per-slot prefix lengths arrive
+     via scalar prefetch, so the K/V BlockSpec index maps can translate
+     the logical page ``p`` of slot ``b`` into a physical page id *before*
+     the body runs;
   2. dead steps (``p`` at/past the slot's live page count) clamp the index
      map to the last live page — Pallas elides the DMA when consecutive
      grid steps map to the same block, so a slot's HBM traffic is its live
      pages, not the table width — and skip all compute via ``pl.when``;
-  3. live steps run one online-softmax accumulation over the page: all G
-     q-heads of kv-head h (GQA group) share the page read; only the FINAL
-     partial page pays a positional mask (interior pages are fully live);
+  3. live steps run one online-softmax accumulation over the page: the
+     query block is ``S x G`` rows (all G q-heads of kv-head h share the
+     page read; decode is the S=1 special case), with a per-row causal
+     mask ``pos <= prefix_len + row // G``. Interior prefix pages are
+     fully live for every row; only the final partial page and the
+     suffix's own pages pay a partially-masked tile;
   4. the output block is revisited across the page sweep and written once,
      at the last grid step.
 
-VMEM residency per (b, h): q (G, D), one K page + one V page, and the
-(G, 1)/(G, D) online-softmax state — independent of context length.
+VMEM residency per (b, h): q (S*G, D), one K page + one V page, and the
+(S*G, 1)/(S*G, D) online-softmax state — independent of context length
+(but linear in the suffix chunk S, which the engine buckets).
 """
 
 from __future__ import annotations
@@ -41,9 +57,9 @@ NEG_INF = -1e30
 _SUBLANE = 8
 
 
-def _kernel(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+def _kernel(bt_ref, live_ref, plen_ref, q_ref, k_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *, page_size: int, n_cols: int,
-            scale: float):
+            scale: float, group: int):
     p = pl.program_id(2)                  # logical page of this slot
     b = pl.program_id(0)
 
@@ -53,21 +69,24 @@ def _kernel(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    length = len_ref[b]
+    plen = plen_ref[b]
 
-    @pl.when(p * page_size < length)
+    @pl.when(p < live_ref[b])
     def _page():
-        q = q_ref[0, 0]                   # (G, D)
+        q = q_ref[0, 0]                   # (S*G padded, D)
         k = k_ref[0, :, 0, :]             # (page_size, D)
         v = v_ref[0, :, 0, :]
         s = jax.lax.dot_general(
             q, k, dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (G, page_size)
-        # only the final partial page has dead tail positions
-        pos = p * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 1)
-        s = jnp.where(pos < length, s, NEG_INF)
-        m_prev = m_ref[...]               # (G, 1)
+            preferred_element_type=jnp.float32) * scale  # (rows, page_size)
+        # per-row causal mask: row r is q-head r % G of suffix position
+        # r // G, at absolute position plen + r // G. For decode (S=1)
+        # this degenerates to the uniform ``pos < cache_len`` mask; rows
+        # padded past S*G attend garbage and are sliced off by the caller.
+        pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qpos = plen + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        s = jnp.where(pos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]               # (rows, 1)
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
         prob = jnp.exp(s - m_new)
@@ -80,6 +99,70 @@ def _kernel(bt_ref, live_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     def _emit():
         denom = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _paged_attention(q, k_pages, v_pages, block_tables, prefix_len,
+                     total_len, *, interpret: bool):
+    """Shared driver: q (B, S, H, D) query block per slot, row ``i`` at
+    absolute position ``prefix_len[b] + i``, attending to table pages
+    covering positions ``[0, total_len[b])`` under the per-row causal
+    mask. Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    n_pages, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    n_cols = block_tables.shape[1]
+    scale = d ** -0.5
+
+    # (B, Hkv, S*G, D) with the row count padded to the sublane granule so
+    # the (rows, page_size) logits tile is legal on TPU
+    qg = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, s * g, d)
+    rows = s * g
+    rp = -(-rows // _SUBLANE) * _SUBLANE
+    if rp != rows:
+        qg = jnp.concatenate(
+            [qg, jnp.zeros((b, hkv, rp - rows, d), qg.dtype)], axis=2)
+
+    plen = jnp.asarray(prefix_len, jnp.int32)
+    tlen = jnp.asarray(total_len, jnp.int32)
+    live = -(-tlen // page_size)          # live page count per slot
+
+    def k_map(b_, h_, p_, bt_ref, live_ref, plen_ref):
+        # dead steps re-reference the slot's last live page (floored at
+        # table column 0 for fully dead slots): the block index is
+        # unchanged from the previous step, so Pallas skips the DMA —
+        # per-slot HBM traffic is live pages, not table width
+        col = jnp.minimum(p_, jnp.maximum(live_ref[b_] - 1, 0))
+        return bt_ref[b_, col], 0, h_, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_cols),
+        in_specs=[
+            pl.BlockSpec((1, 1, rp, d),
+                         lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d), k_map),
+            pl.BlockSpec((1, page_size, 1, d), k_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rp, d),
+                               lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rp, 1), jnp.float32),    # running max m
+            pltpu.VMEM((rp, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((rp, d), jnp.float32),    # output accumulator
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, page_size=page_size, n_cols=n_cols, scale=scale, group=g)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rp, d), q.dtype),
+        interpret=interpret,
+        name="paged_attention",
+    )(block_tables.astype(jnp.int32), live, plen, qg, k_pages, v_pages)
+    out = out[:, :, :rows, :].reshape(b, hkv, s, g, d)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, d)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -99,59 +182,35 @@ def paged_decode_attention(
     (bucketed by the engine); entries past a slot's live pages are never
     read (index-map clamp + ``pl.when``). Returns ``(B, 1, H, D)``.
     """
-    b, s, h, d = q.shape
-    assert s == 1, "paged_decode_attention is a single-step kernel"
-    n_pages, page_size, hkv, _ = k_pages.shape
-    g = h // hkv
-    n_cols = block_tables.shape[1]
-    scale = d ** -0.5
-
-    # (B, Hkv, G, D) with the GQA group padded to the sublane granule so
-    # the (G, page_size) logits tile is legal on TPU
-    qg = q.reshape(b, hkv, g, d)
-    gp = -(-g // _SUBLANE) * _SUBLANE
-    if gp != g:
-        qg = jnp.concatenate(
-            [qg, jnp.zeros((b, hkv, gp - g, d), qg.dtype)], axis=2)
-
+    assert q.shape[1] == 1, "paged_decode_attention is a single-step kernel"
     lens = jnp.asarray(cache_len, jnp.int32)
-    # live page count per slot, floored at 1 so the dead-step clamp below
-    # always lands on a real table entry
-    live = jnp.maximum(-(-lens // page_size), 1)
+    return _paged_attention(q, k_pages, v_pages, block_tables,
+                            lens - 1, lens, interpret=interpret)
 
-    def k_map(b_, h_, p_, bt_ref, live_ref, len_ref):
-        # dead steps re-reference the slot's last live page: the block
-        # index is unchanged from the previous step, so Pallas skips the
-        # DMA — per-slot HBM traffic is live pages, not table width
-        return bt_ref[b_, jnp.minimum(p_, live_ref[b_] - 1)], 0, h_, 0
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(b, hkv, n_cols),
-        in_specs=[
-            pl.BlockSpec((1, 1, gp, d),
-                         lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d), k_map),
-            pl.BlockSpec((1, page_size, 1, d), k_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, gp, d),
-                               lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((gp, 1), jnp.float32),    # running max m
-            pltpu.VMEM((gp, 1), jnp.float32),    # running denom l
-            pltpu.VMEM((gp, d), jnp.float32),    # output accumulator
-        ],
-    )
-    kernel = functools.partial(
-        _kernel, page_size=page_size, n_cols=n_cols, scale=scale)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, d), q.dtype),
-        interpret=interpret,
-        name="paged_decode_attention",
-    )(block_tables.astype(jnp.int32), live, lens, qg, k_pages, v_pages)
-    return out[:, :, :g, :].reshape(b, 1, h, d)
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_append_attention(
+    q: jax.Array,              # (B, S, H, D) — S suffix rows per slot
+    k_pages: jax.Array,        # (n_pages, page_size, Hkv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_cols) int32 physical page ids
+    prefix_len: jax.Array,     # (B,) cached positions BEFORE the suffix
+    total_len: jax.Array,      # (B,) prefix_len + true suffix length
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Prefill-append: the uncached suffix attends to cached prefix pages
+    without re-running them (multi-query generalization of the decode
+    kernel — decode is the S=1, prefix_len=cache_len-1 special case).
+
+    The suffix K/V rows must already be scattered into the slot's table
+    pages (positions ``prefix_len + i``); the kernel reads pages only.
+    Rows at/past a slot's true suffix length produce garbage output that
+    the caller discards (per-row logits are taken at the true last token).
+    Returns ``(B, S, H, D)``.
+    """
+    return _paged_attention(q, k_pages, v_pages, block_tables,
+                            prefix_len, total_len, interpret=interpret)
 
 
 def paged_kv_bytes(cache_len, page_size: int, hkv: int, d: int,

@@ -151,6 +151,42 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def paged_prefill_append_ref(q: jax.Array, k_pages: jax.Array,
+                             v_pages: jax.Array, block_tables: jax.Array,
+                             prefix_len: jax.Array, total_len: jax.Array
+                             ) -> jax.Array:
+    """Pure-JAX oracle for the paged prefill-append kernel: gather each
+    slot's table pages, then causally masked attention for an S-row query
+    block whose row ``i`` sits at absolute position ``prefix_len[b] + i``.
+
+    q ``(B, S, H, D)``; pages ``(n_pages, page_size, Hkv, D)``; tables
+    ``(B, n_cols)``; ``prefix_len`` counts cached positions before the
+    suffix, ``total_len = prefix_len + true suffix length`` bounds the
+    live positions. The suffix K/V must already be scattered into the
+    table pages (the model's append path writes them first) — both the
+    ref and the Pallas kernel read pages only. Rows at/past the true
+    suffix length produce garbage that the caller discards.
+    """
+    b, s, h, d = q.shape
+    n_pages, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    l = block_tables.shape[1] * page_size
+    k = jnp.take(k_pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    v = jnp.take(v_pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    qg = q.reshape(b, s, hkv, g, d).astype(k.dtype)
+    logits = jnp.einsum("bshgd,bkhd->bhgsk", qg, k,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    qpos = jnp.asarray(prefix_len, jnp.int32)[:, None] + jnp.arange(s)[None]
+    kpos = jnp.arange(l)
+    valid = ((kpos[None, None] <= qpos[:, :, None])
+             & (kpos[None, None] < jnp.asarray(total_len)[:, None, None]))
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgsk,bkhd->bshgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
 def masked_dense_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
     """Training-path reference: dense matmul with a hard BCR mask."""
     wm = (w * mask.astype(w.dtype))

@@ -223,6 +223,12 @@ class TrafficConfig:
     top_k: int = 0
     seed: int = 0
     warmup: bool = True
+    # shared-prefix workload: each request = one of `system_prompts`
+    # fixed system prompts of `system_len` tokens + a per-request user
+    # suffix drawn from prompt_lens (the millions-of-users-few-prompts
+    # serving shape the prefix cache targets). 0 → fully random prompts.
+    system_prompts: int = 0
+    system_len: int = 32
 
 
 def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
@@ -233,16 +239,30 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
     gaps; the loop admits whatever has arrived, steps the ragged decode
     batch, and sleeps only when fully idle ahead of the next arrival.
     """
-    if tc.warmup:
-        # compile prefill buckets + decode outside the measured window,
-        # else TTFT/p99 report jit time instead of serving latency
-        engine.warmup(tc.prompt_lens)
     rng = np.random.default_rng(tc.seed)
     gaps = rng.exponential(1.0 / tc.rate, size=tc.n_requests)
     arrivals = np.cumsum(gaps)
     plens = rng.choice(tc.prompt_lens, size=tc.n_requests)
-    prompts = [rng.integers(0, engine.cfg.vocab_size, size=int(p))
-               .astype(np.int32) for p in plens]
+    if tc.system_prompts > 0:
+        systems = [rng.integers(0, engine.cfg.vocab_size,
+                                size=tc.system_len).astype(np.int32)
+                   for _ in range(tc.system_prompts)]
+        prompts = [np.concatenate([
+            systems[int(rng.integers(tc.system_prompts))],
+            rng.integers(0, engine.cfg.vocab_size, size=int(p))
+            .astype(np.int32)]) for p in plens]
+    else:
+        prompts = [rng.integers(0, engine.cfg.vocab_size, size=int(p))
+                   .astype(np.int32) for p in plens]
+    if tc.warmup:
+        # compile prefill buckets + decode (and, with prefix sharing, the
+        # suffix-append buckets) outside the measured window, else
+        # TTFT/p99 report jit time instead of serving latency
+        # suffix lengths at a hit: the user suffix plus up to a page of
+        # unmatched system tail (plus the 1-token full-hit case)
+        sfx = (tuple(int(p) + engine.ec.page_size for p in plens) + (1,)
+               if tc.system_prompts else None)
+        engine.warmup([len(p) for p in prompts], suffix_lens=sfx)
 
     t0 = time.perf_counter()
     submitted = 0
@@ -267,8 +287,10 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         ttft.append((r.first_token_time - t0) - r.arrival_time)
         itl.extend(np.diff(r.token_times))
     total_tokens = sum(len(r.generated) for r in reqs)
+    prompt_tokens = sum(r.prompt_len for r in reqs)
     pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
     occ = engine.stats["slot_occupancy"]
+    st = engine.stats
     metrics = {
         "n_requests": len(reqs),
         "total_tokens": total_tokens,
@@ -280,6 +302,13 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
                    "p99": pct(ttft, 99)},
         "per_token_s": {"p50": pct(itl, 50), "p95": pct(itl, 95),
                         "p99": pct(itl, 99)},
+        "page_stalls": st["page_stalls"],
+        "prefix_hit_rate": (st["prefix_hit_tokens"] / prompt_tokens
+                            if prompt_tokens else 0.0),
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "pages_shared": st["pages_shared"],
+        "cow_copies": st["cow_copies"],
+        "evictions": st["evictions"],
     }
     log(f"{len(reqs)} requests, {total_tokens} tokens in {elapsed:.2f}s "
         f"→ {metrics['throughput_tok_s']:.1f} tok/s; "
@@ -291,6 +320,10 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         f"{metrics['per_token_s']['p50']*1e3:.2f}/"
         f"{metrics['per_token_s']['p95']*1e3:.2f}/"
         f"{metrics['per_token_s']['p99']*1e3:.2f} ms")
+    log(f"prefix_hit_rate {metrics['prefix_hit_rate']:.2f} "
+        f"(hit tokens {st['prefix_hit_tokens']}/{prompt_tokens}); "
+        f"pages_shared {st['pages_shared']}; cow_copies {st['cow_copies']}; "
+        f"evictions {st['evictions']}; page_stalls {st['page_stalls']}")
     return metrics
 
 
@@ -331,6 +364,18 @@ def main() -> None:
                    help="total KV pages per layer (0 → full provisioning); "
                         "< slots×capacity/page oversubscribes HBM with "
                         "page-budget admission control")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="share KV pages across requests: admissions adopt "
+                        "cached full-page prompt prefixes (ref-counted, "
+                        "CoW) and prefill only the uncached suffix "
+                        "(needs --page-size)")
+    p.add_argument("--system-prompts", type=int, default=0,
+                   help="shared-prefix workload: N fixed system prompts; "
+                        "each request = one of them + a random user "
+                        "suffix (0 → fully random prompts)")
+    p.add_argument("--system-len", type=int, default=32,
+                   help="system-prompt length (tokens) for "
+                        "--system-prompts")
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--requests", type=int, default=32)
@@ -371,22 +416,30 @@ def main() -> None:
                                           capacity=args.capacity))
         return
 
+    if args.prefix_cache and not args.page_size:
+        p.error("--prefix-cache needs --page-size (paged KV pool)")
     engine = InferenceEngine(cfg, params, EngineConfig(
         n_slots=args.slots, capacity=args.capacity,
-        page_size=args.page_size, kv_pages=args.kv_pages or None))
+        page_size=args.page_size, kv_pages=args.kv_pages or None,
+        prefix_cache=args.prefix_cache))
     # mixed prompt lengths around --prompt-len, clamped so every request
-    # fits its slot (prompt + gen ≤ capacity)
-    pmax = args.capacity - args.gen
+    # fits its slot (prompt + gen ≤ capacity; shared-prefix workloads
+    # also carry --system-len tokens per prompt)
+    pmax = args.capacity - args.gen - (args.system_len
+                                       if args.system_prompts else 0)
     if pmax < 1:
         p.error(f"--capacity {args.capacity} leaves no room for prompts "
-                f"after --gen {args.gen}")
+                f"after --gen {args.gen}"
+                + (f" + --system-len {args.system_len}"
+                   if args.system_prompts else ""))
     plens = {max(4, args.prompt_len // 2), args.prompt_len,
              args.prompt_len * 2}
     plens = tuple(sorted(min(max(x, 1), pmax) for x in plens))
     tc = TrafficConfig(
         n_requests=args.requests, rate=args.rate, gen_tokens=args.gen,
         prompt_lens=plens,
-        temperature=args.temperature, top_k=args.top_k)
+        temperature=args.temperature, top_k=args.top_k,
+        system_prompts=args.system_prompts, system_len=args.system_len)
     metrics = run_traffic(engine, tc)
     if args.json_out:
         with open(args.json_out, "w") as f:

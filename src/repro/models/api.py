@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,10 @@ class ModelFns:
     prefill: Callable            # (params, batch) -> (logits, cache)
     decode_step: Callable        # (params, batch, cache) -> (logits, cache)
     init_cache: Callable         # (batch, capacity[, kv_pages, page_size])
+    # suffix-only prefill over a paged cache holding a shared prefix
+    # (params, batch, cache) -> (logits, cache); None for families
+    # without a paged prefix-append path (encdec)
+    prefill_append: Optional[Callable] = None
 
 
 def model_fns(cfg: ModelConfig) -> ModelFns:
@@ -46,11 +50,14 @@ def model_fns(cfg: ModelConfig) -> ModelFns:
         loss_fn=lambda p, b: causal_lm.loss_fn(cfg, p, b),
         prefill=lambda p, b: causal_lm.prefill(
             cfg, p, b["tokens"], image_embeds=b.get("image_embeds"),
-            length=b.get("length")),
+            length=b.get("length"), token_mask=b.get("token_mask")),
         decode_step=lambda p, b, c: causal_lm.decode_step(
             cfg, p, b["tokens"], c, b["cache_len"],
-            b.get("block_tables")),
+            b.get("block_tables"), token_mask=b.get("token_mask")),
         init_cache=functools.partial(causal_lm.init_cache, cfg),
+        prefill_append=lambda p, b, c: causal_lm.prefill_append(
+            cfg, p, b["tokens"], c, b["prefix_len"], b["block_tables"],
+            length=b.get("length")),
     )
 
 

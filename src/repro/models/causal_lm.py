@@ -155,9 +155,18 @@ def layer_apply(
     kinds: Tuple[str, str], lp: Params, x: jax.Array, cfg: ModelConfig, *,
     positions: jax.Array, cache: Optional[Params] = None,
     cache_len: Optional[jax.Array] = None,
-    block_tables: Optional[jax.Array] = None, want_cache: bool = False,
+    block_tables: Optional[jax.Array] = None,
+    suffix_len: Optional[jax.Array] = None,
+    token_mask: Optional[jax.Array] = None, want_cache: bool = False,
 ) -> Tuple[jax.Array, Optional[Params]]:
-    """One transformer/SSM layer; decode when ``cache`` is provided."""
+    """One transformer/SSM layer; decode when ``cache`` is provided.
+
+    ``token_mask`` (B, S) bool marks tokens allowed to claim MoE expert
+    capacity (None → all); attention/MLP/recurrent paths ignore it — they
+    are row-independent, only capacity-factor routing couples tokens.
+    ``suffix_len`` switches a paged multi-token call into prefill-append
+    (see ``attention_apply``).
+    """
     mixer_kind, ffn_kind = kinds
     impl = cfg.kernel_impl
     x = part.act(x, "batch", "seq_sp", "embed")
@@ -171,7 +180,7 @@ def layer_apply(
             rope_theta=cfg.rope_theta, causal=True,
             cache=(cache["mixer"] if cache is not None else None),
             cache_len=cache_len, block_tables=block_tables,
-            attn_impl=cfg.attn_impl,
+            suffix_len=suffix_len, attn_impl=cfg.attn_impl,
             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, impl=impl)
         if cache is not None or want_cache:
             new_cache["mixer"] = {
@@ -209,7 +218,8 @@ def layer_apply(
     if ffn_kind == "mlp":
         out2 = L.swiglu_apply(lp["ffn"], h2, impl)
     elif ffn_kind == "moe":
-        out2 = MOE.moe_apply(lp["ffn"], h2, cfg, impl)
+        out2 = MOE.moe_apply(lp["ffn"], h2, cfg, impl,
+                             token_mask=token_mask)
     elif ffn_kind == "rwkv_cm":
         if cache is not None:
             out2, cc = M.rwkv_cm_apply_step(lp["ffn"], h2, cache["ffn"], cfg, impl)
@@ -326,7 +336,8 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, *,
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                 cache: Params, cache_len: jax.Array,
-                block_tables: Optional[jax.Array] = None
+                block_tables: Optional[jax.Array] = None,
+                token_mask: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Params]:
     """One serving step: tokens (B, 1) + cache → (logits (B, 1, V), cache').
 
@@ -338,6 +349,10 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     cache layout: KV bytes touched per step scale with the table width the
     caller hands over (bucketed to the longest live slot) instead of the
     provisioned capacity.
+
+    ``token_mask`` (B, 1) marks rows allowed to claim MoE expert capacity
+    — the engine passes ``lens > 0`` so free-slot garbage rows cannot
+    evict real tokens (None → all rows route, the single-request path).
     """
     sp = stack_plan(cfg)
     b = tokens.shape[0]
@@ -351,7 +366,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
     for kinds, lp, c in zip(sp.prefix, params["prefix"], cache["prefix"]):
         x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
                             cache=c, cache_len=cache_len,
-                            block_tables=block_tables)
+                            block_tables=block_tables,
+                            token_mask=token_mask)
         new_prefix.append(nc)
 
     new_stack = cache["stack"]
@@ -362,7 +378,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
             for kinds, lp, c in zip(sp.pattern, rep_params, rep_cache):
                 x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
                                     cache=c, cache_len=cache_len,
-                                    block_tables=block_tables)
+                                    block_tables=block_tables,
+                                    token_mask=token_mask)
                 ncs.append(nc)
             return x, ncs
         x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
@@ -374,7 +391,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             image_embeds: Optional[jax.Array] = None,
-            length: Optional[jax.Array] = None
+            length: Optional[jax.Array] = None,
+            token_mask: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Params]:
     """Serving prefill: forward pass returning last-position logits + the
     attention KV for the processed prompt (cache at length S).
@@ -383,7 +401,9 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     right-padded to a bucket size: logits are taken at position
     ``length - 1`` instead of S-1. Pad positions produce garbage KV, which
     downstream decode masks out via per-slot ``cache_len`` — causality
-    guarantees real positions never attend to right-pads.
+    guarantees real positions never attend to right-pads. ``token_mask``
+    (B, S) additionally keeps pad positions/rows out of MoE expert
+    capacity (attention/MLP layers ignore it).
     """
     sp = stack_plan(cfg)
     b, s = tokens.shape
@@ -393,7 +413,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     new_prefix = []
     for kinds, lp in zip(sp.prefix, params["prefix"]):
         x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
-                            want_cache=True)
+                            token_mask=token_mask, want_cache=True)
         new_prefix.append(nc)
 
     new_stack = []
@@ -402,7 +422,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             ncs = []
             for kinds, lp in zip(sp.pattern, rep_params):
                 x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
-                                    want_cache=True)
+                                    token_mask=token_mask, want_cache=True)
                 ncs.append(nc)
             return x, ncs
         if cfg.remat:
@@ -415,5 +435,63 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     else:
         idx = jnp.clip(jnp.asarray(length, jnp.int32) - 1, 0, s - 1)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = linear_apply(params["lm_head"], last, impl=cfg.kernel_impl)
+    return logits, {"prefix": new_prefix, "stack": new_stack}
+
+
+def prefill_append(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   cache: Params, prefix_len: jax.Array,
+                   block_tables: jax.Array,
+                   length: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Params]:
+    """Suffix-only prefill over a paged cache holding a shared prefix.
+
+    ``tokens`` (B, S) are the UNCACHED suffix tokens (right-padded to a
+    bucket), ``prefix_len`` (B,) the cached positions already sitting in
+    this slot's block-table pages, ``length`` (B,) the true suffix
+    lengths. Each layer writes its suffix K/V into the slot's (private)
+    pages at positions ``prefix_len + j`` and attends to cached prefix +
+    suffix through the pages (``cfg.attn_impl`` picks the prefill-append
+    kernel or the gather ref) — the shared prefix is never recomputed.
+    Returns last-real-suffix-token logits (B, 1, V) + the updated cache;
+    with ``prefix_len = 0`` this degenerates to an ordinary (paged)
+    prefill. Attention-family layers only — recurrent mixers have no
+    paged state to append to.
+    """
+    sp = stack_plan(cfg)
+    b, s = tokens.shape
+    prefix_len = jnp.asarray(prefix_len, jnp.int32)
+    slen = (jnp.full((b,), s, jnp.int32) if length is None
+            else jnp.asarray(length, jnp.int32))
+    positions = prefix_len[:, None] + jnp.arange(s)[None]
+    valid = jnp.arange(s)[None] < slen[:, None]
+    token_mask = valid if cfg.num_experts else None
+    x = _embed_tokens(cfg, params, tokens, None)
+
+    new_prefix = []
+    for kinds, lp, c in zip(sp.prefix, params["prefix"], cache["prefix"]):
+        x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
+                            cache=c, cache_len=prefix_len,
+                            block_tables=block_tables, suffix_len=slen,
+                            token_mask=token_mask)
+        new_prefix.append(nc)
+
+    new_stack = cache["stack"]
+    if sp.repeats:
+        def body(x, inp):
+            rep_params, rep_cache = inp
+            ncs = []
+            for kinds, lp, c in zip(sp.pattern, rep_params, rep_cache):
+                x, nc = layer_apply(kinds, lp, x, cfg, positions=positions,
+                                    cache=c, cache_len=prefix_len,
+                                    block_tables=block_tables,
+                                    suffix_len=slen, token_mask=token_mask)
+                ncs.append(nc)
+            return x, ncs
+        x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    idx = jnp.clip(slen - 1, 0, s - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     logits = linear_apply(params["lm_head"], last, impl=cfg.kernel_impl)
     return logits, {"prefix": new_prefix, "stack": new_stack}

@@ -296,11 +296,30 @@ def paged_decode_attention_dispatch(q, k_pages, v_pages, block_tables,
                                       cache_len)
 
 
+def paged_prefill_append_dispatch(q, k_pages, v_pages, block_tables,
+                                  prefix_len, total_len,
+                                  attn_impl: str) -> jax.Array:
+    """Prefill-append attention: the multi-query generalization of the
+    flash-decode kernel (suffix rows run online softmax over the slot's
+    cached prefix pages + a causal mask inside the chunk) or the pure-JAX
+    gather ref, chosen exactly like the decode dispatch."""
+    from repro.kernels.paged_decode_attention import (
+        paged_prefill_append_attention)
+    from repro.kernels.ref import paged_prefill_append_ref
+    if attn_impl in ("paged", "paged_interpret"):
+        return paged_prefill_append_attention(
+            q, k_pages, v_pages, block_tables, prefix_len, total_len,
+            interpret=(attn_impl == "paged_interpret"))
+    return paged_prefill_append_ref(q, k_pages, v_pages, block_tables,
+                                    prefix_len, total_len)
+
+
 def attention_apply(
     params: Params, x: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
     positions: jax.Array, rope_theta: float = 10000.0, causal: bool = True,
     cache: Optional[Params] = None, cache_len: Optional[jax.Array] = None,
     block_tables: Optional[jax.Array] = None,
+    suffix_len: Optional[jax.Array] = None,
     attn_impl: str = "flash", q_chunk: int = 512, kv_chunk: int = 1024,
     impl: str = "ref",
 ) -> Tuple[jax.Array, Optional[Params]]:
@@ -310,15 +329,45 @@ def attention_apply(
     ``(n_pages, page_size, Hkv, D)`` instead of per-slot capacity rows:
     the step's K/V scatter into each slot's current page and attention
     reads only table pages (see kernels/paged_decode_attention.py).
+    ``s > 1`` with a paged cache is the prefill-append path: ``cache_len``
+    then counts the cached prefix positions, ``suffix_len`` the true
+    (pre-padding) suffix rows, and the block writes its S suffix K/V rows
+    at positions ``cache_len + i`` before attending to prefix + suffix
+    through the pages.
     """
     b, s, _ = x.shape
     q, k, v = _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta, impl)
 
-    if cache is not None and block_tables is not None:
+    if cache is not None and block_tables is not None and s > 1:
+        # prefill-append: scatter the suffix K/V rows into the slot's own
+        # (private) pages — positions prefix_len + j, with pad rows/
+        # positions routed to the null page — then attend to cached prefix
+        # pages + the just-written suffix pages. Shared prefix pages are
+        # never recomputed OR rewritten (admission CoW guarantees the
+        # suffix's first page is private before this runs).
+        plen = jnp.asarray(cache_len)
+        slen = jnp.asarray(suffix_len)
+        ck, cv = cache["k"], cache["v"]
+        page_size = ck.shape[1]
+        n_cols = block_tables.shape[1]
+        pos = plen[:, None] + jnp.arange(s)[None]            # (B, S)
+        valid = jnp.arange(s)[None] < slen[:, None]
+        col = jnp.clip(pos // page_size, 0, n_cols - 1)
+        dest = (jnp.take_along_axis(block_tables, col, axis=1) * page_size
+                + pos % page_size)
+        dest = jnp.where(valid, dest, 0).reshape(-1)
+        flat = (-1, n_kv, head_dim)
+        k_pages = ck.reshape(flat).at[dest].set(
+            k.reshape(flat).astype(ck.dtype)).reshape(ck.shape)
+        v_pages = cv.reshape(flat).at[dest].set(
+            v.reshape(flat).astype(cv.dtype)).reshape(cv.shape)
+        out = paged_prefill_append_dispatch(
+            q, k_pages, v_pages, block_tables, plen, plen + slen, attn_impl)
+        new_cache = {"k": k_pages, "v": v_pages}
+    elif cache is not None and block_tables is not None:
         # paged decode: write K/V at flat position table[b, len // ps] * ps
         # + len % ps. Inactive slots (len 0, zeroed table row) land in the
         # reserved null page 0, which no live table entry ever points at.
-        assert s == 1, "paged attention is a single-step decode path"
         idx = jnp.asarray(cache_len)
         ck, cv = cache["k"], cache["v"]
         n_pages, page_size = ck.shape[0], ck.shape[1]

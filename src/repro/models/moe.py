@@ -46,8 +46,19 @@ def _capacity(cfg, group: int) -> int:
     return max(4, -(-c // 4) * 4)
 
 
-def moe_apply(params: Params, x: jax.Array, cfg, impl: str = "ref") -> jax.Array:
-    """x: (B, S, d) → (B, S, d)."""
+def moe_apply(params: Params, x: jax.Array, cfg, impl: str = "ref",
+              token_mask=None) -> jax.Array:
+    """x: (B, S, d) → (B, S, d).
+
+    ``token_mask`` (B, S) bool marks tokens that may claim expert
+    capacity. Routing couples tokens through the shared capacity limit, so
+    garbage rows (free decode slots, right-pad positions, admission pad
+    rows in the serving engine) must be excluded *before* the position
+    cumsum — otherwise they consume capacity slots and can evict real
+    tokens, which is why the engine used to refuse MoE families outright.
+    Masked tokens produce a zero routed output (plus the row-independent
+    shared-expert term); callers never read those rows.
+    """
     b, s, d = x.shape
     e = cfg.num_experts
     tokens = x.reshape(-1, d)
@@ -58,6 +69,9 @@ def moe_apply(params: Params, x: jax.Array, cfg, impl: str = "ref") -> jax.Array
     n_g = n_tok // g_size
     xg = tokens.reshape(n_g, g_size, d)
     cap = _capacity(cfg, g_size)
+    mask_g = None
+    if token_mask is not None:
+        mask_g = token_mask.reshape(n_g, g_size).astype(jnp.int32)  # (G,s)
 
     logits = linear_apply(params["router"], xg, impl=impl).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)             # (G, s, E)
@@ -71,6 +85,10 @@ def moe_apply(params: Params, x: jax.Array, cfg, impl: str = "ref") -> jax.Array
     combine = jnp.zeros((n_g, g_size, e, cap), jnp.float32)
     for k in range(cfg.top_k):
         oh_e = jax.nn.one_hot(expert_idx[..., k], e, dtype=jnp.int32)  # (G,s,E)
+        if mask_g is not None:
+            # masked tokens vanish from the capacity cumsum entirely —
+            # they neither claim a buffer slot nor shift real tokens' ranks
+            oh_e = oh_e * mask_g[..., None]
         pos = jnp.cumsum(oh_e, axis=1) - oh_e + counts[:, None, :]     # (G,s,E)
         within = (pos < cap) & (oh_e > 0)
         counts = counts + jnp.sum(within.astype(jnp.int32), axis=1)

@@ -22,10 +22,20 @@ per-slot lengths) and a Scheduler. Each ``step()``:
 Free slots ride along as masked garbage rows — the per-slot length mask in
 ``decode_attention`` keeps them from contaminating anything (attention,
 MLPs, and recurrent mixers are all row-independent), and admission
-overwrites their cache rows. MoE families are NOT served: capacity-factor
-routing couples rows through shared expert capacity, so garbage rows could
-evict real tokens — gated with NotImplementedError until the router is
-mask-aware.
+overwrites their cache rows. MoE families are served through the
+mask-aware router: garbage rows/pad positions are excluded from expert
+capacity via the ``token_mask`` the engine threads into prefill and the
+``cache_len > 0`` mask decode derives itself, so capacity-factor routing
+sees only real tokens.
+
+With ``EngineConfig.prefix_cache`` (paged, pure-attention families) the
+page pool doubles as a cross-request prefix cache: admission matches each
+prompt against the pool's content-addressed index, adopts the shared
+full-page prefix (refcount bump, zero recompute), copy-on-write-
+materializes a shared partial final page if the suffix starts mid-page,
+and runs ONE bucketed ``prefill_append`` dispatch for just the uncached
+suffixes — TTFT and pages allocated scale with what the cache does not
+already hold.
 
 Prompt padding: for pure-attention families prompts are right-padded to a
 power-of-two bucket (causality keeps right-pads invisible to real
@@ -96,6 +106,12 @@ class EngineConfig:
     # recurrent-state families (no attention K/V to page).
     page_size: int = 0
     kv_pages: Optional[int] = None
+    # prefix sharing over the paged pool: admissions adopt cached full-page
+    # prompt prefixes (ref-counted, CoW on a shared partial final page) and
+    # prefill only the uncached suffix; completed prompts publish their
+    # full pages into the pool's LRU-evicted prefix index. Paged,
+    # pure-attention families only (recurrent state cannot be adopted).
+    prefix_cache: bool = False
     # chunked backfill: in steady state requests retire one at a time, so
     # naive admission runs a single-row prefill per retirement (~20% of
     # step time at batch 8). Hold admissions until `backfill_chunk` can be
@@ -119,12 +135,6 @@ class InferenceEngine:
             raise NotImplementedError(
                 "InferenceEngine serves decoder-only families; encdec "
                 "prefill needs encoder frames and a different cache tree")
-        if cfg.num_experts:
-            raise NotImplementedError(
-                "MoE routing is batch-coupled: garbage rows in free slots "
-                "consume expert capacity and can evict real tokens "
-                "(capacity-factor dispatch), so ragged decode diverges "
-                "from naive decode; needs a mask-aware router first")
         self.cfg = cfg
         self.ec = ec = ec or EngineConfig()
         if ec.plan_packed and params is not None:
@@ -149,6 +159,11 @@ class InferenceEngine:
         self.sched = Scheduler(ec.n_slots)
         self.pad_prefill = (cfg.family in _PADDED_FAMILIES
                             if ec.pad_prefill is None else ec.pad_prefill)
+        # prefix sharing needs every mixer to read its history from pages:
+        # recurrent mixers (ssm/hybrid) carry state that cannot be adopted
+        self.prefix_cache = (bool(ec.prefix_cache) and self.paged
+                             and cfg.family in _PADDED_FAMILIES
+                             and fns.prefill_append is not None)
         # per-decode-step KV traffic accounting (BENCH/bench reporting):
         # bytes one cache row (K+V, all attention layers) costs to read
         from repro.models.causal_lm import layer_plan
@@ -159,16 +174,30 @@ class InferenceEngine:
         # sampling is fused into the prefill/decode programs: one dispatch
         # per engine step — at small model scale the extra host round-trip
         # of a separate sampling call costs as much as the step itself
-        def prefill_sample(p, toks, length, key, temps, topks, use_topk):
+        def prefill_sample(p, toks, length, mask, key, temps, topks,
+                           use_topk):
             logits, pcache = fns.prefill(p, {"tokens": toks,
-                                             "length": length})
+                                             "length": length,
+                                             "token_mask": mask})
             tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
             return tok, pcache
 
         def decode_sample(p, toks, lens, cache, key, temps, topks, bt,
                           use_topk):
+            # free slots are garbage rows: lens > 0 ⟺ live request (a
+            # live slot always holds at least its prompt), and only live
+            # rows may claim MoE expert capacity
             logits, cache = fns.decode_step(
                 p, {"tokens": toks, "cache_len": lens,
+                    "block_tables": bt,
+                    "token_mask": (lens > 0)[:, None]}, cache)
+            tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
+            return tok, cache
+
+        def append_sample(p, toks, plen, slen, cache, bt, key, temps,
+                          topks, use_topk):
+            logits, cache = fns.prefill_append(
+                p, {"tokens": toks, "prefix_len": plen, "length": slen,
                     "block_tables": bt}, cache)
             tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
             return tok, cache
@@ -177,6 +206,10 @@ class InferenceEngine:
                                 static_argnames=("use_topk",))
         self._decode = jax.jit(decode_sample, static_argnames=("use_topk",),
                                donate_argnums=(3,))
+        self._append = (jax.jit(append_sample,
+                                static_argnames=("use_topk",),
+                                donate_argnums=(4,))
+                        if fns.prefill_append is not None else None)
 
         self._key = jax.random.PRNGKey(ec.seed)
         self._defer_steps = 0   # decode steps the current backfill waited
@@ -236,37 +269,10 @@ class InferenceEngine:
         tiers.append(self.ec.n_slots)
         return tiers
 
-    def _admit_group(self, group: List) -> None:
-        """ONE prefill dispatch for a batch of admissions. Prompts are
-        right-padded to the largest member's bucket (causality keeps pads
-        invisible; per-row ``length`` reads the true last-token logits) and
-        rows are padded up to the next compiled row tier; pad rows alias
-        slot 0 of the group and are overwritten by the real row
-        (reverse-order writes in insert_rows)."""
-        k = len(group)
-        bucket = max(self._bucket(req.prompt_len) for req, _ in group)
-        k_pad = next(t for t in self._row_tiers() if t >= k)
-        toks = np.zeros((k_pad, bucket), np.int32)
-        lens = np.ones((k_pad,), np.int32)
-        temps = np.zeros((k_pad,), np.float32)
-        topks = np.zeros((k_pad,), np.int32)
-        slots = np.zeros((k_pad,), np.int32)
-        for i, (req, slot) in enumerate(group):
-            p = req.prompt_len
-            toks[i, :p] = req.prompt
-            lens[i] = p
-            temps[i] = req.temperature
-            topks[i] = req.top_k
-            slots[i] = slot
-        slots[k:] = slots[0]
-        tok_dev, pcache = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            self._next_key(), jnp.asarray(temps), jnp.asarray(topks),
-            use_topk=bool(topks.any()))
-        self.pool.insert_rows(pcache, slots, lens[:k])
-        self.stats["prefills"] += 1
-        self.stats["prefill_rows"] += k
-
+    def _finish_admission(self, group: List, tok_dev) -> None:
+        """Shared post-dispatch bookkeeping: record the prefill-sampled
+        first token and per-request timing, publish full prompt pages into
+        the prefix index when sharing is on."""
         toks_host = np.asarray(tok_dev)
         now = time.perf_counter()
         for i, (req, slot) in enumerate(group):
@@ -279,6 +285,102 @@ class InferenceEngine:
             req.token_times.append(now)
             self._tokens[slot, 0] = tok
             self.stats["tokens_generated"] += 1
+            if self.prefix_cache:
+                self.pool.register_prefix(slot, req.prompt)
+
+    def _admit_group(self, group: List) -> None:
+        """ONE prefill dispatch for a batch of admissions. Prompts are
+        right-padded to the largest member's bucket (causality keeps pads
+        invisible; per-row ``length`` reads the true last-token logits) and
+        rows are padded up to the next compiled row tier; pad rows alias
+        slot 0 of the group and are overwritten by the real row
+        (reverse-order writes in insert_rows). The token mask keeps pad
+        positions/rows out of MoE expert capacity."""
+        k = len(group)
+        bucket = max(self._bucket(req.prompt_len) for req, _ in group)
+        k_pad = next(t for t in self._row_tiers() if t >= k)
+        toks = np.zeros((k_pad, bucket), np.int32)
+        lens = np.ones((k_pad,), np.int32)
+        mask = np.zeros((k_pad, bucket), bool)
+        temps = np.zeros((k_pad,), np.float32)
+        topks = np.zeros((k_pad,), np.int32)
+        slots = np.zeros((k_pad,), np.int32)
+        for i, (req, slot) in enumerate(group):
+            p = req.prompt_len
+            toks[i, :p] = req.prompt
+            lens[i] = p
+            mask[i, :p] = True
+            temps[i] = req.temperature
+            topks[i] = req.top_k
+            slots[i] = slot
+        slots[k:] = slots[0]
+        tok_dev, pcache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(mask), self._next_key(), jnp.asarray(temps),
+            jnp.asarray(topks), use_topk=bool(topks.any()))
+        self.pool.insert_rows(pcache, slots, lens[:k])
+        self.stats["prefills"] += 1
+        self.stats["prefill_rows"] += k
+        self._finish_admission(group, tok_dev)
+
+    def _admit_group_append(self, group: List) -> None:
+        """ONE prefill-append dispatch for a batch of prefix-hit
+        admissions: only each request's uncached suffix is computed,
+        attending to its adopted prefix pages through the block tables.
+        Suffixes are right-padded to a power-of-two bucket and rows to the
+        compiled tier; pad rows carry all-zero tables, so their K/V writes
+        land in the null page. Before the dispatch, any shared partial
+        final page is copy-on-write-materialized (one batched device copy)
+        and the suffix pages are allocated so the tables are final."""
+        k = len(group)
+        bucket = max(self._bucket(req.prompt_len - req.prefix_hit)
+                     for req, _ in group)
+        k_pad = next(t for t in self._row_tiers() if t >= k)
+        toks = np.zeros((k_pad, bucket), np.int32)
+        plens = np.zeros((k_pad,), np.int32)
+        slens = np.ones((k_pad,), np.int32)
+        temps = np.zeros((k_pad,), np.float32)
+        topks = np.zeros((k_pad,), np.int32)
+        slots = np.zeros((k_pad,), np.int32)
+        cow: List = []
+        for i, (req, slot) in enumerate(group):
+            hit, p = req.prefix_hit, req.prompt_len
+            toks[i, :p - hit] = req.prompt[hit:]
+            plens[i] = hit
+            slens[i] = p - hit
+            temps[i] = req.temperature
+            topks[i] = req.top_k
+            slots[i] = slot
+            if hit % self.pool.page_size:
+                # the suffix starts inside a shared (adopted partial
+                # final) page — materialize a private copy first
+                pair = self.pool.ensure_writable(slot, hit)
+                if pair is not None:
+                    cow.append(pair)
+            self.pool.ensure(slot, p)     # suffix pages before the scatter
+        if cow:
+            src, dst = zip(*cow)
+            self.pool.copy_pages(np.asarray(src), np.asarray(dst))
+        # full-width tables (vs decode's pow2 live-width bucketing): the
+        # append dispatch runs once per ADMISSION, not per step, dead
+        # table columns skip compute + elide their DMA in the kernel, and
+        # bucketing here would multiply warmup's compiled-program grid by
+        # O(log max_pages). Revisit if TPU profiles show per-grid-step
+        # overhead dominating admission (ROADMAP).
+        bt = np.zeros((k_pad, self.pool.max_pages), np.int32)
+        bt[:k] = self.pool.table[slots[:k]]
+        tok_dev, self.pool.cache = self._append(
+            self.params, jnp.asarray(toks), jnp.asarray(plens),
+            jnp.asarray(slens), self.pool.cache, jnp.asarray(bt),
+            self._next_key(), jnp.asarray(temps), jnp.asarray(topks),
+            use_topk=bool(topks.any()))
+        for i, (req, slot) in enumerate(group):
+            self.pool.lens[slot] = req.prompt_len
+        self.stats["prefills"] += 1
+        self.stats["prefill_rows"] += k
+        self.stats["prefix_hit_tokens"] += int(sum(r.prefix_hit
+                                                   for r, _ in group))
+        self._finish_admission(group, tok_dev)
 
     def _should_admit(self) -> bool:
         """Chunked-backfill hysteresis: batch steady-state admissions into
@@ -306,11 +408,24 @@ class InferenceEngine:
             # worst-case page count (prompt + max_new_tokens) so a running
             # request can never strand without a page mid-decode. Strict
             # FCFS — the first request that doesn't fit requeues itself and
-            # everything behind it (reverse order restores queue order).
+            # everything behind it (reverse order restores queue order),
+            # even if a later prefix-hit request would have fit in the
+            # leftover budget: sharing must not let newcomers starve an
+            # earlier stalled request. With prefix sharing on, admission
+            # first adopts each prompt's cached full-page prefix and only
+            # reserves the uncached-suffix budget.
             fit = len(admitted)
             for i, (req, slot) in enumerate(admitted):
-                if not self.pool.reserve(
-                        slot, req.prompt_len + req.max_new_tokens):
+                total = req.prompt_len + req.max_new_tokens
+                if self.prefix_cache:
+                    hit = self.pool.admit_prefix(slot, req.prompt, total)
+                    if hit is None:
+                        fit = i
+                        break
+                    req.prefix_hit = hit
+                    self.stats["pages_shared"] += -(-hit
+                                                    // self.pool.page_size)
+                elif not self.pool.reserve(slot, total):
                     fit = i
                     break
             for req, slot in reversed(admitted[fit:]):
@@ -319,15 +434,20 @@ class InferenceEngine:
             admitted = admitted[:fit]
         if admitted:
             self._defer_steps = 0
-            if self.pad_prefill:
+            hits = [(r, s) for r, s in admitted if r.prefix_hit > 0]
+            cold = [(r, s) for r, s in admitted if r.prefix_hit == 0]
+            if hits:
+                # prefix-hit admissions share ONE suffix-only dispatch
+                self._admit_group_append(hits)
+            if cold and self.pad_prefill:
                 # padded families: ONE merged dispatch for the whole batch
                 # of admissions, whatever their prompt lengths
-                self._admit_group(admitted)
-            else:
+                self._admit_group(cold)
+            elif cold:
                 # recurrent families prefill at exact length (pads would
                 # advance the state) — group by exact prompt length
                 groups: Dict[int, List] = {}
-                for req, slot in admitted:
+                for req, slot in cold:
                     groups.setdefault(req.prompt_len, []).append((req, slot))
                 for group in groups.values():
                     self._admit_group(group)
@@ -339,15 +459,29 @@ class InferenceEngine:
                 self.pool.release(slot)
                 finished.append(self.sched.retire(slot))
         if not self.sched.active:
+            self._sync_pool_stats()
             return finished
 
         self.stats["slot_occupancy"].append(len(self.sched.active))
         if self.paged:
             # alloc-on-advance: the step writes K/V at position len, so the
             # page covering it must exist before the dispatch (drawn from
-            # the admission-time reservation, never from thin air)
+            # the admission-time reservation, never from thin air). With
+            # prefix sharing the page must also be PRIVATE — admission CoW
+            # already guarantees that for the engine's own flow (the
+            # suffix always starts at/before the write frontier), so this
+            # is a cheap invariant check that batches any stragglers.
+            cow: List = []
             for slot in self.sched.active:
-                self.pool.ensure(slot, int(self.pool.lens[slot]) + 1)
+                pos = int(self.pool.lens[slot])
+                self.pool.ensure(slot, pos + 1)
+                if self.prefix_cache:
+                    pair = self.pool.ensure_writable(slot, pos)
+                    if pair is not None:
+                        cow.append(pair)
+            if cow:
+                src, dst = zip(*cow)
+                self.pool.copy_pages(np.asarray(src), np.asarray(dst))
             bt = self.pool.device_tables()
             self.stats["kv_bytes_read"] += (bt.shape[1] * self.ec.page_size
                                             * self.ec.n_slots
@@ -378,6 +512,7 @@ class InferenceEngine:
             if req.is_finished():
                 self.pool.release(slot)
                 finished.append(self.sched.retire(slot))
+        self._sync_pool_stats()
         return finished
 
     # -- convenience -------------------------------------------------------
@@ -387,13 +522,31 @@ class InferenceEngine:
         self.stats.update(decode_steps=0, prefills=0, prefill_rows=0,
                           deferred_admissions=0, tokens_generated=0,
                           page_stalls=0, kv_bytes_read=0,
-                          kv_bytes_read_live=0, slot_occupancy=[])
+                          kv_bytes_read_live=0, slot_occupancy=[],
+                          prefix_hit_tokens=0, pages_shared=0,
+                          cow_copies=0, evictions=0, pages_allocated=0)
+        if self.paged:
+            self.pool.reset_stats()
 
-    def warmup(self, prompt_lens: Sequence[int], gen: int = 2) -> None:
+    def _sync_pool_stats(self) -> None:
+        """Mirror the allocator's counters (they tick deep inside page
+        allocation / CoW) into the reported stats dict — the pool is the
+        single source of truth for page-level events."""
+        if self.paged:
+            for key in ("evictions", "pages_allocated", "cow_copies"):
+                self.stats[key] = self.pool.stats[key]
+
+    def warmup(self, prompt_lens: Sequence[int], gen: int = 2,
+               suffix_lens: Optional[Sequence[int]] = None) -> None:
         """Compile every (prefill bucket × admission row tier) program plus
         the decode/sample programs with throwaway requests, then wipe the
         bookkeeping — so measured traffic doesn't pay jit compilation
-        inside the timed window."""
+        inside the timed window. With prefix sharing on, the suffix-only
+        ``prefill_append`` programs are compiled too (suffix buckets ×
+        row tiers; ``suffix_lens`` narrows the bucket set — default: the
+        prompt buckets plus the minimum bucket, since a hit can shrink any
+        prompt to a tiny suffix), and the prefix index populated by the
+        throwaway prompts is dropped so measured traffic starts cold."""
         assert not self.sched.has_work(), "warmup() needs an idle engine"
         buckets = sorted({self._bucket(max(1, int(p))) for p in prompt_lens})
         lens = [min(b, self.ec.capacity - gen) for b in buckets]
@@ -401,6 +554,42 @@ class InferenceEngine:
             for tier in self._row_tiers():
                 self.generate([np.zeros((l,), np.int32)] * tier,
                               max_new_tokens=gen)
+                if self.prefix_cache:
+                    # drop the throwaway prompts' index entries NOW, not
+                    # just at the end: otherwise every generate() after
+                    # the first hits the cache and takes the append path,
+                    # and the COLD prefill programs for the remaining
+                    # (bucket × tier) combos never compile — measured
+                    # traffic would pay them inside the timed window
+                    self.pool.reset_prefix()
+        if self.prefix_cache:
+            if suffix_lens is None:
+                suffix_lens = buckets
+            # a prefix hit can shrink any prompt to any suffix length, and
+            # an admission group's bucket is the max over its members — so
+            # compile EVERY pow2 bucket up to the largest possible suffix
+            # (O(log capacity) × O(log n_slots) programs, warmup-only)
+            top = max(self._bucket(max(1, int(s))) for s in suffix_lens)
+            sbuckets, sb = [], self.ec.min_bucket
+            while sb <= top:
+                sbuckets.append(sb)
+                sb *= 2
+            zeros = jnp.zeros((self.ec.n_slots,), jnp.float32)
+            for sb in sbuckets:
+                for tier in self._row_tiers():
+                    # all-zero tables route every write into the null
+                    # page; greedy sampling matches the cold-prefill
+                    # warmup's compiled sample path
+                    _, self.pool.cache = self._append(
+                        self.params,
+                        jnp.zeros((tier, sb), jnp.int32),
+                        jnp.zeros((tier,), jnp.int32),
+                        jnp.ones((tier,), jnp.int32),
+                        self.pool.cache,
+                        jnp.zeros((tier, self.pool.max_pages), jnp.int32),
+                        self._next_key(), zeros[:tier],
+                        zeros[:tier].astype(jnp.int32), use_topk=False)
+            self.pool.reset_prefix()
         if self.paged:
             # compile the decode program for every block-table width the
             # pow2 bucketing can produce — decode bucket growth mid-traffic

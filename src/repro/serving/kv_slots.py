@@ -25,18 +25,40 @@ Two pools share that probing trick:
   is ``n_pages`` pages, not ``n_slots × capacity`` rows, and decode reads
   scale with live lengths (see kernels/paged_decode_attention.py).
   Physical page 0 is reserved as the null sink for pad/inactive writes.
+
+The paged pool is also a cross-request *prefix cache*: pages are
+ref-counted and full prompt pages can be published into a content-
+addressed prefix index (a hash chain keyed by ``(parent_chain_hash,
+page_token_ids)``, radix-style). Admission matches a prompt against the
+chain, adopts the shared pages (refcount bump), and only the uncached
+suffix needs prefill. Registered pages whose refcount drops to zero move
+to an LRU list instead of the free list — a hot prefix survives across
+requests and is only evicted lazily when an allocation cannot be served
+from truly free pages. Registered pages are immutable: a slot whose
+final (partial) page is shared copies it into a private page before its
+own K/V writes land (copy-on-write).
 """
 
 from __future__ import annotations
 
+import hashlib
 from collections import deque
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+_CHAIN_ROOT = b"\x00" * 20
+
+
+def _chain_hash(parent: bytes, chunk: np.ndarray) -> bytes:
+    """Content address of a token prefix: digest over (parent digest,
+    this page's token ids). Collision-safe (sha1), unlike ``hash()``."""
+    return hashlib.sha1(
+        parent + np.asarray(chunk, "<i4").tobytes()).digest()
 
 
 def _first_diff_axis(a, b) -> int:
@@ -199,16 +221,43 @@ class PagedSlotPool:
         self._free: deque[int] = deque(range(1, n_pages))   # 0 = null
         self._n_alloc = np.zeros((n_slots,), np.int32)
         self._reserved = np.zeros((n_slots,), np.int32)     # unallocated
+        # scalar mirror of _reserved.sum(): free_pages() runs per-alloc and
+        # per-admission, so it must not rescan the per-slot vector
+        self._reserved_total = 0
+        # -- prefix cache state -------------------------------------------
+        self._refcount = np.zeros((n_pages,), np.int32)
+        # chain hash -> first token -> {page_token_ids: page_id}: the
+        # radix-style children map, bucketed by first token so the
+        # partial-tail scan touches only same-first-token siblings
+        # instead of every child registered under a hot node
+        self._children: Dict[bytes, Dict[int, Dict[Tuple[int, ...], int]]] \
+            = {}
+        self._page_key: Dict[int, Tuple[bytes, Tuple[int, ...]]] = {}
+        # registered refcount-0 pages, insertion order = LRU (dict keeps
+        # insertion order; O(1) membership + removal)
+        self._lru: Dict[int, None] = {}
+        self.stats: Dict[str, int] = {}
+        self.reset_stats()
         self._write = jax.jit(self._write_fn, donate_argnums=(0,))
+        self._copy = jax.jit(self._copy_fn, donate_argnums=(0,))
+
+    def reset_stats(self) -> None:
+        self.stats.update(pages_allocated=0, evictions=0, cow_copies=0)
 
     # -- allocator ---------------------------------------------------------
 
     def free_pages(self) -> int:
-        """Pages neither allocated nor earmarked by a reservation."""
-        return len(self._free) - int(self._reserved.sum())
+        """Pages allocatable right now: truly free plus lazily evictable
+        (registered, refcount-0 LRU) pages, minus outstanding
+        reservations. Maintained as O(1) counters — no per-slot rescans."""
+        return len(self._free) + len(self._lru) - self._reserved_total
 
     def pages_needed(self, total_len: int) -> int:
         return -(-total_len // self.page_size)
+
+    def _set_reserved(self, slot: int, n: int) -> None:
+        self._reserved_total += n - int(self._reserved[slot])
+        self._reserved[slot] = n
 
     def reserve(self, slot: int, total_len: int) -> bool:
         """Admission control: claim the slot's worst-case page budget
@@ -216,22 +265,191 @@ class PagedSlotPool:
         need = self.pages_needed(total_len) - int(self._n_alloc[slot])
         if need > self.free_pages():
             return False
-        self._reserved[slot] = max(need, 0)
+        self._set_reserved(slot, max(need, 0))
         return True
 
+    def _take_free_page(self) -> int:
+        """Pop a writable page: the free list first, else lazily evict the
+        least-recently-retired registered page (dropping its index entry —
+        descendants become unreachable and age out of the LRU the same
+        way)."""
+        if self._free:
+            pid = self._free.popleft()
+        else:
+            assert self._lru, "page pool exhausted past its reservations"
+            pid = next(iter(self._lru))
+            del self._lru[pid]
+            self._unregister(pid)
+            self.stats["evictions"] += 1
+        self._refcount[pid] = 1
+        self.stats["pages_allocated"] += 1
+        return pid
+
     def _alloc_page(self, slot: int) -> None:
-        assert self._free, "page pool exhausted past its reservations"
         assert self._n_alloc[slot] < self.max_pages, \
             f"slot {slot} exceeds capacity {self.capacity}"
-        pid = self._free.popleft()
+        pid = self._take_free_page()
         self.table[slot, self._n_alloc[slot]] = pid
         self._n_alloc[slot] += 1
-        self._reserved[slot] = max(0, self._reserved[slot] - 1)
+        self._set_reserved(slot, max(0, int(self._reserved[slot]) - 1))
 
     def ensure(self, slot: int, length: int) -> None:
         """Alloc-on-advance: guarantee pages cover positions [0, length)."""
         while int(self._n_alloc[slot]) * self.page_size < length:
             self._alloc_page(slot)
+
+    # -- prefix cache ------------------------------------------------------
+
+    def _unregister(self, pid: int) -> None:
+        h, chunk = self._page_key.pop(pid)
+        bucket = self._children[h][chunk[0]]
+        del bucket[chunk]
+        if not bucket:
+            del self._children[h][chunk[0]]
+            if not self._children[h]:
+                del self._children[h]
+
+    def _drop_page_ref(self, pid: int) -> None:
+        """Decrement a page's refcount; at zero, registered pages park on
+        the LRU list (content kept — a hot prefix survives retirement),
+        private pages return to the free list."""
+        self._refcount[pid] -= 1
+        assert self._refcount[pid] >= 0, f"refcount underflow on page {pid}"
+        if self._refcount[pid] == 0:
+            if pid in self._page_key:
+                self._lru[pid] = None
+            else:
+                self._free.append(pid)
+
+    def match_prefix(self, tokens: np.ndarray) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``tokens``: exact-match full pages down
+        the hash chain, then (if every full page matched) one partial tail
+        page — a cached FULL page whose token ids start with the remaining
+        sub-page tail. Read-only; returns (hit_tokens, page_ids)."""
+        toks = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        h, hit, pages = _CHAIN_ROOT, 0, []
+        for i in range(len(toks) // ps):
+            chunk = tuple(int(t) for t in toks[i * ps:(i + 1) * ps])
+            pid = self._children.get(h, {}).get(chunk[0], {}).get(chunk)
+            if pid is None:
+                return hit, pages
+            pages.append(pid)
+            hit += ps
+            h = _chain_hash(h, chunk)
+        tail = tuple(int(t) for t in toks[hit:])
+        if tail:
+            # scan only siblings sharing the tail's first token (tuple
+            # compares short-circuit at the first divergence)
+            for ctoks, pid in self._children.get(h, {}).get(
+                    tail[0], {}).items():
+                if ctoks[:len(tail)] == tail:
+                    pages.append(pid)
+                    hit += len(tail)
+                    break
+        return hit, pages
+
+    def admit_prefix(self, slot: int, tokens: np.ndarray,
+                     total_len: int) -> Optional[int]:
+        """Prefix-sharing admission: match ``tokens`` (the prompt; the
+        final token is always left for the suffix so prefill produces the
+        first-sample logits), adopt the shared pages into this slot's
+        table, and reserve only the uncached-suffix page budget. Returns
+        the hit length (0 → cold) or None when the pool cannot cover the
+        request — in which case nothing was adopted or reserved."""
+        assert self._n_alloc[slot] == 0 and self._reserved[slot] == 0, \
+            f"slot {slot} admitted while still holding pages"
+        toks = np.asarray(tokens, np.int32)
+        hit, pages = self.match_prefix(toks[:-1])
+        n_keep = hit // self.page_size          # full pages kept as-is
+        # budget: every page past the kept full ones is a fresh allocation
+        # (boundary-crossing allocs + the CoW copy of a partial tail page)
+        need = self.pages_needed(total_len) - n_keep
+        # adopted LRU pages leave the evictable set, so they cannot also
+        # back the reservation — count them against availability
+        n_from_lru = sum(1 for p in pages if p in self._lru)
+        if need + n_from_lru > self.free_pages():
+            return None
+        for j, pid in enumerate(pages):
+            self._refcount[pid] += 1
+            self._lru.pop(pid, None)
+            self.table[slot, j] = pid
+        self._n_alloc[slot] = len(pages)
+        # reserve the FULL fresh-page demand: boundary-crossing allocs
+        # (pages_needed - len(pages)) plus, when a partial tail page was
+        # adopted, the CoW copy that will replace it — i.e. exactly
+        # ``need``. Reserving less lets free_pages() overstate and a
+        # later reservation over-commit the pool.
+        self._set_reserved(slot, need)
+        return hit
+
+    def ensure_writable(self, slot: int, pos: int
+                        ) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: the page covering ``pos`` must be privately owned
+        before this slot's K/V write at ``pos`` lands. Shared or registered
+        pages are immutable — materialize a private copy (drawn from the
+        slot's reservation), swap the table entry, drop the shared ref.
+        Returns (src, dst) page ids for the caller to copy on device, or
+        None when the page is already private."""
+        col = pos // self.page_size
+        assert col < self._n_alloc[slot], \
+            f"slot {slot} position {pos} has no page (call ensure first)"
+        pid = int(self.table[slot, col])
+        if self._refcount[pid] == 1 and pid not in self._page_key:
+            return None
+        dst = self._take_free_page()
+        self.table[slot, col] = dst
+        self._drop_page_ref(pid)
+        self._set_reserved(slot, max(0, int(self._reserved[slot]) - 1))
+        self.stats["cow_copies"] += 1
+        return pid, dst
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> None:
+        """Publish this slot's FULL prompt pages into the prefix index so
+        later admissions can adopt them. First writer wins: chunks already
+        present (including pages this slot itself adopted) are skipped, as
+        are pages already registered under another key. Partial final
+        pages are never registered — they are the slot's private write
+        frontier (decode K/V lands there)."""
+        toks = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        h = _CHAIN_ROOT
+        for i in range(len(toks) // ps):
+            chunk = tuple(int(t) for t in toks[i * ps:(i + 1) * ps])
+            kids = self._children.setdefault(h, {}).setdefault(chunk[0], {})
+            pid = int(self.table[slot, i])
+            if chunk not in kids and pid not in self._page_key and pid != 0:
+                kids[chunk] = pid
+                self._page_key[pid] = (h, chunk)
+            h = _chain_hash(h, chunk)
+
+    def reset_prefix(self) -> None:
+        """Drop the whole prefix index (e.g. after warmup): refcount-0
+        registered pages return to the free list; pages still adopted by
+        live slots just lose their index entry and free on release."""
+        for pid in list(self._page_key):
+            self._unregister(pid)
+        self._free.extend(self._lru)
+        self._lru.clear()
+        self.reset_stats()
+
+    def copy_pages(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Device-side CoW materialization: copy page rows ``src[i]`` →
+        ``dst[i]`` in every paged leaf (one jit'd gather+scatter for the
+        whole batch of copies)."""
+        self.cache = self._copy(self.cache, jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32))
+
+    def _copy_fn(self, pool: PyTree, src: jax.Array,
+                 dst: jax.Array) -> PyTree:
+        def c(p, pax):
+            if pax < 0:
+                return p
+            vals = jnp.take(p, src, axis=pax)
+            idx = (slice(None),) * pax + (dst,)
+            return p.at[idx].set(vals)
+        return jax.tree_util.tree_map(
+            lambda p, pax: c(p, pax), pool, self._page_axes)
 
     # -- cache writes ------------------------------------------------------
 
@@ -346,9 +564,13 @@ class PagedSlotPool:
         self.lens[slot] += 1
 
     def release(self, slot: int) -> None:
+        """Retire: DECREMENT every table page's refcount instead of
+        freeing — shared prefix pages stay live for their other owners,
+        and registered refcount-0 pages park on the LRU list."""
         n = int(self._n_alloc[slot])
-        self._free.extend(int(p) for p in self.table[slot, :n])
+        for p in self.table[slot, :n]:
+            self._drop_page_ref(int(p))
         self.table[slot, :] = 0
         self._n_alloc[slot] = 0
-        self._reserved[slot] = 0
+        self._set_reserved(slot, 0)
         self.lens[slot] = 0

@@ -35,6 +35,10 @@ class Request:
     admit_time: float = 0.0
     first_token_time: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # prompt tokens served from the shared prefix cache at admission
+    # (0 = cold / sharing off); reset on requeue so a later admission
+    # re-matches against the index as it stands then
+    prefix_hit: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -84,6 +88,7 @@ class Scheduler:
         them in reverse admission order to preserve FCFS."""
         req = self.active.pop(slot)
         req.slot = -1
+        req.prefix_hit = 0
         self._free.append(slot)
         self.waiting.appendleft(req)
         return req
