@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Docs-consistency check: every code reference in the markdown docs must
+resolve against the actual tree, so the docs cannot silently rot.
+
+Two kinds of backticked spans are verified (run from the repo root with
+``PYTHONPATH=src``):
+
+* dotted references starting with ``repro.`` — e.g.
+  ``repro.serving.engine.InferenceEngine`` or
+  ``repro.kernels.plan.BCRPlan`` — are resolved by importing the longest
+  importable module prefix and walking the remaining attributes;
+* path references containing ``/`` and ending in a known suffix — e.g.
+  ``src/repro/serving/engine.py``, ``docs/serving.md``,
+  ``benchmarks/serve_bench.py`` — must exist relative to the repo root
+  (or under ``src/repro/`` as a convenience for module-relative spells
+  like ``serving/engine.py``).
+
+Anything else inside backticks (CLI flags, shell lines, JSON keys, type
+spellings) is ignored. Exit code 1 lists every dangling reference.
+
+    PYTHONPATH=src python scripts/check_docs_refs.py
+"""
+
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOTTED = re.compile(r"^repro(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+PATHLIKE = re.compile(r"^[\w./-]+/[\w./-]+\.(py|md|json|yml|toml)$")
+SPAN = re.compile(r"`([^`\n]+)`")
+
+
+def check_dotted(ref: str) -> str | None:
+    """Import the longest importable module prefix, getattr the rest."""
+    parts = ref.split(".")
+    mod, idx = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            idx = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        return f"no importable module prefix of {ref!r}"
+    obj = mod
+    for attr in parts[idx:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return (f"{'.'.join(parts[:idx])!r} has no attribute chain "
+                    f"{'.'.join(parts[idx:])!r}")
+    return None
+
+
+def check_path(ref: str) -> str | None:
+    for base in ("", "src/repro"):
+        if os.path.exists(os.path.join(ROOT, base, ref)):
+            return None
+    return f"path {ref!r} not found (tried repo root and src/repro/)"
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    files = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    readme = os.path.join(ROOT, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    errors, checked = [], 0
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        # fenced code blocks are examples, not references
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in SPAN.finditer(text):
+            span = m.group(1).strip()
+            if DOTTED.match(span):
+                err = check_dotted(span)
+            elif PATHLIKE.match(span):
+                err = check_path(span)
+            else:
+                continue
+            checked += 1
+            if err:
+                errors.append(f"{os.path.relpath(path, ROOT)}: `{span}` — "
+                              f"{err}")
+    for e in errors:
+        print(f"DANGLING REF  {e}")
+    print(f"checked {checked} code references across {len(files)} files: "
+          f"{len(errors)} dangling")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -297,6 +297,12 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         "elapsed_s": elapsed,
         "throughput_tok_s": total_tokens / elapsed,
         "decode_steps": engine.stats["decode_steps"],
+        # per-DECODE-step commit rate: each request's first token is
+        # prefill-sampled and never passed through a decode step, so it
+        # is excluded — with speculation this is the payoff figure
+        "decode_tokens_per_step": (
+            max(total_tokens - len(reqs), 0)
+            / max(engine.stats["decode_steps"], 1)),
         "mean_slot_occupancy": float(np.mean(occ)) if occ else 0.0,
         "ttft_s": {"p50": pct(ttft, 50), "p95": pct(ttft, 95),
                    "p99": pct(ttft, 99)},
@@ -309,6 +315,11 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         "pages_shared": st["pages_shared"],
         "cow_copies": st["cow_copies"],
         "evictions": st["evictions"],
+        "spec_steps": st["spec_steps"],
+        "draft_proposed": st["draft_proposed"],
+        "draft_accepted": st["draft_accepted"],
+        "acceptance_rate": (st["draft_accepted"] / st["draft_proposed"]
+                            if st["draft_proposed"] else 0.0),
     }
     log(f"{len(reqs)} requests, {total_tokens} tokens in {elapsed:.2f}s "
         f"→ {metrics['throughput_tok_s']:.1f} tok/s; "
@@ -324,6 +335,12 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         f"(hit tokens {st['prefix_hit_tokens']}/{prompt_tokens}); "
         f"pages_shared {st['pages_shared']}; cow_copies {st['cow_copies']}; "
         f"evictions {st['evictions']}; page_stalls {st['page_stalls']}")
+    if st["spec_steps"]:
+        hist = engine.stats["accepted_hist"]
+        log(f"speculative: {metrics['acceptance_rate']:.2f} acceptance "
+            f"({st['draft_accepted']}/{st['draft_proposed']} drafts), "
+            f"{metrics['decode_tokens_per_step']:.2f} committed "
+            f"tokens/decode step; accepted-length histogram {hist}")
     return metrics
 
 
@@ -347,6 +364,34 @@ def build_params(cfg: ModelConfig, log=print, *, decode_m: int = 8,
             f"{packed_fraction(params, packed):.3f}x dense")
         params = packed
     return params
+
+
+def build_draft(cfg: ModelConfig, args, log=print):
+    """Drafter for --spec-k: the same ``causal_lm`` stack at a fraction of
+    the target's width/depth, sharing its vocab and head counts (so
+    head_dim stays integral) and forced pure-attention (recurrent mixers
+    / MoE routing cannot rewind on a rejected draft). Random-init, like
+    everything else this synthetic-weights CLI serves; --draft-bcr-keep
+    packs it so the drafter itself decodes off the BCR format."""
+    dm = args.draft_d_model or cfg.d_model // 4
+    # round to the head count so head_dim = dm // num_heads stays ≥ 1 and
+    # exact — an unrounded --draft-d-model would otherwise fail with a
+    # shape error deep inside the drafter's init
+    dm = max(cfg.num_heads, dm // cfg.num_heads * cfg.num_heads)
+    if args.draft_d_model and dm != args.draft_d_model:
+        log(f"--draft-d-model {args.draft_d_model} rounded to {dm} "
+            f"({cfg.num_heads} heads)")
+    draft_cfg = dataclasses.replace(
+        cfg, name=cfg.name + "-draft", num_layers=args.draft_layers,
+        d_model=dm, head_dim=dm // cfg.num_heads, d_ff=max(8, dm * 2),
+        num_experts=0, attn_period=0,
+        bcr_keep_frac=args.draft_bcr_keep)
+    dparams = model_fns(draft_cfg).init_params(jax.random.PRNGKey(1))
+    if args.draft_bcr_keep > 0:
+        dparams = pack_params(draft_cfg, dparams, decode_m=args.slots)
+    log(f"drafter: {args.draft_layers}L d_model={dm} "
+        f"(keep_frac={args.draft_bcr_keep})")
+    return draft_cfg, dparams
 
 
 def main() -> None:
@@ -376,6 +421,19 @@ def main() -> None:
     p.add_argument("--system-len", type=int, default=32,
                    help="system-prompt length (tokens) for "
                         "--system-prompts")
+    p.add_argument("--spec-k", type=int, default=0,
+                   help="speculative decoding: a small drafter proposes "
+                        "up to k tokens per slot and ONE prefill_append "
+                        "dispatch verifies them all (needs --page-size; "
+                        "0 → plain decode)")
+    p.add_argument("--draft-d-model", type=int, default=0,
+                   help="drafter width (0 → target d_model // 4, rounded "
+                        "to the head count)")
+    p.add_argument("--draft-layers", type=int, default=2,
+                   help="drafter depth")
+    p.add_argument("--draft-bcr-keep", type=float, default=0.0,
+                   help="BCR-pack the drafter at this keep fraction "
+                        "(0 → dense drafter)")
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--requests", type=int, default=32)
@@ -418,15 +476,23 @@ def main() -> None:
 
     if args.prefix_cache and not args.page_size:
         p.error("--prefix-cache needs --page-size (paged KV pool)")
+    if args.spec_k and not args.page_size:
+        p.error("--spec-k needs --page-size (verification runs through "
+                "the paged prefill-append kernel)")
+    draft_cfg, draft_params = None, None
+    if args.spec_k:
+        draft_cfg, draft_params = build_draft(cfg, args, log=print)
     engine = InferenceEngine(cfg, params, EngineConfig(
         n_slots=args.slots, capacity=args.capacity,
         page_size=args.page_size, kv_pages=args.kv_pages or None,
-        prefix_cache=args.prefix_cache))
+        prefix_cache=args.prefix_cache,
+        spec_k=args.spec_k, draft_cfg=draft_cfg),
+        draft_params=draft_params)
     # mixed prompt lengths around --prompt-len, clamped so every request
-    # fits its slot (prompt + gen ≤ capacity; shared-prefix workloads
-    # also carry --system-len tokens per prompt)
-    pmax = args.capacity - args.gen - (args.system_len
-                                       if args.system_prompts else 0)
+    # fits its slot (prompt + gen + spec headroom ≤ capacity;
+    # shared-prefix workloads also carry --system-len tokens per prompt)
+    pmax = args.capacity - args.gen - args.spec_k - (
+        args.system_len if args.system_prompts else 0)
     if pmax < 1:
         p.error(f"--capacity {args.capacity} leaves no room for prompts "
                 f"after --gen {args.gen}"

@@ -57,7 +57,8 @@ def model_fns(cfg: ModelConfig) -> ModelFns:
         init_cache=functools.partial(causal_lm.init_cache, cfg),
         prefill_append=lambda p, b, c: causal_lm.prefill_append(
             cfg, p, b["tokens"], c, b["prefix_len"], b["block_tables"],
-            length=b.get("length")),
+            length=b.get("length"),
+            all_logits=b.get("all_logits", False)),
     )
 
 

@@ -442,7 +442,8 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
 def prefill_append(cfg: ModelConfig, params: Params, tokens: jax.Array,
                    cache: Params, prefix_len: jax.Array,
                    block_tables: jax.Array,
-                   length: Optional[jax.Array] = None
+                   length: Optional[jax.Array] = None,
+                   all_logits: bool = False
                    ) -> Tuple[jax.Array, Params]:
     """Suffix-only prefill over a paged cache holding a shared prefix.
 
@@ -457,6 +458,13 @@ def prefill_append(cfg: ModelConfig, params: Params, tokens: jax.Array,
     with ``prefix_len = 0`` this degenerates to an ordinary (paged)
     prefill. Attention-family layers only — recurrent mixers have no
     paged state to append to.
+
+    ``all_logits=True`` (static) returns logits for EVERY suffix position
+    (B, S, V) instead of the last real one — row ``j`` is the model's
+    distribution over the token following suffix position ``j``. This is
+    the speculative-decode verification read: one dispatch scores a
+    drafted token block against the paged prefix, decode being the S=1
+    special case.
     """
     sp = stack_plan(cfg)
     b, s = tokens.shape
@@ -491,6 +499,9 @@ def prefill_append(cfg: ModelConfig, params: Params, tokens: jax.Array,
         x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if all_logits:
+        logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+        return logits, {"prefix": new_prefix, "stack": new_stack}
     idx = jnp.clip(slen - 1, 0, s - 1)
     last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     logits = linear_apply(params["lm_head"], last, impl=cfg.kernel_impl)

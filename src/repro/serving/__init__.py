@@ -2,12 +2,15 @@
 
 Layering (docs/serving.md has the full picture):
 
-  kv_slots   — slot-based KV/recurrent-state pools with per-slot lengths
-               (capacity-dense SlotPool, block-paged PagedSlotPool)
-  scheduler  — FCFS request queue: admission into free slots, retirement
-  engine     — InferenceEngine: batched prefill for prompt ingestion, one
-               jit'd ragged decode step (optionally over block-paged KV),
-               greedy/temperature/top-k sampling
+  kv_slots    — slot-based KV/recurrent-state pools with per-slot lengths
+                (capacity-dense SlotPool, block-paged PagedSlotPool)
+  scheduler   — FCFS request queue: admission into free slots, retirement
+  engine      — InferenceEngine: batched prefill for prompt ingestion, one
+                jit'd ragged decode step (optionally over block-paged KV),
+                greedy/temperature/top-k sampling; with spec_k > 0 each
+                step is a speculative draft→verify→accept iteration
+  speculative — drafters (DraftModel: a small second causal_lm;
+                OracleDraft: synthetic replay) + acceptance rules
 """
 
 from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: F401
@@ -15,3 +18,6 @@ from repro.serving.kv_slots import (  # noqa: F401
     PagedSlotPool, SlotPool, seat_prefill,
 )
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.speculative import (  # noqa: F401
+    DraftModel, OracleDraft, accept_draft,
+)

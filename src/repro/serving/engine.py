@@ -37,6 +37,16 @@ and runs ONE bucketed ``prefill_append`` dispatch for just the uncached
 suffixes — TTFT and pages allocated scale with what the cache does not
 already hold.
 
+With ``EngineConfig.spec_k`` (paged, pure-attention families) every
+decode step becomes a speculative draft→verify→accept step: a drafter
+(``serving/speculative.py`` — a small second model or a synthetic oracle)
+proposes up to ``spec_k`` tokens per slot, ONE ``prefill_append`` verify
+dispatch scores pending + drafts against the paged prefix, and
+acceptance commits the longest agreeing prefix plus one token from the
+target's own distribution. Rejected drafts rewind: the pool truncates
+back to the committed frontier and tail pages return to the slot's
+reservation (they were allocated this step and never shared/registered).
+
 Prompt padding: for pure-attention families prompts are right-padded to a
 power-of-two bucket (causality keeps right-pads invisible to real
 positions; ``prefill(..., length=...)`` reads logits at the true last
@@ -126,11 +136,26 @@ class EngineConfig:
     # host timing (block_search.wallclock_plan_fitness, opt-in)
     plan_packed: bool = True
     plan_fitness: str = "analytic"
+    # speculative decoding: spec_k > 0 makes every decode step a
+    # draft→verify→accept step — a drafter proposes up to spec_k tokens
+    # per live slot and the target scores all of them plus the pending
+    # token in ONE prefill_append dispatch (decode is its S=1 special
+    # case), committing 1..spec_k+1 tokens per step. Needs a paged pool
+    # (page_size > 0) on a pure-attention family, plus a drafter: either
+    # draft_cfg (+ draft_params at engine build — a small causal_lm
+    # sharing the target's token space) or an explicit `drafter` object
+    # implementing serving/speculative.py's protocol. Requests then need
+    # spec_k tokens of slot headroom: prompt + max_new_tokens + spec_k
+    # must fit the capacity (the verify dispatch writes draft K/V past
+    # the commit frontier before acceptance rolls it back).
+    spec_k: int = 0
+    draft_cfg: Optional[ModelConfig] = None
 
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree,
-                 ec: Optional[EngineConfig] = None):
+                 ec: Optional[EngineConfig] = None, *,
+                 draft_params: PyTree = None, drafter: Any = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "InferenceEngine serves decoder-only families; encdec "
@@ -164,6 +189,32 @@ class InferenceEngine:
         self.prefix_cache = (bool(ec.prefix_cache) and self.paged
                              and cfg.family in _PADDED_FAMILIES
                              and fns.prefill_append is not None)
+        # speculative decoding: verification is a prefill_append dispatch
+        # and rollback rewinds paged K/V, so it needs the paged pool and a
+        # pure-attention stack (recurrent mixers cannot rewind state)
+        self.spec = int(ec.spec_k) > 0
+        if self.spec:
+            from repro.models.causal_lm import layer_plan as _lp
+            if not (self.paged and fns.prefill_append is not None
+                    and all(m == "attn" for m, _ in _lp(cfg))):
+                raise ValueError(
+                    "spec_k > 0 needs a block-paged pool (page_size > 0) "
+                    "on a pure-attention family: verification runs "
+                    "through prefill_append and rollback rewinds pages")
+            if drafter is None:
+                from repro.serving.speculative import DraftModel
+                if ec.draft_cfg is None or draft_params is None:
+                    raise ValueError(
+                        "spec_k > 0 needs a drafter: pass draft_cfg + "
+                        "draft_params, or a drafter object")
+                if ec.draft_cfg.vocab_size != cfg.vocab_size:
+                    raise ValueError(
+                        "drafter must share the target's token space")
+                drafter = DraftModel(ec.draft_cfg, draft_params,
+                                     ec.n_slots, ec.capacity,
+                                     min_bucket=ec.min_bucket)
+        self.drafter = drafter
+        self._rng = np.random.default_rng(ec.seed)
         # per-decode-step KV traffic accounting (BENCH/bench reporting):
         # bytes one cache row (K+V, all attention layers) costs to read
         from repro.models.causal_lm import layer_plan
@@ -202,6 +253,22 @@ class InferenceEngine:
             tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
             return tok, cache
 
+        def verify_logits(p, toks, plen, slen, cache, bt, greedy_only):
+            # speculative verification: score every suffix position in one
+            # dispatch — row j is the target's distribution for the token
+            # after suffix position j. Acceptance is host-side, but what
+            # crosses the device-host link depends on the batch: all-greedy
+            # steps (the static `greedy_only` flag, like decode's
+            # `use_topk`) only compare argmaxes, so the (B, S) argmax rows
+            # ship instead of (B, S, V) logits; sampled requests need the
+            # full p-rows for the acceptance ratio and residual.
+            logits, cache = fns.prefill_append(
+                p, {"tokens": toks, "prefix_len": plen, "length": slen,
+                    "block_tables": bt, "all_logits": True}, cache)
+            if greedy_only:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+            return logits, cache
+
         self._prefill = jax.jit(prefill_sample,
                                 static_argnames=("use_topk",))
         self._decode = jax.jit(decode_sample, static_argnames=("use_topk",),
@@ -210,6 +277,10 @@ class InferenceEngine:
                                 static_argnames=("use_topk",),
                                 donate_argnums=(4,))
                         if fns.prefill_append is not None else None)
+        self._verify = (jax.jit(verify_logits,
+                                static_argnames=("greedy_only",),
+                                donate_argnums=(4,))
+                        if self.spec else None)
 
         self._key = jax.random.PRNGKey(ec.seed)
         self._defer_steps = 0   # decode steps the current backfill waited
@@ -228,12 +299,17 @@ class InferenceEngine:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        if prompt.size + max_new_tokens > self.ec.capacity:
+        # speculative decoding scratch: the verify dispatch writes up to
+        # spec_k draft K/V rows past the commit frontier before acceptance
+        # rolls them back, so the slot needs that much extra headroom
+        total = prompt.size + max_new_tokens + self._headroom()
+        if total > self.ec.capacity:
             raise ValueError(
                 f"prompt_len {prompt.size} + max_new_tokens {max_new_tokens}"
-                f" exceeds slot capacity {self.ec.capacity}")
+                + (f" + spec_k {self.ec.spec_k}" if self.spec else "")
+                + f" exceeds slot capacity {self.ec.capacity}")
         if self.paged:
-            need = self.pool.pages_needed(prompt.size + max_new_tokens)
+            need = self.pool.pages_needed(total)
             if need > self.pool.n_pages - 1:
                 raise ValueError(
                     f"request needs {need} KV pages but the pool only has "
@@ -244,6 +320,9 @@ class InferenceEngine:
             arrival_time=arrival_time))
 
     # -- internals ---------------------------------------------------------
+
+    def _headroom(self) -> int:
+        return self.ec.spec_k if self.spec else 0
 
     def _bucket(self, n: int) -> int:
         if not self.pad_prefill:
@@ -287,6 +366,11 @@ class InferenceEngine:
             self.stats["tokens_generated"] += 1
             if self.prefix_cache:
                 self.pool.register_prefix(slot, req.prompt)
+        if self.spec:
+            # the drafter builds its own full-prompt cache (no prefix
+            # sharing on its side — prefix-hit admissions prefill the
+            # whole prompt here, at drafter scale)
+            self.drafter.admit([(req, slot) for req, slot in group])
 
     def _admit_group(self, group: List) -> None:
         """ONE prefill dispatch for a batch of admissions. Prompts are
@@ -416,7 +500,8 @@ class InferenceEngine:
             # reserves the uncached-suffix budget.
             fit = len(admitted)
             for i, (req, slot) in enumerate(admitted):
-                total = req.prompt_len + req.max_new_tokens
+                total = (req.prompt_len + req.max_new_tokens
+                         + self._headroom())
                 if self.prefix_cache:
                     hit = self.pool.admit_prefix(slot, req.prompt, total)
                     if hit is None:
@@ -456,38 +541,21 @@ class InferenceEngine:
         # requests whose first (prefill-sampled) token already completed them
         for slot, req in list(self.sched.active.items()):
             if req.is_finished():
-                self.pool.release(slot)
+                self._release(slot)
                 finished.append(self.sched.retire(slot))
         if not self.sched.active:
             self._sync_pool_stats()
             return finished
 
         self.stats["slot_occupancy"].append(len(self.sched.active))
+        if self.spec:
+            finished.extend(self._spec_step())
+            self._sync_pool_stats()
+            return finished
         if self.paged:
-            # alloc-on-advance: the step writes K/V at position len, so the
-            # page covering it must exist before the dispatch (drawn from
-            # the admission-time reservation, never from thin air). With
-            # prefix sharing the page must also be PRIVATE — admission CoW
-            # already guarantees that for the engine's own flow (the
-            # suffix always starts at/before the write frontier), so this
-            # is a cheap invariant check that batches any stragglers.
-            cow: List = []
-            for slot in self.sched.active:
-                pos = int(self.pool.lens[slot])
-                self.pool.ensure(slot, pos + 1)
-                if self.prefix_cache:
-                    pair = self.pool.ensure_writable(slot, pos)
-                    if pair is not None:
-                        cow.append(pair)
-            if cow:
-                src, dst = zip(*cow)
-                self.pool.copy_pages(np.asarray(src), np.asarray(dst))
-            bt = self.pool.device_tables()
-            self.stats["kv_bytes_read"] += (bt.shape[1] * self.ec.page_size
-                                            * self.ec.n_slots
-                                            * self._kv_row_bytes)
-            self.stats["kv_bytes_read_live"] += (self.pool.live_page_rows()
-                                                 * self._kv_row_bytes)
+            bt = self._prepare_paged_writes(
+                {slot: int(self.pool.lens[slot]) + 1
+                 for slot in self.sched.active}, extra=1)
         else:
             bt = None
             rows = self.ec.n_slots * self.ec.capacity
@@ -510,9 +578,126 @@ class InferenceEngine:
             self._tokens[slot, 0] = tok
             self.stats["tokens_generated"] += 1
             if req.is_finished():
-                self.pool.release(slot)
+                self._release(slot)
                 finished.append(self.sched.retire(slot))
         self._sync_pool_stats()
+        return finished
+
+    def _release(self, slot: int) -> None:
+        self.pool.release(slot)
+        if self.spec:
+            self.drafter.release(slot)
+
+    def _prepare_paged_writes(self, write_lens: Dict[int, int],
+                              extra: int) -> jax.Array:
+        """Page bookkeeping shared by plain decode (each slot writes one
+        K/V row: ``write_len = len + 1``) and the speculative verify
+        dispatch (``len + suffix``) — decode really is the suffix-1 case.
+
+        Alloc-on-advance: every page a slot's write frontier will touch
+        must exist before the dispatch (drawn from the admission-time
+        reservation, never from thin air). With prefix sharing the page
+        holding the first written position (the current length) must also
+        be PRIVATE — admission CoW already guarantees that for the
+        engine's own flow, so this is a cheap invariant check that
+        batches any stragglers; pages past it were just drawn fresh.
+        Returns the device block tables at the pow2 width covering
+        ``len + extra`` and accounts the step's KV read traffic."""
+        cow: List = []
+        for slot, wlen in write_lens.items():
+            self.pool.ensure(slot, wlen)
+            if self.prefix_cache:
+                pair = self.pool.ensure_writable(
+                    slot, int(self.pool.lens[slot]))
+                if pair is not None:
+                    cow.append(pair)
+        if cow:
+            src, dst = zip(*cow)
+            self.pool.copy_pages(np.asarray(src), np.asarray(dst))
+        bt = self.pool.device_tables(self.pool.table_width(extra=extra))
+        self.stats["kv_bytes_read"] += (bt.shape[1] * self.ec.page_size
+                                        * self.ec.n_slots
+                                        * self._kv_row_bytes)
+        self.stats["kv_bytes_read_live"] += (self.pool.live_page_rows()
+                                             * self._kv_row_bytes)
+        return bt
+
+    def _spec_step(self) -> List[Request]:
+        """One draft→verify→accept iteration over every live slot.
+
+        The drafter proposes up to ``spec_k`` tokens per slot; ONE
+        ``prefill_append`` dispatch scores the pending token plus all
+        drafts against the paged prefix (suffix row j's logits are the
+        target's distribution for position ``len + j + 1``); acceptance
+        keeps the longest agreeing draft prefix and always emits one more
+        token from the target's own row, so each step commits 1..spec_k+1
+        tokens with exactly the plain-decode output distribution.
+        Rejected drafts roll back by truncating the pool to the committed
+        frontier — the pages they were written into were allocated this
+        step and never shared, so they return straight to the slot's
+        reservation."""
+        from repro.serving.speculative import accept_draft, accept_greedy
+        active = sorted(self.sched.active.items())
+        tlens = self.pool.lens.copy()
+        proposals = self.drafter.propose(active, tlens, self.ec.spec_k,
+                                         self._rng)
+        s_max = self.ec.spec_k + 1
+        toks = np.zeros((self.ec.n_slots, s_max), np.int32)
+        plens = np.zeros((self.ec.n_slots,), np.int32)
+        slens = np.zeros((self.ec.n_slots,), np.int32)
+        for slot, req in active:
+            seq = [int(self._tokens[slot, 0])] + list(proposals[slot][0])
+            toks[slot, :len(seq)] = seq
+            plens[slot] = tlens[slot]
+            slens[slot] = len(seq)
+        bt = self._prepare_paged_writes(
+            {slot: int(tlens[slot]) + int(slens[slot])
+             for slot, _ in active}, extra=s_max)
+        # all-greedy steps ship (B, S) argmax rows instead of (B, S, V)
+        # logits — at real vocab sizes that is the difference between a
+        # few KB and a few MB on the device-host link every step
+        greedy_only = all(req.temperature <= 0 for _, req in active)
+        out_dev, self.pool.cache = self._verify(
+            self.params, jnp.asarray(toks), jnp.asarray(plens),
+            jnp.asarray(slens), self.pool.cache, bt,
+            greedy_only=greedy_only)
+        out = np.asarray(out_dev)
+        now = time.perf_counter()
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+
+        finished: List[Request] = []
+        for slot, req in active:
+            props, qrows = proposals[slot]
+            n = len(props)
+            if greedy_only:
+                a, follow = accept_greedy(out[slot], props)
+            else:
+                a, follow = accept_draft(out[slot, :n + 1], props, qrows,
+                                         req.temperature, req.top_k,
+                                         self._rng)
+            committed = 0
+            for tok in props[:a] + [follow]:
+                req.generated.append(int(tok))
+                req.token_times.append(now)
+                self.stats["tokens_generated"] += 1
+                committed += 1
+                if req.is_finished():
+                    break
+            # acceptance stats count drafts actually EMITTED: a request
+            # finishing mid-block discards the accepted tail, and tokens
+            # rolled back by truncate must not inflate the rate
+            a_committed = min(committed, a)
+            self.stats["draft_proposed"] += n
+            self.stats["draft_accepted"] += a_committed
+            self.stats["accepted_hist"][a_committed] += 1
+            self._tokens[slot, 0] = req.generated[-1]
+            new_len = int(tlens[slot]) + committed
+            self.pool.truncate(slot, new_len)
+            self.drafter.rollback(slot, new_len)
+            if req.is_finished():
+                self._release(slot)
+                finished.append(self.sched.retire(slot))
         return finished
 
     # -- convenience -------------------------------------------------------
@@ -524,7 +709,9 @@ class InferenceEngine:
                           page_stalls=0, kv_bytes_read=0,
                           kv_bytes_read_live=0, slot_occupancy=[],
                           prefix_hit_tokens=0, pages_shared=0,
-                          cow_copies=0, evictions=0, pages_allocated=0)
+                          cow_copies=0, evictions=0, pages_allocated=0,
+                          spec_steps=0, draft_proposed=0, draft_accepted=0,
+                          accepted_hist=[0] * (self.ec.spec_k + 1))
         if self.paged:
             self.pool.reset_stats()
 
@@ -549,7 +736,8 @@ class InferenceEngine:
         throwaway prompts is dropped so measured traffic starts cold."""
         assert not self.sched.has_work(), "warmup() needs an idle engine"
         buckets = sorted({self._bucket(max(1, int(p))) for p in prompt_lens})
-        lens = [min(b, self.ec.capacity - gen) for b in buckets]
+        lens = [min(b, self.ec.capacity - gen - self._headroom())
+                for b in buckets]
         for l in lens:
             for tier in self._row_tiers():
                 self.generate([np.zeros((l,), np.int32)] * tier,
@@ -591,26 +779,43 @@ class InferenceEngine:
                         zeros[:tier].astype(jnp.int32), use_topk=False)
             self.pool.reset_prefix()
         if self.paged:
-            # compile the decode program for every block-table width the
-            # pow2 bucketing can produce — decode bucket growth mid-traffic
+            # compile the decode-path program for every block-table width
+            # the pow2 bucketing can produce — bucket growth mid-traffic
             # must not pay jit inside the measured window. All-zero tables
-            # route the throwaway writes into the null page.
+            # route the throwaway writes into the null page. In
+            # speculative mode every step is a verify dispatch, so that
+            # program (spec_k+1 suffix rows, host-side sampling) is the
+            # one compiled per width instead of the fused decode+sample.
             widths, w = [], 1
             while True:
                 widths.append(min(w, self.pool.max_pages))
                 if w >= self.pool.max_pages:
                     break
                 w *= 2
-            toks = jnp.zeros((self.ec.n_slots, 1), jnp.int32)
             zeros = jnp.zeros((self.ec.n_slots,), jnp.float32)
             lens0 = jnp.zeros((self.ec.n_slots,), jnp.int32)
-            for w in widths:
-                bt = jnp.zeros((self.ec.n_slots, w), jnp.int32)
-                for use_topk in (False, True):   # both static sample paths
-                    _, self.pool.cache = self._decode(
-                        self.params, toks, lens0, self.pool.cache,
-                        self._next_key(), zeros, zeros.astype(jnp.int32),
-                        bt, use_topk=use_topk)
+            if self.spec:
+                toks = jnp.zeros((self.ec.n_slots, self.ec.spec_k + 1),
+                                 jnp.int32)
+                for w in widths:
+                    bt = jnp.zeros((self.ec.n_slots, w), jnp.int32)
+                    for greedy_only in (True, False):  # both static paths
+                        _, self.pool.cache = self._verify(
+                            self.params, toks, lens0, lens0,
+                            self.pool.cache, bt, greedy_only=greedy_only)
+                if hasattr(self.drafter, "warmup"):
+                    # warmup traffic is all-greedy; the drafter's
+                    # sampled-path program must not jit mid-traffic
+                    self.drafter.warmup()
+            else:
+                toks = jnp.zeros((self.ec.n_slots, 1), jnp.int32)
+                for w in widths:
+                    bt = jnp.zeros((self.ec.n_slots, w), jnp.int32)
+                    for use_topk in (False, True):  # both sample paths
+                        _, self.pool.cache = self._decode(
+                            self.params, toks, lens0, self.pool.cache,
+                            self._next_key(), zeros,
+                            zeros.astype(jnp.int32), bt, use_topk=use_topk)
         self.sched.finished.clear()
         self.reset_stats()
 

@@ -165,6 +165,13 @@ class SlotPool:
     def advance(self, slot: int) -> None:
         self.lens[slot] += 1
 
+    def truncate(self, slot: int, length: int) -> None:
+        """Rewind a slot to ``length`` valid positions (speculative-decode
+        rollback). Stale K/V past the new frontier is never attended to —
+        the per-slot length mask covers it — so only the length moves."""
+        assert 0 <= length <= self.capacity, (length, self.capacity)
+        self.lens[slot] = length
+
     def release(self, slot: int) -> None:
         self.lens[slot] = 0
 
@@ -536,12 +543,14 @@ class PagedSlotPool:
 
     # -- decode-step views -------------------------------------------------
 
-    def table_width(self) -> int:
+    def table_width(self, extra: int = 1) -> int:
         """Block-table columns the next decode step needs: pages covering
-        ``len + 1`` for the longest live slot, bucketed to a power of two
-        so jit retraces stay O(log max_pages)."""
+        ``len + extra`` for the longest live slot (``extra`` = tokens the
+        step writes: 1 for decode, the suffix bucket for a speculative
+        verify dispatch), bucketed to a power of two so jit retraces stay
+        O(log max_pages)."""
         live = self.lens[self.lens > 0]
-        need = self.pages_needed(int(live.max()) + 1) if live.size else 1
+        need = self.pages_needed(int(live.max()) + extra) if live.size else 1
         w = 1
         while w < need:
             w *= 2
@@ -562,6 +571,37 @@ class PagedSlotPool:
 
     def advance(self, slot: int) -> None:
         self.lens[slot] += 1
+
+    def truncate(self, slot: int, length: int) -> None:
+        """Rewind a slot to ``length`` valid positions and return pages
+        wholly past the new frontier to the slot's reservation
+        (speculative-decode rollback: rejected draft K/V sits in pages the
+        verify dispatch just allocated).
+
+        Safe by construction: pages past the prompt are allocated fresh
+        during decode/verify and are never registered in the prefix index
+        nor adopted by another slot (``register_prefix`` only publishes
+        full PROMPT pages at admission), so every freed page has refcount
+        1 and goes straight back to the free list. The page containing
+        position ``length - 1`` stays — its leading K/V is still live —
+        and stale rows past the frontier inside it are masked by the
+        length, then overwritten when the slot advances again."""
+        assert 0 <= length <= self.capacity, (length, self.capacity)
+        keep = self.pages_needed(length)
+        n = int(self._n_alloc[slot])
+        assert keep <= n, (slot, length, keep, n)
+        for col in range(keep, n):
+            pid = int(self.table[slot, col])
+            assert pid not in self._page_key and self._refcount[pid] == 1, \
+                f"truncate hit a shared/registered page {pid} past the " \
+                f"write frontier of slot {slot}"
+            self._drop_page_ref(pid)
+            self.table[slot, col] = 0
+        self._n_alloc[slot] = keep
+        # freed pages go back into the slot's worst-case budget so a later
+        # ensure() can re-draw them without over-committing the pool
+        self._set_reserved(slot, int(self._reserved[slot]) + (n - keep))
+        self.lens[slot] = length
 
     def release(self, slot: int) -> None:
         """Retire: DECREMENT every table page's refcount instead of

@@ -1,0 +1,304 @@
+"""Speculative decoding: drafters + acceptance rules for the engine.
+
+The multiplier: a cheap drafter proposes ``k`` tokens per live slot and
+the target model scores all of them (plus the pending token) in ONE
+``prefill_append`` dispatch against the paged prefix — decode is the S=1
+special case of that kernel, so verification reuses the decode grid at
+block width ``k + 1`` instead of paying ``k + 1`` sequential dispatches.
+Acceptance then keeps the longest draft prefix the target agrees with and
+always emits one more token from the target's own distribution (the
+correction on a reject, the bonus on a full accept), so every speculative
+step commits between 1 and ``k + 1`` tokens and the output distribution
+is exactly the target's.
+
+Position bookkeeping the engine and drafters share: a slot whose request
+has committed ``g`` tokens over a ``P``-token prompt has target length
+``P + g - 1`` — positions ``[0, P + g - 1)`` hold K/V for the prompt plus
+all committed tokens except the last, and the last committed token is the
+*pending* token whose K/V the next dispatch writes. Token at absolute
+position ``P + i`` is ``generated[i]``.
+
+Two drafters implement the engine's protocol:
+
+* :class:`DraftModel` — a real second model: the same ``causal_lm`` stack
+  at a small (optionally BCR-packed) config sharing the target's token
+  space, running its own capacity-dense :class:`SlotPool`. Proposals come
+  from ``k`` batched single-token decode steps; its cache trails the
+  target by at most one position (the full-accept bonus token), which the
+  next round's first step re-feeds.
+* :class:`OracleDraft` — a synthetic high-acceptance drafter that replays
+  precomputed continuations keyed by request id. No model, no state: it
+  isolates the verify-dispatch economics (benches) and exercises the
+  full-acceptance path (tests) — with a greedy target its proposals are
+  always accepted.
+
+A drafter only affects *speed*: acceptance re-derives every emitted token
+from the target's logits, so greedy speculative output is bit-identical
+to plain greedy decode no matter how bad the drafter is.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import model_fns
+from repro.serving.kv_slots import SlotPool
+from repro.serving.scheduler import Request
+
+
+def transform_probs(logits: np.ndarray, temperature: float,
+                    top_k: int) -> np.ndarray:
+    """Host-side mirror of ``engine.sample_tokens``'s distribution: top-k
+    filter on raw logits, then temperature, then softmax. float64 so
+    acceptance ratios are stable."""
+    z = np.asarray(logits, np.float64)
+    if top_k > 0:
+        k = min(top_k, z.size)
+        kth = np.partition(z, -k)[-k]       # O(V), vs a full-vocab sort
+        z = np.where(z >= kth, z, -np.inf)
+    z = z / max(temperature, 1e-6)
+    z = z - z.max()
+    p = np.exp(z)
+    return p / p.sum()
+
+
+def accept_greedy(argmaxes: np.ndarray, props: Sequence[int]
+                  ) -> Tuple[int, int]:
+    """Greedy acceptance off (n+1,) precomputed target argmaxes: accept
+    while the proposal equals the argmax; the follow-up token is the
+    argmax at the break — bit-identical to plain greedy decode. This is
+    the all-greedy fast path: the verify dispatch ships only these int
+    rows instead of full logit rows."""
+    a = 0
+    while a < len(props) and int(props[a]) == int(argmaxes[a]):
+        a += 1
+    return a, int(argmaxes[a])
+
+
+def accept_draft(rows: np.ndarray, props: Sequence[int],
+                 qrows: Optional[np.ndarray], temperature: float,
+                 top_k: int, rng: np.random.Generator) -> Tuple[int, int]:
+    """Pick the longest accepted draft prefix + the follow-up token.
+
+    ``rows`` are the target logits (n+1, V) from the verify dispatch —
+    row ``j`` is the target's distribution for the token after draft
+    ``j`` (row 0: after the pending token). ``props`` the n proposed
+    tokens, ``qrows`` the drafter's proposal distributions (n, V), or
+    None for a deterministic drafter (a point mass at the proposal).
+
+    Greedy (temperature 0): accept while the proposal equals the target
+    argmax; the follow-up is the argmax at the break — bit-identical to
+    plain greedy decode. Sampled: standard speculative sampling — accept
+    ``d`` with probability ``min(1, p(d)/q(d))``, on rejection resample
+    from the normalized residual ``max(p - q, 0)``; a full accept samples
+    the bonus from the last row. Both return (accepted_count,
+    follow_up_token)."""
+    if temperature <= 0:
+        return accept_greedy(np.asarray(rows).argmax(axis=-1), props)
+    for j, d in enumerate(props):
+        d = int(d)
+        p = transform_probs(rows[j], temperature, top_k)
+        q = None if qrows is None else np.asarray(qrows[j], np.float64)
+        qd = 1.0 if q is None else float(q[d])
+        if rng.random() < min(1.0, float(p[d]) / max(qd, 1e-300)):
+            continue
+        if q is None:
+            resid = p.copy()
+            resid[d] = 0.0
+        else:
+            resid = np.maximum(p - q, 0.0)
+        s = resid.sum()
+        resid = resid / s if s > 0 else p
+        return j, int(rng.choice(resid.size, p=resid))
+    p = transform_probs(rows[len(props)], temperature, top_k)
+    return len(props), int(rng.choice(p.size, p=p))
+
+
+class DraftModel:
+    """Model-based drafter: a small ``causal_lm`` sharing the target's
+    token space, serving proposals out of its own capacity-dense
+    :class:`SlotPool`.
+
+    Protocol driven by the engine:
+
+      ``admit(group)``      — full-prompt prefill into the drafter's own
+                              cache for freshly admitted requests (the
+                              drafter has no prefix cache, so prefix-hit
+                              admissions still prefill everything here);
+      ``propose(...)``      — ``k`` batched single-token decode steps per
+                              engine step, catching up at most one
+                              position first (see module docstring);
+      ``rollback(slot, L)`` — clamp the drafter length to the target's
+                              post-commit length (rejected-draft K/V past
+                              it is masked, then overwritten);
+      ``release(slot)``     — slot retired.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int,
+                 capacity: int, min_bucket: int = 8):
+        from repro.models.causal_lm import layer_plan
+        assert all(mixer == "attn" for mixer, _ in layer_plan(cfg)), \
+            "drafter must be a pure-attention family: recurrent state " \
+            "cannot rewind when drafts are rejected"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.min_bucket = min_bucket
+        self.fns = fns = model_fns(cfg)
+        self.pool = SlotPool(fns.init_cache, n_slots, capacity)
+
+        def prefill_cache(p, toks, length, mask):
+            # logits unused → jit DCEs the lm_head matmul
+            _, pcache = fns.prefill(p, {"tokens": toks, "length": length,
+                                        "token_mask": mask})
+            return pcache
+
+        def decode_logits(p, toks, lens, cache, greedy_only):
+            # all-greedy rounds ship only the (B,) argmax host-side (the
+            # static flag mirrors the engine's verify path) — sampled
+            # requests need the full rows for their proposal distribution
+            logits, cache = fns.decode_step(
+                p, {"tokens": toks, "cache_len": lens,
+                    "token_mask": (lens > 0)[:, None]}, cache)
+            if greedy_only:
+                return (jnp.argmax(logits[:, -1], axis=-1)
+                        .astype(jnp.int32), cache)
+            return logits[:, -1], cache
+
+        self._prefill = jax.jit(prefill_cache)
+        self._decode = jax.jit(decode_logits,
+                               static_argnames=("greedy_only",),
+                               donate_argnums=(3,))
+
+    def _bucket(self, n: int) -> int:
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.capacity)
+
+    def warmup(self) -> None:
+        """Compile both static decode variants (greedy argmax / full
+        rows) outside the measured window: engine warmup traffic is
+        all-greedy, so without this the first temperature>0 request
+        would pay the sampled-path jit mid-traffic. Garbage rows only —
+        every slot is idle (len 0), writes land at masked positions."""
+        toks = jnp.zeros((self.n_slots, 1), jnp.int32)
+        lens = jnp.zeros((self.n_slots,), jnp.int32)
+        for greedy_only in (True, False):
+            _, self.pool.cache = self._decode(
+                self.params, toks, lens, self.pool.cache,
+                greedy_only=greedy_only)
+
+    def admit(self, group: List[Tuple[Request, int]]) -> None:
+        """One drafter prefill dispatch for a batch of admissions (full
+        prompts, right-padded to a shared pow2 bucket; rows padded to
+        ``n_slots`` so there is ONE compiled program per bucket — pad rows
+        alias the first slot and are overwritten by its real row)."""
+        k = len(group)
+        bucket = max(self._bucket(req.prompt_len) for req, _ in group)
+        toks = np.zeros((self.n_slots, bucket), np.int32)
+        lens = np.ones((self.n_slots,), np.int32)
+        mask = np.zeros((self.n_slots, bucket), bool)
+        slots = np.zeros((self.n_slots,), np.int32)
+        for i, (req, slot) in enumerate(group):
+            p = req.prompt_len
+            toks[i, :p] = req.prompt
+            lens[i] = p
+            mask[i, :p] = True
+            slots[i] = slot
+        slots[k:] = slots[0]
+        pcache = self._prefill(self.params, jnp.asarray(toks),
+                               jnp.asarray(lens), jnp.asarray(mask))
+        self.pool.insert_rows(pcache, slots, lens[:k])
+
+    def propose(self, active: List[Tuple[int, Request]],
+                target_lens: np.ndarray, k: int, rng: np.random.Generator
+                ) -> Dict[int, Tuple[List[int], Optional[np.ndarray]]]:
+        """``k`` batched single-token decode steps → per-slot proposals.
+
+        Each slot first re-feeds the committed tokens its cache is
+        missing (at most one: the full-accept bonus token), then its own
+        chain — greedy for greedy requests, sampled from the drafter's
+        temperature/top-k distribution otherwise (those proposal
+        distributions are returned for the acceptance ratio). A slot with
+        catch-up to do yields one fewer proposal this round."""
+        feeds: Dict[int, List[int]] = {}
+        for slot, req in active:
+            dlen = int(self.pool.lens[slot])
+            tlen = int(target_lens[slot])
+            assert 0 <= tlen - dlen <= 1, (slot, dlen, tlen)
+            # tokens for positions [dlen, tlen]: trailing committed tokens
+            # the drafter has not ingested, ending with the pending one
+            feeds[slot] = [int(t) for t in
+                           req.generated[dlen - req.prompt_len:]]
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for slot, _ in active:
+            toks[slot, 0] = feeds[slot][0]
+        props: Dict[int, List[int]] = {slot: [] for slot, _ in active}
+        qrows: Dict[int, List[np.ndarray]] = {slot: [] for slot, _ in active}
+        greedy_only = all(req.temperature <= 0 for _, req in active)
+        for j in range(k):
+            out, self.pool.cache = self._decode(
+                self.params, jnp.asarray(toks),
+                jnp.asarray(self.pool.lens), self.pool.cache,
+                greedy_only=greedy_only)
+            lg = np.asarray(out)     # (B,) argmaxes or (B, V) logit rows
+            for slot, req in active:
+                self.pool.advance(slot)
+                if j + 1 < len(feeds[slot]):
+                    nxt = feeds[slot][j + 1]      # catch-up: output unused
+                elif req.temperature > 0:
+                    q = transform_probs(lg[slot], req.temperature, req.top_k)
+                    nxt = int(rng.choice(q.size, p=q))
+                    props[slot].append(nxt)
+                    qrows[slot].append(q)
+                else:
+                    nxt = int(lg[slot] if greedy_only else lg[slot].argmax())
+                    props[slot].append(nxt)
+                toks[slot, 0] = nxt
+        return {slot: (props[slot],
+                       np.asarray(qrows[slot]) if qrows[slot] else None)
+                for slot, _ in active}
+
+    def rollback(self, slot: int, length: int) -> None:
+        self.pool.truncate(slot, min(int(self.pool.lens[slot]), length))
+
+    def release(self, slot: int) -> None:
+        self.pool.release(slot)
+
+
+class OracleDraft:
+    """Synthetic high-acceptance drafter: replays precomputed
+    continuations keyed by request id (``continuations[rid]`` = the full
+    expected ``generated`` list, e.g. recorded from a plain greedy run of
+    the same workload). Unknown rids (engine warmup's throwaway requests)
+    draw no proposals, degrading those steps to 1-token verify dispatches.
+    Stateless — no cache, no catch-up, always ``k`` proposals."""
+
+    def __init__(self, continuations: Optional[Dict[int, Sequence[int]]]
+                 = None):
+        self.continuations: Dict[int, Sequence[int]] = dict(
+            continuations or {})
+
+    def admit(self, group) -> None:
+        pass
+
+    def propose(self, active, target_lens, k, rng):
+        out = {}
+        for slot, req in active:
+            cont = self.continuations.get(req.rid, ())
+            done = len(req.generated)
+            out[slot] = ([int(t) for t in cont[done:done + k]], None)
+        return out
+
+    def rollback(self, slot: int, length: int) -> None:
+        pass
+
+    def release(self, slot: int) -> None:
+        pass

@@ -1,0 +1,427 @@
+"""Speculative decoding: acceptance-rule units, paged-pool rollback
+(truncate) invariants, multi-position prefill_append logits, and engine
+equivalence — greedy speculative output must be bit-identical to plain
+greedy decode (the drafter only changes speed, never tokens), and
+rollback must leave the page pool consistent under a randomized sweep."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.api import model_fns
+from repro.serving import (DraftModel, EngineConfig, InferenceEngine,
+                           OracleDraft, accept_draft)
+from repro.serving.kv_slots import PagedSlotPool
+from repro.serving.speculative import transform_probs
+from tests.test_serving import naive_greedy
+
+PS = 8     # page size for every paged case here
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              bcr_keep_frac=0.25, bcr_block=(16, 16))
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+def _draft(cfg, seed=1):
+    """A real (random-weight) drafter config sharing the target's vocab:
+    acceptance will be near zero, which is exactly what the equivalence
+    tests want — tokens must match the target regardless."""
+    dcfg = dataclasses.replace(cfg, num_layers=1, d_model=32, num_heads=2,
+                               num_kv_heads=2, head_dim=16, d_ff=64,
+                               bcr_keep_frac=0.0)
+    return dcfg, model_fns(dcfg).init_params(jax.random.PRNGKey(seed))
+
+
+def _prompts(cfg, lens=(5, 16, 9, 12), seed=42):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=p).astype(np.int32)
+            for p in lens]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rules
+# ---------------------------------------------------------------------------
+
+
+class TestAcceptance:
+    def _rows(self, argmaxes, v=16):
+        """Logit rows whose argmax is pinned per row."""
+        rows = np.zeros((len(argmaxes), v), np.float32)
+        for j, a in enumerate(argmaxes):
+            rows[j, a] = 10.0
+        return rows
+
+    def test_greedy_full_accept_emits_bonus(self):
+        rows = self._rows([3, 5, 7])
+        a, nxt = accept_draft(rows, [3, 5], None, 0.0, 0,
+                              np.random.default_rng(0))
+        assert (a, nxt) == (2, 7)            # both drafts + the bonus row
+
+    def test_greedy_first_reject_emits_correction(self):
+        rows = self._rows([3, 5, 7])
+        a, nxt = accept_draft(rows, [4, 5], None, 0.0, 0,
+                              np.random.default_rng(0))
+        assert (a, nxt) == (0, 3)            # correction from row 0
+
+    def test_greedy_mid_reject(self):
+        rows = self._rows([3, 5, 7])
+        a, nxt = accept_draft(rows, [3, 6], None, 0.0, 0,
+                              np.random.default_rng(0))
+        assert (a, nxt) == (1, 5)
+
+    def test_greedy_no_proposals_degenerates_to_decode(self):
+        rows = self._rows([9])
+        a, nxt = accept_draft(rows, [], None, 0.0, 0,
+                              np.random.default_rng(0))
+        assert (a, nxt) == (0, 9)
+
+    def test_sampled_certain_target_always_accepts_match(self):
+        # target puts ~all mass on the proposal → acceptance prob ~1
+        rows = self._rows([3, 5])
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            a, nxt = accept_draft(rows, [3], None, 0.7, 0, rng)
+            assert a == 1 and nxt == 5
+
+    def test_sampled_rejection_never_resamples_proposal(self):
+        # deterministic proposal d: the residual zeroes p(d), so a
+        # rejection can never re-emit d
+        v = 8
+        rows = np.zeros((2, v), np.float32)   # uniform target
+        rng = np.random.default_rng(1)
+        outs = set()
+        for _ in range(200):
+            a, nxt = accept_draft(rows, [2], None, 1.0, 0, rng)
+            if a == 0:
+                outs.add(nxt)
+        assert outs and 2 not in outs
+
+    def test_transform_probs_matches_engine_sampler_support(self):
+        # top-k filtering keeps exactly the k largest logits in support,
+        # mirroring engine.sample_tokens
+        logits = np.asarray([0.1, 2.0, -1.0, 3.0, 0.5], np.float32)
+        p = transform_probs(logits, 0.8, 2)
+        assert (p > 0).sum() == 2
+        assert p[3] > p[1] > 0
+
+    def test_sampled_qrows_ratio(self):
+        # q concentrated exactly where p is → always accept
+        v = 4
+        rows = np.log(np.asarray([[0.7, 0.1, 0.1, 0.1]] * 2, np.float64))
+        q = np.zeros((1, v))
+        q[0, 0] = 1.0
+        rng = np.random.default_rng(0)
+        accepts = sum(accept_draft(rows, [0], q, 1.0, 0, rng)[0]
+                      for _ in range(50))
+        assert accepts >= 30                 # min(1, .7/1) ≈ 70% accept
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool rollback (truncate)
+# ---------------------------------------------------------------------------
+
+
+class TestTruncate:
+    def _pool(self, fns, n_slots=2, capacity=64, n_pages=None):
+        return PagedSlotPool(fns.init_cache, n_slots, capacity,
+                             page_size=PS, n_pages=n_pages)
+
+    def test_truncate_frees_tail_pages_back_to_reservation(self, llama):
+        cfg, fns, params = llama
+        pool = self._pool(fns)
+        assert pool.reserve(0, 40)                   # 5-page budget
+        pool.ensure(0, 10)
+        pool.lens[0] = 10
+        free_before = pool.free_pages()
+        pool.ensure(0, 10 + 4)                       # verify writes 4 drafts
+        assert pool._n_alloc[0] == 2
+        pool.truncate(0, 11)                         # 1 committed token
+        assert pool.lens[0] == 11
+        assert pool._n_alloc[0] == 2                 # page of pos 10 kept
+        pool.truncate(0, 9)                          # rewind across boundary
+        assert pool._n_alloc[0] == 2                 # pos 8 lives in page 2
+        pool.truncate(0, 8)
+        assert pool._n_alloc[0] == 1                 # page 2 freed
+        # freed pages return to the reservation, not the open pool
+        assert pool.free_pages() == free_before
+        assert pool._reserved[0] == 4
+        pool.release(0)
+        assert pool.free_pages() == pool.n_pages - 1
+
+    def test_truncate_keeps_partial_frontier_page(self, llama):
+        cfg, fns, params = llama
+        pool = self._pool(fns)
+        assert pool.reserve(0, 24)
+        pool.ensure(0, 20)
+        pool.lens[0] = 20
+        pool.truncate(0, 17)                         # mid third page
+        assert pool._n_alloc[0] == 3
+        assert int(pool.table[0, 2]) != 0
+
+    def test_truncate_never_touches_shared_pages(self, llama):
+        """The refcount-safety claim: rollback only ever frees pages past
+        the write frontier, which are never registered — a truncate that
+        would hit a shared page trips the assert instead of corrupting a
+        co-owner."""
+        cfg, fns, params = llama
+        pool = self._pool(fns)
+        prompt = np.arange(16, dtype=np.int32)
+        assert pool.admit_prefix(0, prompt, 24) == 0
+        pool.ensure(0, 16)
+        pool.lens[0] = 16
+        pool.register_prefix(0, prompt)
+        pool.ensure(0, 20)
+        pool.truncate(0, 17)                         # fine: private tail
+        with pytest.raises(AssertionError):
+            pool.truncate(0, 8)                      # would free page 2:
+        pool.release(0)                              # registered!
+
+    def test_randomized_ensure_truncate_sweep(self, llama):
+        """200 steps of admit/ensure/truncate/release with the free_pages
+        ground truth recomputed every step — rollback must never leak or
+        double-free a page nor corrupt the reservation counters."""
+        cfg, fns, params = llama
+        pool = self._pool(fns, n_slots=3, capacity=64, n_pages=16)
+        rng = np.random.default_rng(0)
+        held = {}
+        for step in range(200):
+            truth = (len(pool._free) + len(pool._lru)
+                     - int(pool._reserved.sum()))
+            assert pool.free_pages() == truth >= 0
+            assert pool._reserved_total == int(pool._reserved.sum())
+            slot = int(rng.integers(0, 3))
+            if slot in held:
+                lo, hi = held[slot], int(pool.lens[slot])
+                r = rng.random()
+                if r < 0.35 and hi + 5 <= 56:
+                    k = int(rng.integers(1, 5))      # a verify dispatch
+                    pool.ensure(slot, hi + k)
+                    c = int(rng.integers(1, k + 1))  # commit 1..k
+                    pool.truncate(slot, hi + c)
+                elif r < 0.55:
+                    pool.truncate(slot, int(rng.integers(lo, hi + 1)))
+                else:
+                    pool.release(slot)
+                    del held[slot]
+            else:
+                plen = int(rng.integers(4, 20))
+                if pool.reserve(slot, plen + 12):
+                    pool.ensure(slot, plen)
+                    pool.lens[slot] = plen
+                    held[slot] = plen
+        for slot in list(held):
+            pool.release(slot)
+        assert pool.free_pages() == pool.n_pages - 1
+        assert (pool._refcount[1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Multi-position verify logits
+# ---------------------------------------------------------------------------
+
+
+class TestAllLogits:
+    def test_prefill_append_all_logits_matches_forward(self):
+        """all_logits rows over a cold paged prefill (prefix_len 0) must
+        equal the full-sequence forward logits position by position —
+        row j is the distribution for the token after position j. A
+        float32 cache isolates the comparison from the bf16 KV round-trip
+        the paged layout shares with decode."""
+        from repro.models.causal_lm import forward
+        cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                                  cache_dtype="float32")
+        fns = model_fns(cfg)
+        params = fns.init_params(jax.random.PRNGKey(0))
+        pool = PagedSlotPool(fns.init_cache, 1, 32, page_size=PS)
+        toks = _prompts(cfg, lens=(13,))[0]
+        s = len(toks)
+        assert pool.reserve(0, s)
+        pool.ensure(0, s)
+        bt = jnp.asarray(pool.table[:, :pool.pages_needed(s)])
+        logits, _ = fns.prefill_append(
+            params, {"tokens": jnp.asarray(toks)[None],
+                     "prefix_len": jnp.asarray([0], jnp.int32),
+                     "length": jnp.asarray([s], jnp.int32),
+                     "block_tables": bt, "all_logits": True}, pool.cache)
+        oracle = forward(cfg, params, jnp.asarray(toks)[None])
+        assert logits.shape == (1, s, cfg.vocab_size)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(oracle),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence: speculative greedy == plain greedy == naive
+# ---------------------------------------------------------------------------
+
+
+class TestSpecEngine:
+    GEN = 8
+
+    def _engine(self, cfg, params, spec_k=0, drafter=None, dcfg=None,
+                dparams=None, **kw):
+        ec = EngineConfig(n_slots=2, capacity=64, page_size=PS,
+                          spec_k=spec_k, draft_cfg=dcfg, **kw)
+        return InferenceEngine(cfg, params, ec, draft_params=dparams,
+                               drafter=drafter)
+
+    def test_spec_matches_naive_dense(self, llama):
+        cfg, fns, params = llama
+        prompts = _prompts(cfg)
+        ref = [naive_greedy(fns, params, p, self.GEN) for p in prompts]
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, params, spec_k=2, dcfg=dcfg,
+                           dparams=dparams)
+        got = eng.generate(prompts, max_new_tokens=self.GEN)
+        assert got == ref
+        assert eng.stats["spec_steps"] > 0
+
+    def test_spec_matches_naive_packed(self, llama):
+        from repro.launch.serve import pack_params
+        cfg, fns, params = llama
+        packed = pack_params(cfg, params)
+        prompts = _prompts(cfg)
+        ref = [naive_greedy(fns, packed, p, self.GEN) for p in prompts]
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, packed, spec_k=3, dcfg=dcfg,
+                           dparams=dparams)
+        got = eng.generate(prompts, max_new_tokens=self.GEN)
+        assert got == ref
+
+    def test_oracle_drafter_full_acceptance_fewer_steps(self, llama):
+        """The high-acceptance path: an oracle replaying the plain run's
+        tokens is always accepted, so the engine commits spec_k+1 tokens
+        per verify dispatch and finishes in far fewer steps — with
+        bit-identical output."""
+        cfg, fns, params = llama
+        prompts = _prompts(cfg)
+        plain = self._engine(cfg, params)
+        ref = plain.generate(prompts, max_new_tokens=self.GEN)
+        oracle = OracleDraft()
+        eng = self._engine(cfg, params, spec_k=3, drafter=oracle)
+        rids = [eng.submit(p, max_new_tokens=self.GEN) for p in prompts]
+        oracle.continuations.update(dict(zip(rids, ref)))
+        done = {r.rid: r for r in eng.run()}
+        assert [done[r].generated for r in rids] == ref
+        st = eng.stats
+        assert st["draft_accepted"] == st["draft_proposed"] > 0
+        assert st["decode_steps"] < plain.stats["decode_steps"]
+        assert st["accepted_hist"][-1] > 0
+
+    def test_spec_with_prefix_cache_matches_plain(self, llama):
+        """Speculation over adopted shared pages: rollback must CoW/keep
+        the shared prefix intact while rejected drafts rewind."""
+        cfg, fns, params = llama
+        rng = np.random.default_rng(5)
+        system = np.arange(100, 119, dtype=np.int32)     # partial page
+        prompts = [np.concatenate([system, rng.integers(
+            0, cfg.vocab_size, size=l).astype(np.int32)])
+            for l in (5, 9, 2, 7)]
+        ref = self._engine(cfg, params).generate(prompts,
+                                                 max_new_tokens=self.GEN)
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, params, spec_k=2, dcfg=dcfg,
+                           dparams=dparams, prefix_cache=True)
+        got = eng.generate(prompts, max_new_tokens=self.GEN)
+        assert got == ref
+        assert eng.stats["prefix_hit_tokens"] > 0
+
+    def test_eos_mid_draft_stops_commit(self, llama):
+        """An accepted draft hitting eos must cut the commit exactly
+        where plain decode would stop, discarding the rest of the
+        accepted block."""
+        cfg, fns, params = llama
+        prompts = _prompts(cfg)[:2]
+        plain = self._engine(cfg, params)
+        ref = plain.generate(prompts, max_new_tokens=self.GEN)
+        eos = ref[0][2]
+        ref_eos = self._engine(cfg, params).generate(
+            prompts, max_new_tokens=self.GEN, eos_id=eos)
+        oracle = OracleDraft()
+        eng = self._engine(cfg, params, spec_k=3, drafter=oracle)
+        rids = [eng.submit(p, max_new_tokens=self.GEN, eos_id=eos)
+                for p in prompts]
+        oracle.continuations.update(dict(zip(rids, ref)))
+        done = {r.rid: r for r in eng.run()}
+        assert [done[r].generated for r in rids] == ref_eos
+
+    def test_sampling_runs_and_respects_budget(self, llama):
+        cfg, fns, params = llama
+        prompts = _prompts(cfg)
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, params, spec_k=2, dcfg=dcfg,
+                           dparams=dparams)
+        got = eng.generate(prompts, max_new_tokens=self.GEN,
+                           temperature=0.9, top_k=8)
+        assert [len(g) for g in got] == [self.GEN] * len(prompts)
+        assert all(0 <= t < cfg.vocab_size for g in got for t in g)
+
+    def test_warmup_compiles_both_drafter_variants(self, llama):
+        """Mixed greedy/sampled traffic after warmup must not jit the
+        drafter mid-window: warmup compiles both static decode variants
+        (greedy argmax + full rows), so serving at any temperature keeps
+        the compile caches unchanged."""
+        cfg, fns, params = llama
+        prompts = _prompts(cfg)[:2]
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, params, spec_k=2, dcfg=dcfg,
+                           dparams=dparams)
+        eng.warmup([len(p) for p in prompts])
+        before = (eng.drafter._decode._cache_size(),
+                  eng._verify._cache_size())
+        eng.generate(prompts, max_new_tokens=4)
+        eng.generate(prompts, max_new_tokens=4, temperature=0.8, top_k=4)
+        assert (eng.drafter._decode._cache_size(),
+                eng._verify._cache_size()) == before
+
+    def test_submit_headroom_enforced(self, llama):
+        cfg, fns, params = llama
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, params, spec_k=4, dcfg=dcfg,
+                           dparams=dparams)
+        with pytest.raises(ValueError, match="spec_k"):
+            eng.submit(np.zeros(40, np.int32), max_new_tokens=21)
+
+    def test_spec_requires_paged_pool(self, llama):
+        cfg, fns, params = llama
+        dcfg, dparams = _draft(cfg)
+        with pytest.raises(ValueError, match="paged"):
+            InferenceEngine(cfg, params,
+                            EngineConfig(n_slots=2, capacity=64,
+                                         spec_k=2, draft_cfg=dcfg),
+                            draft_params=dparams)
+
+    def test_pool_consistent_after_staggered_spec_traffic(self, llama):
+        """Rollback every step over an oversubscribed pool with staggered
+        admissions: after the drain every page is back, no reservation
+        leaks, refcounts are clean — and the tokens still match plain."""
+        cfg, fns, params = llama
+        prompts = _prompts(cfg, lens=(5, 16, 9, 12, 7, 11, 4, 14), seed=9)
+        ref = self._engine(cfg, params, kv_pages=24).generate(
+            prompts, max_new_tokens=self.GEN)
+        dcfg, dparams = _draft(cfg)
+        eng = self._engine(cfg, params, spec_k=2, dcfg=dcfg,
+                           dparams=dparams, kv_pages=24,
+                           prefix_cache=True)
+        rids, done = [], {}
+        for i, p in enumerate(prompts):
+            rids.append(eng.submit(p, max_new_tokens=self.GEN))
+            for _ in range(2):                     # staggered arrivals
+                for r in eng.step():
+                    done[r.rid] = r
+        for r in eng.run():
+            done[r.rid] = r
+        assert [done[r].generated for r in rids] == ref
+        pool = eng.pool
+        assert len(pool._free) + len(pool._lru) == pool.n_pages - 1
+        assert pool._reserved_total == int(pool._reserved.sum()) == 0
+        assert (pool._n_alloc == 0).all()
+        assert (pool._refcount[1:] == 0).all() or pool._lru
