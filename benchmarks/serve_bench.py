@@ -25,6 +25,7 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
@@ -308,6 +309,201 @@ def bench_speculative(args):
     return row
 
 
+def _divergence_rate(ref, alt):
+    """Greedy-divergence rate between two sets of token sequences: once a
+    sequence diverges, EVERY token from the first mismatch counts as
+    diverged (a changed token reshapes the whole continuation, so
+    per-position agreement past it would flatter the metric)."""
+    div = tot = 0
+    for a, b in zip(ref, alt):
+        n = max(len(a), len(b))
+        tot += n
+        first = next((i for i in range(min(len(a), len(b)))
+                      if a[i] != b[i]), None)
+        if first is None and len(a) != len(b):
+            first = min(len(a), len(b))
+        if first is not None:
+            div += n - first
+    return div / max(tot, 1)
+
+
+def _forced_argmax(cfg, params, prompts, seqs, capacity):
+    """Greedy argmax at every decode position, teacher-forced on ``seqs``
+    (the fp engine's trajectory): prefill the prompt, then feed the fp
+    tokens one at a time and record what THIS model would have picked.
+    Because the context is pinned to the fp trajectory, a flip at step t
+    does not contaminate step t+1 — the per-position flip rate measures
+    quantization's effect on the greedy decision itself, not the
+    avalanche a single early flip sets off in free-running decode."""
+    from repro.serving.kv_slots import seat_prefill
+    fns = model_fns(cfg)
+    prefill = jax.jit(fns.prefill)
+    step = jax.jit(fns.decode_step)
+    out = []
+    for prompt, gen in zip(prompts, seqs):
+        if not len(gen):
+            out.append([])
+            continue
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+        logits, pc = prefill(params, {"tokens": toks})
+        cache = seat_prefill(fns.init_cache, pc, 1, capacity)
+        picks = [int(jnp.argmax(logits[0, -1]))]
+        clen = len(prompt)
+        for t in gen[:-1]:
+            logits, cache = step(
+                params, {"tokens": jnp.asarray([[t]], jnp.int32),
+                         "cache_len": jnp.asarray([clen], jnp.int32)},
+                cache)
+            clen += 1
+            picks.append(int(jnp.argmax(logits[0, -1])))
+        out.append(picks)
+    return out
+
+
+def _flip_rate(a_seqs, b_seqs):
+    flips = tot = 0
+    for a, b in zip(a_seqs, b_seqs):
+        tot += len(a)
+        flips += sum(x != y for x, y in zip(a, b))
+    return flips / max(tot, 1)
+
+
+def bench_quantized(args):
+    """Quantized-serving payoff at batch 8: the fp paged engine vs the
+    same engine with int8 KV pages (+ per-row scales, dequantized in the
+    kernels), and — when a packed keep is benched — fp vs int8 packed BCR
+    weights. Reports per-step KV bytes, tok/s, the resident-tokens-per-
+    page-budget ratio (straight from the two pools' actual bytes per KV
+    row) and quality metrics vs the fp run: the free-running greedy
+    divergence rate (first mismatch condemns the tail — pessimistic on a
+    random-weight smoke model whose near-tied logits avalanche) and
+    teacher-forced per-decision flip rates vs the fp32-cache oracle for
+    both int8 and the shipped bf16 baseline; CI gates the EXCESS rate
+    (int8 − bf16)."""
+    cfg = scaled_cfg(args, keep=0.0)
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    batch = max(args.slots)
+    prompts, gens = make_requests(cfg, args.requests, args.prompt_lens,
+                                  args.gen, seed=5)
+
+    def run(params_, kv_dtype=""):
+        """Best-of-N submit+drain passes (same de-noising rationale as the
+        speculative bench); token sequences must repeat exactly."""
+        eng = InferenceEngine(cfg, params_, EngineConfig(
+            n_slots=batch, capacity=args.capacity,
+            page_size=args.page_size, kv_dtype=kv_dtype))
+        eng.warmup([len(p) for p in prompts])
+        best, toks = None, None
+        for _ in range(max(1, args.spec_iters)):
+            eng.reset_stats()
+            t0 = time.perf_counter()
+            rids = [eng.submit(p, max_new_tokens=g)
+                    for p, g in zip(prompts, gens)]
+            done = {r.rid: r for r in eng.run()}
+            dt = time.perf_counter() - t0
+            out = [done[r].generated for r in rids]
+            assert toks is None or out == toks, \
+                "repeated passes diverged on identical greedy input"
+            toks = out
+            steps = max(eng.stats["decode_steps"], 1)
+            row = {"tok_s": sum(len(t) for t in out) / dt,
+                   "elapsed_s": dt,
+                   "decode_steps": eng.stats["decode_steps"],
+                   "kv_bytes_per_step": (eng.stats["kv_bytes_read"]
+                                         / steps),
+                   "kv_bytes_per_step_live": (
+                       eng.stats["kv_bytes_read_live"] / steps),
+                   "kv_row_bytes": eng._kv_row_bytes}
+            if best is None or row["tok_s"] > best["tok_s"]:
+                best = row
+        return best, toks
+
+    fp, fp_toks = run(params)
+    q, q_toks = run(params, kv_dtype="int8")
+    row = {
+        "section": "quantized", "arch": args.arch, "batch": batch,
+        "capacity": args.capacity, "page_size": args.page_size,
+        "d_model": cfg.d_model,
+        "fp": fp, "int8_kv": q,
+        "kv_bytes_ratio": (q["kv_bytes_per_step"]
+                           / fp["kv_bytes_per_step"]),
+        "quant_vs_fp": q["tok_s"] / fp["tok_s"],
+        # tokens a fixed page budget keeps resident, int8 vs fp — from
+        # the pools' ACTUAL per-position bytes (codes + scale leaves)
+        "resident_tokens_ratio": fp["kv_row_bytes"] / q["kv_row_bytes"],
+        "divergence_rate": _divergence_rate(fp_toks, q_toks),
+    }
+    # teacher-forced flip rates: every cache format replays the same fp
+    # greedy trajectory so a single early flip doesn't count every
+    # subsequent token, and each is scored against the fp32-cache oracle.
+    # The bf16 baseline cache flips near-tied argmaxes on its own (the
+    # smoke model's random logits sit near ties far more often than a
+    # trained model's), so the gated number is the EXCESS rate — flips
+    # int8 adds beyond what the shipped bf16 cache already costs. Probe
+    # trajectories run to the capacity limit: the timed CI workload
+    # yields only ~130 greedy decisions, a coin toss for a 2% gate.
+    probe_gen = max(args.gen, args.capacity - max(len(p) for p in prompts))
+    eng = InferenceEngine(cfg, params, EngineConfig(
+        n_slots=batch, capacity=args.capacity, page_size=args.page_size))
+    probe = eng.generate(prompts, max_new_tokens=probe_gen)
+    oracle = _forced_argmax(dataclasses.replace(cfg, cache_dtype="float32"),
+                            params, prompts, probe, args.capacity)
+    base_picks = _forced_argmax(cfg, params, prompts, probe, args.capacity)
+    q_picks = _forced_argmax(dataclasses.replace(cfg, kv_dtype="int8"),
+                             params, prompts, probe, args.capacity)
+    row["forced_flip_rate"] = _flip_rate(oracle, q_picks)
+    row["baseline_flip_rate"] = _flip_rate(oracle, base_picks)
+    row["excess_flip_rate"] = max(
+        0.0, row["forced_flip_rate"] - row["baseline_flip_rate"])
+    row["forced_flip_tokens"] = sum(len(p) for p in probe)
+    print(f"quantized batch={batch}: int8 KV {q['tok_s']:.1f} tok/s vs fp "
+          f"{fp['tok_s']:.1f} tok/s → {row['quant_vs_fp']:.2f}x; KV "
+          f"bytes/step {q['kv_bytes_per_step']/1e3:.0f}K vs "
+          f"{fp['kv_bytes_per_step']/1e3:.0f}K "
+          f"({row['kv_bytes_ratio']:.3f}x); resident tokens "
+          f"{row['resident_tokens_ratio']:.2f}x per page budget; greedy "
+          f"divergence {row['divergence_rate']:.4f} free-running; "
+          f"teacher-forced flips vs fp32 oracle: int8 "
+          f"{row['forced_flip_rate']:.4f}, bf16 baseline "
+          f"{row['baseline_flip_rate']:.4f} → excess "
+          f"{row['excess_flip_rate']:.4f} "
+          f"({row['forced_flip_tokens']} decisions)")
+
+    keep = max(args.keeps)
+    if keep > 0:
+        # int8 packed BCR weights vs fp packed, same workload (KV fp both
+        # sides — isolates the weight-format lever)
+        pcfg = scaled_cfg(args, keep)
+        pparams = model_fns(pcfg).init_params(jax.random.PRNGKey(0))
+        packed_fp = pack_params(pcfg, pparams)
+        packed_q = pack_params(pcfg, pparams, weight_dtype="int8")
+        from repro.launch.serve import packed_fraction
+        wfp, wfp_toks = run(packed_fp)
+        wq, wq_toks = run(packed_q)
+        row.update(
+            keep_frac=keep,
+            weight_fp=wfp, weight_int8=wq,
+            weight_int8_vs_fp=wq["tok_s"] / wfp["tok_s"],
+            weight_bytes_ratio=(packed_fraction(pparams, packed_q)
+                                / packed_fraction(pparams, packed_fp)),
+            weight_divergence_rate=_divergence_rate(wfp_toks, wq_toks),
+            # same shared probe trajectories: teacher forcing only needs a
+            # common context, not one generated by either packed model
+            weight_forced_flip_rate=_flip_rate(
+                _forced_argmax(pcfg, packed_fp, prompts, probe,
+                               args.capacity),
+                _forced_argmax(pcfg, packed_q, prompts, probe,
+                               args.capacity)))
+        print(f"  int8 weights keep={keep}: {wq['tok_s']:.1f} tok/s vs fp "
+              f"packed {wfp['tok_s']:.1f} → "
+              f"{row['weight_int8_vs_fp']:.2f}x; packed bytes "
+              f"{row['weight_bytes_ratio']:.3f}x; greedy divergence "
+              f"{row['weight_divergence_rate']:.4f} free-running, "
+              f"{row['weight_forced_flip_rate']:.4f} teacher-forced")
+    return row
+
+
 def bench_static(cfg, params, prompts, gens, batch, capacity):
     """Legacy one-batch-at-a-time loop at equal useful load: fixed batches
     in arrival order, uniform prompt padding, every batch decoded to its
@@ -395,6 +591,21 @@ def main():
                     help="exit 1 if oracle-drafter speculative tok/s ÷ "
                          "plain paged decode tok/s at the largest --slots "
                          "falls below this")
+    # quantized-serving section: fp paged engine vs int8 KV pages (and,
+    # when --keeps has a packed entry, fp vs int8 packed BCR weights)
+    ap.add_argument("--quantized", action="store_true",
+                    help="also run the int8-KV / int8-weight bench")
+    ap.add_argument("--max-quant-kv-ratio", type=float, default=0.0,
+                    help="exit 1 if int8 KV bytes/step ÷ fp paged bytes/"
+                         "step exceeds this (0 → no gate)")
+    ap.add_argument("--max-quant-divergence", type=float, default=-1.0,
+                    help="exit 1 if int8 KV flips this much more of the "
+                         "teacher-forced greedy decisions (vs the fp32 "
+                         "cache oracle) than the bf16 baseline cache "
+                         "does (< 0 → no gate)")
+    ap.add_argument("--min-quant-vs-fp", type=float, default=0.0,
+                    help="exit 1 if int8-KV tok/s ÷ fp paged tok/s falls "
+                         "below this (0 → no gate)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -449,6 +660,11 @@ def main():
         spec_row = bench_speculative(args)
         results.append(spec_row)
 
+    quant_row = None
+    if args.quantized:
+        quant_row = bench_quantized(args)
+        results.append(quant_row)
+
     payload = {"benchmark": "serve", "packed_vs_dense": ratios,
                "results": results}
     if long_row is not None:
@@ -460,9 +676,45 @@ def main():
     if spec_row is not None:
         payload["spec_vs_plain"] = spec_row["spec_vs_plain"]
         payload["speculative"] = spec_row
+    if quant_row is not None:
+        payload["quant_kv_bytes_ratio"] = quant_row["kv_bytes_ratio"]
+        payload["quant_divergence_rate"] = quant_row["excess_flip_rate"]
+        payload["quant_vs_fp"] = quant_row["quant_vs_fp"]
+        payload["quantized"] = quant_row
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
+
+    if (args.max_quant_kv_ratio > 0 or args.max_quant_divergence >= 0
+            or args.min_quant_vs_fp > 0):
+        if quant_row is None:
+            raise SystemExit("quantized gates need --quantized")
+        if (args.max_quant_kv_ratio > 0
+                and quant_row["kv_bytes_ratio"] > args.max_quant_kv_ratio):
+            raise SystemExit(
+                f"PERF REGRESSION: int8 KV reads "
+                f"{quant_row['kv_bytes_ratio']:.3f}x fp paged bytes/step "
+                f"at batch {quant_row['batch']} "
+                f"(> {args.max_quant_kv_ratio}x allowed)")
+        if (args.max_quant_divergence >= 0
+                and quant_row["excess_flip_rate"]
+                > args.max_quant_divergence):
+            raise SystemExit(
+                f"QUALITY REGRESSION: int8 KV flips "
+                f"{quant_row['excess_flip_rate']:.4f} more greedy "
+                f"decisions than the bf16 baseline cache, teacher-forced "
+                f"vs the fp32 oracle (> {args.max_quant_divergence} "
+                f"allowed; int8 {quant_row['forced_flip_rate']:.4f}, "
+                f"bf16 {quant_row['baseline_flip_rate']:.4f}, "
+                f"free-running divergence "
+                f"{quant_row['divergence_rate']:.4f})")
+        if (args.min_quant_vs_fp > 0
+                and quant_row["quant_vs_fp"] < args.min_quant_vs_fp):
+            raise SystemExit(
+                f"PERF REGRESSION: int8-KV engine "
+                f"{quant_row['quant_vs_fp']:.2f}x fp paged tok/s at batch "
+                f"{quant_row['batch']} (< {args.min_quant_vs_fp}x "
+                f"required)")
 
     if args.min_spec_vs_plain > 0:
         if spec_row is None:

@@ -61,6 +61,10 @@ class ModelConfig:
     # block-paged decode (prefill then behaves like flash); any other
     # value with a paged cache uses the pure-JAX gather ref
     attn_impl: str = "flash"
+    # "" keeps cache_dtype; "int8" stores attention KV as symmetric int8
+    # codes plus per-row-per-head fp32 scale leaves (k_scale/v_scale),
+    # dequantized inside the paged Pallas kernels / attention refs
+    kv_dtype: str = ""
     q_chunk: int = 512
     kv_chunk: int = 1024
     scan_layers: bool = True

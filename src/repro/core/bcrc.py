@@ -207,15 +207,24 @@ def tbcrc_pack(w: jax.Array, spec: BCRSpec) -> TBCRC:
 
 
 def tbcrc_unpack(packed: TBCRC) -> jax.Array:
-    """Dense reconstruction (equals bcr_project(w, spec) for packed w)."""
-    nb_r, nb_c, r_keep, c_keep = packed.vals.shape
+    """Dense reconstruction (equals bcr_project(w, spec) for packed w).
+
+    int8-quantized packs (``plan.block_scales`` set) reconstruct the
+    DEQUANTIZED fp32 weight, so the dense oracle measures end-to-end
+    quantization semantics, not raw codes."""
+    vals = packed.vals
+    if packed.plan is not None \
+            and getattr(packed.plan, "block_scales", None) is not None:
+        vals = (vals.astype(jnp.float32)
+                * packed.plan.block_scales[..., None, None])
+    nb_r, nb_c, r_keep, c_keep = vals.shape
     br, bc = packed.block_shape
-    blocks = jnp.zeros((nb_r, nb_c, br, bc), packed.vals.dtype)
+    blocks = jnp.zeros((nb_r, nb_c, br, bc), vals.dtype)
     # scatter cols then rows
-    rows = jnp.zeros((nb_r, nb_c, r_keep, bc), packed.vals.dtype)
+    rows = jnp.zeros((nb_r, nb_c, r_keep, bc), vals.dtype)
     rows = jax.vmap(
         jax.vmap(lambda r, ci, v: r.at[:, ci].set(v))
-    )(rows, packed.col_idx, packed.vals)
+    )(rows, packed.col_idx, vals)
     blocks = jax.vmap(
         jax.vmap(lambda b, ri, v: b.at[ri, :].set(v))
     )(blocks, packed.row_idx, rows)

@@ -92,6 +92,7 @@ def genetic_search(
 def plan_cost_model(
     m: int, k: int, n: int, block_shape: Tuple[int, int],
     r_keep: int, c_keep: int, *, weight_bytes_per_el: int = 2,
+    weight_scale_bytes: int = 0,
 ) -> Callable[[Genome], float]:
     """Fitness for tuning a pack-time execution plan of an already-packed
     TBCRC weight (block shape and kept counts are fixed by packing; the
@@ -124,15 +125,17 @@ def plan_cost_model(
             return float("inf")
         m_steps = -(-m // mt)
         # VMEM per grid step: x block + per-member tile/indices/accumulator
+        # (+ the per-block dequant scale for int8 packs)
         vmem = mt * bc * 2 + grp * (
             r_keep * c_keep * weight_bytes_per_el
-            + (r_keep + c_keep) * 4 + mt * br * 4)
+            + (r_keep + c_keep) * 4 + weight_scale_bytes + mt * br * 4)
         if planes:
             vmem += grp * (bc * c_keep + r_keep * br)
         if vmem > VMEM_BYTES * 0.8:
             return float("inf")
         w_bytes = grp * nb_r * nb_c * (
-            r_keep * c_keep * weight_bytes_per_el + (r_keep + c_keep) * 4)
+            r_keep * c_keep * weight_bytes_per_el
+            + (r_keep + c_keep) * 4 + weight_scale_bytes)
         if planes:
             w_bytes += grp * nb_r * nb_c * (bc * c_keep + r_keep * br)
         # x is re-read once per output block row but SHARED across the

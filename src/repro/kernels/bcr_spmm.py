@@ -58,15 +58,23 @@ from repro.core.bcrc import TBCRC
 _ORDERS = ("mij", "imj")
 
 
-def _block_update(x, vals, gather, scatter):
+def _block_update(x, vals, gather, scatter, scale=None):
     """gather → core tile matmul → scatter; returns the fp32 (M_t, br)
-    contribution of one (i, j) block."""
+    contribution of one (i, j) block.
+
+    ``scale``: per-block dequant scalar for int8 ``vals`` — folded into
+    the fp32 partial BEFORE the scatter (exact, the scatter one-hot is
+    0/1), so the epilogue costs one multiply per partial element. int8
+    codes (≤127) cast to the activation dtype losslessly (bf16 holds
+    integers to 256)."""
     xg = jnp.dot(x, gather, preferred_element_type=jnp.float32)
     part = jax.lax.dot_general(
-        xg.astype(x.dtype), vals,
+        xg.astype(x.dtype), vals.astype(x.dtype),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
+    if scale is not None:
+        part = part * scale
     return jnp.dot(part, scatter, preferred_element_type=jnp.float32)
 
 
@@ -81,8 +89,11 @@ def _onehots(cols, rows, block_rows, block_cols, dtype):
     return gather, scatter
 
 
-def _kernel_idx(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
-                nb_c: int, block_rows: int, block_cols: int):
+def _kernel_idx(x_ref, vals_ref, row_ref, col_ref, *rest,
+                nb_c: int, block_rows: int, block_cols: int,
+                has_scale: bool):
+    scale_ref = rest[0] if has_scale else None
+    o_ref, acc_ref = rest[-2], rest[-1]
     j = pl.program_id(2)  # contraction dim is innermost in both orders
 
     @pl.when(j == 0)
@@ -92,15 +103,19 @@ def _kernel_idx(x_ref, vals_ref, row_ref, col_ref, o_ref, acc_ref, *,
     x = x_ref[...]                      # (M_t, bc)
     gather, scatter = _onehots(col_ref[0, 0, :], row_ref[0, 0, :],
                                block_rows, block_cols, x.dtype)
-    acc_ref[...] += _block_update(x, vals_ref[0, 0], gather, scatter)
+    acc_ref[...] += _block_update(
+        x, vals_ref[0, 0], gather, scatter,
+        scale_ref[0, 0] if has_scale else None)
 
     @pl.when(j == nb_c - 1)
     def _emit():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, o_ref, acc_ref, *,
-                   nb_c: int):
+def _kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, *rest,
+                   nb_c: int, has_scale: bool):
+    scale_ref = rest[0] if has_scale else None
+    o_ref, acc_ref = rest[-2], rest[-1]
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -110,7 +125,9 @@ def _kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, o_ref, acc_ref, *,
     x = x_ref[...]
     gather = gpl_ref[0, 0].astype(x.dtype)          # (bc, C_keep) int8 DMA
     scatter = spl_ref[0, 0].astype(jnp.float32)     # (R_keep, br)
-    acc_ref[...] += _block_update(x, vals_ref[0, 0], gather, scatter)
+    acc_ref[...] += _block_update(
+        x, vals_ref[0, 0], gather, scatter,
+        scale_ref[0, 0] if has_scale else None)
 
     @pl.when(j == nb_c - 1)
     def _emit():
@@ -168,29 +185,37 @@ def bcr_spmm(
     order = plan.grid_order if plan is not None else "mij"
     use_planes = plan is not None and plan.use_planes
 
+    has_scale = plan is not None and plan.block_scales is not None
+
     grid, norm, x_map, out_map = _grid_and_maps(order, m_steps, nb_r, nb_c)
     tile_i = lambda *g: (norm(*g)[1], norm(*g)[2], 0, 0)
     plane_i = lambda *g: (norm(*g)[1], norm(*g)[2], 0, 0)
+    scale_i = lambda *g: (norm(*g)[1], norm(*g)[2])
 
     if use_planes:
-        kernel = functools.partial(_kernel_planes, nb_c=nb_c)
+        kernel = functools.partial(_kernel_planes, nb_c=nb_c,
+                                   has_scale=has_scale)
         in_specs = [
             pl.BlockSpec((m_tile, bc), x_map),
             pl.BlockSpec((1, 1, r_keep, c_keep), tile_i),
             pl.BlockSpec((1, 1, bc, c_keep), plane_i),
             pl.BlockSpec((1, 1, r_keep, br), plane_i),
         ]
-        operands = (x, packed.vals, plan.gather_planes, plan.scatter_planes)
+        operands = [x, packed.vals, plan.gather_planes, plan.scatter_planes]
     else:
         kernel = functools.partial(
-            _kernel_idx, nb_c=nb_c, block_rows=br, block_cols=bc)
+            _kernel_idx, nb_c=nb_c, block_rows=br, block_cols=bc,
+            has_scale=has_scale)
         in_specs = [
             pl.BlockSpec((m_tile, bc), x_map),
             pl.BlockSpec((1, 1, r_keep, c_keep), tile_i),
             pl.BlockSpec((1, 1, r_keep), lambda *g: (norm(*g)[1], norm(*g)[2], 0)),
             pl.BlockSpec((1, 1, c_keep), lambda *g: (norm(*g)[1], norm(*g)[2], 0)),
         ]
-        operands = (x, packed.vals, packed.row_idx, packed.col_idx)
+        operands = [x, packed.vals, packed.row_idx, packed.col_idx]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, 1), scale_i))
+        operands.append(plan.block_scales)
 
     out = pl.pallas_call(
         kernel,
@@ -232,8 +257,10 @@ def _grouped_emit(o_ref, acc_ref, bias_ref, epilogue):
 
 def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, *rest,
                         nb_c: int, block_rows: int, block_cols: int,
-                        group: int, has_bias: bool, epilogue):
-    bias_ref = rest[0] if has_bias else None
+                        group: int, has_scale: bool, has_bias: bool,
+                        epilogue):
+    scale_ref = rest[0] if has_scale else None
+    bias_ref = rest[int(has_scale)] if has_bias else None
     o_ref, acc_ref = rest[-2], rest[-1]
     j = pl.program_id(2)
 
@@ -245,7 +272,9 @@ def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, *rest,
     for g in range(group):              # static unroll
         gather, scatter = _onehots(col_ref[g, 0, 0, :], row_ref[g, 0, 0, :],
                                    block_rows, block_cols, x.dtype)
-        acc_ref[g] += _block_update(x, vals_ref[g, 0, 0], gather, scatter)
+        acc_ref[g] += _block_update(
+            x, vals_ref[g, 0, 0], gather, scatter,
+            scale_ref[g, 0, 0] if has_scale else None)
 
     @pl.when(j == nb_c - 1)
     def _emit():
@@ -253,8 +282,10 @@ def _grouped_kernel_idx(x_ref, vals_ref, row_ref, col_ref, *rest,
 
 
 def _grouped_kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, *rest,
-                           nb_c: int, group: int, has_bias: bool, epilogue):
-    bias_ref = rest[0] if has_bias else None
+                           nb_c: int, group: int, has_scale: bool,
+                           has_bias: bool, epilogue):
+    scale_ref = rest[0] if has_scale else None
+    bias_ref = rest[int(has_scale)] if has_bias else None
     o_ref, acc_ref = rest[-2], rest[-1]
     j = pl.program_id(2)
 
@@ -266,7 +297,9 @@ def _grouped_kernel_planes(x_ref, vals_ref, gpl_ref, spl_ref, *rest,
     for g in range(group):
         gather = gpl_ref[g, 0, 0].astype(x.dtype)
         scatter = spl_ref[g, 0, 0].astype(jnp.float32)
-        acc_ref[g] += _block_update(x, vals_ref[g, 0, 0], gather, scatter)
+        acc_ref[g] += _block_update(
+            x, vals_ref[g, 0, 0], gather, scatter,
+            scale_ref[g, 0, 0] if has_scale else None)
 
     @pl.when(j == nb_c - 1)
     def _emit():
@@ -314,13 +347,16 @@ def bcr_spmm_grouped(
     if epilogue == "swiglu" and g_size != 2:
         raise ValueError(f"swiglu epilogue needs a gate/up pair, got "
                          f"group_size={g_size}")
+    has_scale = plan is not None and plan.block_scales is not None
+
     grid, norm, x_map, out_map3 = _grid_and_maps(order, m_steps, nb_r, nb_c)
     tile_i = lambda *g: (0, norm(*g)[1], norm(*g)[2], 0, 0)
     out_map = lambda *g: (0,) + out_map3(*g)
 
     if use_planes:
         kernel = functools.partial(_grouped_kernel_planes, nb_c=nb_c,
-                                   group=g_size, has_bias=bias is not None,
+                                   group=g_size, has_scale=has_scale,
+                                   has_bias=bias is not None,
                                    epilogue=epilogue)
         in_specs = [
             pl.BlockSpec((m_tile, bc), x_map),
@@ -332,7 +368,8 @@ def bcr_spmm_grouped(
     else:
         kernel = functools.partial(
             _grouped_kernel_idx, nb_c=nb_c, block_rows=br, block_cols=bc,
-            group=g_size, has_bias=bias is not None, epilogue=epilogue)
+            group=g_size, has_scale=has_scale, has_bias=bias is not None,
+            epilogue=epilogue)
         in_specs = [
             pl.BlockSpec((m_tile, bc), x_map),
             pl.BlockSpec((g_size, 1, 1, r_keep, c_keep), tile_i),
@@ -342,6 +379,10 @@ def bcr_spmm_grouped(
                          lambda *g: (0, norm(*g)[1], norm(*g)[2], 0)),
         ]
         operands = [x, grouped.vals, grouped.row_idx, grouped.col_idx]
+    if has_scale:
+        in_specs.append(pl.BlockSpec(
+            (g_size, 1, 1), lambda *g: (0, norm(*g)[1], norm(*g)[2])))
+        operands.append(plan.block_scales)
     if bias is not None:
         in_specs.append(pl.BlockSpec(
             (g_size, br), lambda *g: (0, norm(*g)[1])))

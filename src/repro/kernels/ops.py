@@ -128,8 +128,15 @@ def bcr_matmul_grouped(
         y2 = ref_mod.bcr_spmm_grouped_ref(x2, grouped, bias=bias,
                                           epilogue=epilogue)
     elif impl == "dense_ref":
-        # per-member dense-reconstruction oracle (W-shaped HLO on purpose)
-        members = [TBCRC(vals=grouped.vals[gi], row_idx=grouped.row_idx[gi],
+        # per-member dense-reconstruction oracle (W-shaped HLO on purpose);
+        # int8 groups dequantize up front so the oracle sees the same
+        # weights the epilogue-scaled paths compute with
+        vals = grouped.vals
+        if grouped.plan is not None \
+                and grouped.plan.block_scales is not None:
+            from repro.kernels.quant import dequantize_blocks
+            vals = dequantize_blocks(vals, grouped.plan.block_scales)
+        members = [TBCRC(vals=vals[gi], row_idx=grouped.row_idx[gi],
                          col_idx=grouped.col_idx[gi], shape=grouped.shape,
                          block_shape=grouped.block_shape)
                    for gi in range(g)]

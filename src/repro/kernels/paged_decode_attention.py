@@ -57,9 +57,14 @@ NEG_INF = -1e30
 _SUBLANE = 8
 
 
-def _kernel(bt_ref, live_ref, plen_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, page_size: int, n_cols: int,
-            scale: float, group: int):
+def _kernel(bt_ref, live_ref, plen_ref, q_ref, k_ref, v_ref, *rest,
+            page_size: int, n_cols: int, scale: float, group: int,
+            quantized: bool):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        o_ref, m_ref, l_ref, acc_ref = rest[2:]
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     p = pl.program_id(2)                  # logical page of this slot
     b = pl.program_id(0)
 
@@ -76,9 +81,18 @@ def _kernel(bt_ref, live_ref, plen_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0]                   # (S*G padded, D)
         k = k_ref[0, :, 0, :]             # (page_size, D)
         v = v_ref[0, :, 0, :]
+        if quantized:
+            # int8 pages: the matmul runs on the raw codes and the
+            # per-row-per-head scale is folded into the logits columns
+            # (one multiply per logit instead of D per K element); fp32
+            # accumulation is unchanged.
+            q = q.astype(jnp.float32)
+            k = k.astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (rows, page_size)
+        if quantized:
+            s = s * ks_ref[0].reshape(1, page_size)
         # per-row causal mask: row r is q-head r % G of suffix position
         # r // G, at absolute position plen + r // G. For decode (S=1)
         # this degenerates to the uniform ``pos < cache_len`` mask; rows
@@ -92,8 +106,16 @@ def _kernel(bt_ref, live_ref, plen_ref, q_ref, k_ref, v_ref, o_ref,
         prob = jnp.exp(s - m_new)
         l_ref[...] = l_ref[...] * alpha + prob.sum(axis=-1, keepdims=True)
         m_ref[...] = m_new
-        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            prob.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        if quantized:
+            # fold the V scale into the probability columns, then run the
+            # weighted sum on the raw int8 codes in fp32
+            pv = prob * vs_ref[0].reshape(1, page_size)
+            acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+                pv, v.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+        else:
+            acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+                prob.astype(v.dtype), v, preferred_element_type=jnp.float32)
 
     @pl.when(p == n_cols - 1)
     def _emit():
@@ -102,11 +124,18 @@ def _kernel(bt_ref, live_ref, plen_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def _paged_attention(q, k_pages, v_pages, block_tables, prefix_len,
-                     total_len, *, interpret: bool):
+                     total_len, *, k_scale=None, v_scale=None,
+                     interpret: bool):
     """Shared driver: q (B, S, H, D) query block per slot, row ``i`` at
     absolute position ``prefix_len[b] + i``, attending to table pages
     covering positions ``[0, total_len[b])`` under the per-row causal
-    mask. Returns (B, S, H, D)."""
+    mask. Returns (B, S, H, D).
+
+    When ``k_scale``/``v_scale`` are given the pools hold int8 codes and
+    the sibling ``(n_pages, page_size, Hkv)`` scale pools carry one fp32
+    scale per page row per kv head; scale tiles ride the same clamped
+    index map as their pages (so dead steps elide the scale DMA too) and
+    dequantization happens inside the kernel body."""
     b, s, h, d = q.shape
     n_pages, page_size, hkv, _ = k_pages.shape
     g = h // hkv
@@ -135,15 +164,27 @@ def _paged_attention(q, k_pages, v_pages, block_tables, prefix_len,
         col = jnp.minimum(p_, jnp.maximum(live_ref[b_] - 1, 0))
         return bt_ref[b_, col], 0, h_, 0
 
+    def s_map(b_, h_, p_, bt_ref, live_ref, plen_ref):
+        col = jnp.minimum(p_, jnp.maximum(live_ref[b_] - 1, 0))
+        return bt_ref[b_, col], 0, h_
+
+    quantized = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, 1, rp, d),
+                     lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, d), k_map),
+        pl.BlockSpec((1, page_size, 1, d), k_map),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), s_map),
+                     pl.BlockSpec((1, page_size, 1), s_map)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, hkv, n_cols),
-        in_specs=[
-            pl.BlockSpec((1, 1, rp, d),
-                         lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, d), k_map),
-            pl.BlockSpec((1, page_size, 1, d), k_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rp, d),
                                lambda b_, h_, p_, *refs: (b_, h_, 0, 0)),
         scratch_shapes=[
@@ -153,14 +194,15 @@ def _paged_attention(q, k_pages, v_pages, block_tables, prefix_len,
         ],
     )
     kernel = functools.partial(
-        _kernel, page_size=page_size, n_cols=n_cols, scale=scale, group=g)
+        _kernel, page_size=page_size, n_cols=n_cols, scale=scale, group=g,
+        quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, rp, d), q.dtype),
         interpret=interpret,
         name="paged_attention",
-    )(block_tables.astype(jnp.int32), live, plen, qg, k_pages, v_pages)
+    )(block_tables.astype(jnp.int32), live, plen, *operands)
     out = out[:, :, :rows, :].reshape(b, hkv, s, g, d)
     return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, d)
 
@@ -173,6 +215,8 @@ def paged_decode_attention(
     block_tables: jax.Array,   # (B, n_cols) int32 physical page ids
     cache_len: jax.Array,      # (B,) valid positions incl. the new token
     *,
+    k_scale: jax.Array | None = None,  # (n_pages, page_size, Hkv) fp32
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Single-step attention against each slot's live pages only.
@@ -180,12 +224,15 @@ def paged_decode_attention(
     ``block_tables`` may be narrower than the slot's full capacity — the
     caller hands over only as many columns as the longest live slot needs
     (bucketed by the engine); entries past a slot's live pages are never
-    read (index-map clamp + ``pl.when``). Returns ``(B, 1, H, D)``.
+    read (index-map clamp + ``pl.when``). With ``k_scale``/``v_scale``
+    the pools hold int8 codes dequantized in-kernel. Returns
+    ``(B, 1, H, D)``.
     """
     assert q.shape[1] == 1, "paged_decode_attention is a single-step kernel"
     lens = jnp.asarray(cache_len, jnp.int32)
     return _paged_attention(q, k_pages, v_pages, block_tables,
-                            lens - 1, lens, interpret=interpret)
+                            lens - 1, lens, k_scale=k_scale,
+                            v_scale=v_scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -197,6 +244,8 @@ def paged_prefill_append_attention(
     prefix_len: jax.Array,     # (B,) cached positions BEFORE the suffix
     total_len: jax.Array,      # (B,) prefix_len + true suffix length
     *,
+    k_scale: jax.Array | None = None,  # (n_pages, page_size, Hkv) fp32
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Prefill-append: the uncached suffix attends to cached prefix pages
@@ -210,13 +259,21 @@ def paged_prefill_append_attention(
     Returns ``(B, S, H, D)``.
     """
     return _paged_attention(q, k_pages, v_pages, block_tables,
-                            prefix_len, total_len, interpret=interpret)
+                            prefix_len, total_len, k_scale=k_scale,
+                            v_scale=v_scale, interpret=interpret)
 
 
 def paged_kv_bytes(cache_len, page_size: int, hkv: int, d: int,
-                   dtype_bytes: int = 2) -> int:
+                   dtype_bytes: int = 2, scale_bytes: int = 0) -> int:
     """HBM bytes this kernel reads per layer per step: each slot's live
     pages, K + V (the masked-dense path reads B × capacity instead).
+
+    ``dtype_bytes`` is the POOL element's itemsize — pass the actual
+    leaf dtype's size (1 under int8, 2 under bf16, 4 under fp32), not an
+    assumed activation width. ``scale_bytes`` is the per-row-per-head
+    sibling scale pool's itemsize (4 for the fp32 scales the int8 path
+    stores, 0 when unquantized) — the kernel streams one scale per page
+    row per kv head alongside each K and each V page.
 
     ``cache_len`` follows the kernel's contract — valid positions
     INCLUDING the step's new token (the engine's ``kv_bytes_read_live``
@@ -225,4 +282,5 @@ def paged_kv_bytes(cache_len, page_size: int, hkv: int, d: int,
     import numpy as np
     lens = np.maximum(np.asarray(cache_len), 0)
     pages = np.maximum(-(-lens // page_size), 1) * (lens > 0)
-    return int(pages.sum()) * page_size * hkv * d * dtype_bytes * 2
+    row_bytes = hkv * (d * dtype_bytes + scale_bytes)
+    return int(pages.sum()) * page_size * row_bytes * 2

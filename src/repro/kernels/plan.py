@@ -66,13 +66,18 @@ class BCRPlan:
     scatter_rows: jax.Array                   # (L_r,) int32 flat global rows
     gather_planes: Optional[jax.Array] = None   # (nb_r, nb_c, bc, C_keep) i8
     scatter_planes: Optional[jax.Array] = None  # (nb_r, nb_c, R_keep, br) i8
+    # per-block fp32 dequant scales for int8-quantized vals, stored next
+    # to the flat take/scatter vectors: ([G,] nb_r, nb_c), folded into
+    # the spmm epilogue (None ⇒ vals are unquantized)
+    block_scales: Optional[jax.Array] = None
     m_tile: Optional[int] = None              # static: rows of x per step
     grid_order: str = "mij"                   # static: 'mij' | 'imj'
     group_size: int = 1                       # static: tuner's fusion width
 
     def tree_flatten(self):
         return ((self.gather_cols, self.scatter_rows,
-                 self.gather_planes, self.scatter_planes),
+                 self.gather_planes, self.scatter_planes,
+                 self.block_scales),
                 (self.m_tile, self.grid_order, self.group_size))
 
     @classmethod
@@ -87,6 +92,8 @@ class BCRPlan:
         tot = self.gather_cols.size * 4 + self.scatter_rows.size * 4
         if self.gather_planes is not None:
             tot += self.gather_planes.size + self.scatter_planes.size
+        if self.block_scales is not None:
+            tot += self.block_scales.size * self.block_scales.dtype.itemsize
         return tot
 
 
@@ -148,9 +155,11 @@ def attach_plan(packed: TBCRC, genome: Optional[Genome] = None) -> TBCRC:
     if genome.get("use_planes"):
         gpl, spl = _onehot_planes(packed.row_idx, packed.col_idx,
                                   packed.block_shape)
+    scales = packed.plan.block_scales if packed.plan is not None else None
     plan = BCRPlan(
         gather_cols=gcols, scatter_rows=srows,
         gather_planes=gpl, scatter_planes=spl,
+        block_scales=scales,
         m_tile=genome.get("m_tile"),
         grid_order=genome.get("grid_order", "mij"),
         group_size=int(genome.get("group_size", 1)))
@@ -238,10 +247,15 @@ def pack_group(members: Sequence[TBCRC],
                   for m in members]
         gpl = jnp.stack([p[0] for p in planes])
         spl = jnp.stack([p[1] for p in planes])
+    mem_scales = [m.plan.block_scales if m.plan is not None else None
+                  for m in members]
+    bscales = (jnp.stack(mem_scales)
+               if all(s is not None for s in mem_scales) else None)
     plan = BCRPlan(
         gather_cols=jnp.concatenate(gcols_parts),
         scatter_rows=jnp.concatenate(srows_parts),
         gather_planes=gpl, scatter_planes=spl,
+        block_scales=bscales,
         m_tile=genome.get("m_tile"),
         grid_order=genome.get("grid_order", "mij"),
         group_size=len(members))
@@ -251,6 +265,77 @@ def pack_group(members: Sequence[TBCRC],
         col_idx=jnp.stack([m.col_idx for m in members]),
         plan=plan, shape=members[0].shape,
         block_shape=members[0].block_shape, group_size=len(members))
+
+
+# ---------------------------------------------------------------------------
+# Per-block int8 quantization (GRIM co-design: quantize the layout the
+# kernel streams — the gathered (R_keep, C_keep) tiles — with scales on
+# the plan next to the flat take/scatter vectors)
+# ---------------------------------------------------------------------------
+
+
+def _scale_bytes(packed) -> int:
+    """Per-block scale bytes the spmm streams alongside a quantized tile
+    (0 for unquantized packs) — feeds the roofline's weight-bytes term."""
+    plan = packed.plan
+    if plan is None or plan.block_scales is None:
+        return 0
+    return plan.block_scales.dtype.itemsize
+
+
+def quantize_packed(packed: TBCRC) -> TBCRC:
+    """int8-quantize a packed weight's kept tiles, one symmetric fp32
+    scale per ``(R_keep, C_keep)`` block, stored on the plan. Idempotent;
+    handles stacked (scanned-layer) packs — scales pick up the same
+    leading axes as ``vals``."""
+    from repro.kernels.quant import quantize_blocks
+    if packed.vals.dtype == jnp.int8:
+        return packed
+    plan = packed.plan
+    if plan is None:
+        if packed.vals.ndim > 4:
+            return jax.vmap(quantize_packed)(packed)
+        plan = default_plan(packed.row_idx, packed.col_idx,
+                            packed.block_shape)
+    codes, scales = quantize_blocks(packed.vals)
+    plan = dataclasses.replace(plan, block_scales=scales)
+    return TBCRC(vals=codes, row_idx=packed.row_idx, col_idx=packed.col_idx,
+                 shape=packed.shape, block_shape=packed.block_shape,
+                 plan=plan)
+
+
+def quantize_grouped(grouped: GroupedTBCRC) -> GroupedTBCRC:
+    """int8-quantize an already-fused projection group (scales gain the
+    leading member axis the grouped kernels expect)."""
+    from repro.kernels.quant import quantize_blocks
+    if grouped.vals.dtype == jnp.int8:
+        return grouped
+    codes, scales = quantize_blocks(grouped.vals)
+    plan = dataclasses.replace(grouped.plan, block_scales=scales)
+    return GroupedTBCRC(vals=codes, row_idx=grouped.row_idx,
+                        col_idx=grouped.col_idx, plan=plan,
+                        shape=grouped.shape, block_shape=grouped.block_shape,
+                        group_size=grouped.group_size)
+
+
+def quantize_packed_params(tree: Any) -> Any:
+    """Walk a params tree and int8-quantize every packed linear (and any
+    already-fused group). Run BEFORE :func:`plan_params` so the GA tuner
+    sees the 1-byte weight term; running after (or twice) is safe — both
+    entries are idempotent and re-tuning is skipped for planned packs."""
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            if k == "w_packed" and isinstance(v, TBCRC):
+                out[k] = quantize_packed(v)
+            elif k == "w_group" and isinstance(v, GroupedTBCRC):
+                out[k] = quantize_grouped(v)
+            else:
+                out[k] = quantize_packed_params(v)
+        return out
+    if isinstance(tree, list):
+        return [quantize_packed_params(v) for v in tree]
+    return tree
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +360,8 @@ def plan_search_space(m: int, block_shape: Tuple[int, int],
 
 def tuned_genome(m: int, k: int, n: int, block_shape: Tuple[int, int],
                  r_keep: int, c_keep: int, *, max_group: int = 1,
-                 weight_bytes_per_el: int = 2, fitness: str = "analytic",
+                 weight_bytes_per_el: int = 2, weight_scale_bytes: int = 0,
+                 fitness: str = "analytic",
                  fitness_impl: str = "ref") -> Genome:
     """§4.5 genetic search over (m_tile, grid order, group size, planes);
     memoized per unique layer shape so a 126-layer stack tunes once.
@@ -289,7 +375,7 @@ def tuned_genome(m: int, k: int, n: int, block_shape: Tuple[int, int],
     (callers thread ``cfg.kernel_impl`` through), since e.g. the ref path
     is insensitive to m_tile/grid_order/planes."""
     key = (m, k, n, block_shape, r_keep, c_keep, max_group,
-           weight_bytes_per_el, fitness, fitness_impl)
+           weight_bytes_per_el, weight_scale_bytes, fitness, fitness_impl)
     if key not in _GENOME_CACHE:
         from repro.core.tuner import genetic_search, plan_cost_model
         if fitness == "wallclock":
@@ -300,7 +386,8 @@ def tuned_genome(m: int, k: int, n: int, block_shape: Tuple[int, int],
         elif fitness == "analytic":
             fit = plan_cost_model(
                 m, k, n, block_shape, r_keep, c_keep,
-                weight_bytes_per_el=weight_bytes_per_el)
+                weight_bytes_per_el=weight_bytes_per_el,
+                weight_scale_bytes=weight_scale_bytes)
             pop, gens = 16, 8
         else:
             raise ValueError(f"unknown plan fitness backend {fitness!r}")
@@ -313,12 +400,17 @@ def tuned_genome(m: int, k: int, n: int, block_shape: Tuple[int, int],
 def tune_packed(packed: TBCRC, *, m: int = 8, max_group: int = 1,
                 fitness: str = "analytic",
                 fitness_impl: str = "ref") -> TBCRC:
-    """Attach a GA-tuned plan to ``packed`` (decode batch hint ``m``)."""
+    """Attach a GA-tuned plan to ``packed`` (decode batch hint ``m``).
+
+    int8-quantized packs feed the roofline their true traffic — 1-byte
+    tiles plus the per-block fp32 scale — so the GA retunes for the
+    quantized arithmetic intensity instead of the bf16 one."""
     n, k = packed.shape
     r_keep, c_keep = packed.vals.shape[-2], packed.vals.shape[-1]
     genome = tuned_genome(
         m, k, n, packed.block_shape, r_keep, c_keep, max_group=max_group,
-        weight_bytes_per_el=packed.vals.dtype.itemsize, fitness=fitness,
+        weight_bytes_per_el=packed.vals.dtype.itemsize,
+        weight_scale_bytes=_scale_bytes(packed), fitness=fitness,
         fitness_impl=fitness_impl)
     return attach_plan(packed, genome)
 
@@ -364,6 +456,7 @@ def _try_fuse(tree: Dict[str, Any], fused_key: str,
         m, k, n, members[0].block_shape, r_keep, c_keep,
         max_group=len(members),
         weight_bytes_per_el=members[0].vals.dtype.itemsize,
+        weight_scale_bytes=_scale_bytes(members[0]),
         fitness=fitness, fitness_impl=fitness_impl)
     if int(genome.get("group_size", 1)) < len(members):
         return False            # the tuner preferred separate dispatches

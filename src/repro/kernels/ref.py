@@ -42,6 +42,10 @@ def bcr_spmm_packed_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
     xg = xg.reshape(m, nb_r, nb_c, c_keep)
     part = jnp.einsum("mijc,ijrc->mijr", xg.astype(jnp.float32),
                       packed.vals.astype(jnp.float32))
+    if plan.block_scales is not None:
+        # int8 tiles: fold the per-block scale into the fp32 partial
+        # before the scatter-add (exact — the scatter is 0/1)
+        part = part * plan.block_scales[None, :, :, None]
     y = jnp.zeros((m, n), jnp.float32)
     y = y.at[:, plan.scatter_rows].add(part.reshape(m, -1))
     return y.astype(x.dtype)
@@ -87,6 +91,8 @@ def bcr_spmm_grouped_ref(x: jax.Array, grouped, bias=None,
     xg = xg.reshape(m, g, nb_r, nb_c, c_keep)
     part = jnp.einsum("mgijc,gijrc->mgijr", xg.astype(jnp.float32),
                       grouped.vals.astype(jnp.float32))
+    if plan.block_scales is not None:
+        part = part * plan.block_scales[None, :, :, :, None]
     y = jnp.zeros((m, g * n), jnp.float32)
     y = y.at[:, plan.scatter_rows].add(part.reshape(m, -1))
     return grouped_epilogue(y.reshape(m, g, n), bias, epilogue, x.dtype)
@@ -109,6 +115,9 @@ def bcr_spmm_gather_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
             xg = jnp.take(xb[:, j, :], cols, axis=1)        # (M, C_keep)
             w = packed.vals[i, j]                           # (R_keep, C_keep)
             part = jnp.dot(xg.astype(jnp.float32), w.T.astype(jnp.float32))
+            if packed.plan is not None \
+                    and packed.plan.block_scales is not None:
+                part = part * packed.plan.block_scales[i, j]
             rows = packed.row_idx[i, j]                     # (R_keep,)
             return acc.at[:, rows].add(part)
 
@@ -119,17 +128,31 @@ def bcr_spmm_gather_ref(x: jax.Array, packed: TBCRC) -> jax.Array:
     return jax.lax.fori_loop(0, nb_r, block_row, y)
 
 
+def _gather_dequant(pages, scale, block_tables, b, l, hkv, d):
+    """Gather table pages into a contiguous (B, L, Hkv, D) history,
+    dequantizing off the sibling per-row-per-head scale pool when the
+    pages hold int8 codes."""
+    k = jnp.take(pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    if scale is not None:
+        sc = jnp.take(scale, block_tables, axis=0).reshape(b, l, hkv)
+        k = k.astype(jnp.float32) * sc.astype(jnp.float32)[..., None]
+    return k
+
+
 def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, block_tables: jax.Array,
-                               cache_len: jax.Array) -> jax.Array:
+                               cache_len: jax.Array, k_scale=None,
+                               v_scale=None) -> jax.Array:
     """Pure-JAX oracle for the paged flash-decode kernel: gather each
     slot's table pages, then masked single-step attention.
 
     q ``(B, 1, H, D)``; pages ``(n_pages, page_size, Hkv, D)``; tables
     ``(B, n_cols)``; cache_len ``(B,)`` counts valid positions including
-    the step's new token. Bytes read scale with the table WIDTH handed in
-    (the engine buckets it to the longest live slot) — the Pallas kernel
-    further drops per-slot dead columns via its index-map clamp.
+    the step's new token. With ``k_scale``/``v_scale`` the pages hold
+    int8 codes dequantized off the ``(n_pages, page_size, Hkv)`` scale
+    pools after the gather. Bytes read scale with the table WIDTH handed
+    in (the engine buckets it to the longest live slot) — the Pallas
+    kernel further drops per-slot dead columns via its index-map clamp.
     """
     b, s, h, d = q.shape
     assert s == 1
@@ -138,8 +161,8 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     n_cols = block_tables.shape[1]
     l = n_cols * page_size
     # (B, n_cols, page_size, Hkv, D) -> (B, L, Hkv, D) contiguous history
-    k = jnp.take(k_pages, block_tables, axis=0).reshape(b, l, hkv, d)
-    v = jnp.take(v_pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    k = _gather_dequant(k_pages, k_scale, block_tables, b, l, hkv, d)
+    v = _gather_dequant(v_pages, v_scale, block_tables, b, l, hkv, d)
     qg = q.reshape(b, hkv, g, d).astype(k.dtype)
     logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
                         preferred_element_type=jnp.float32) * d ** -0.5
@@ -153,8 +176,8 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
 
 def paged_prefill_append_ref(q: jax.Array, k_pages: jax.Array,
                              v_pages: jax.Array, block_tables: jax.Array,
-                             prefix_len: jax.Array, total_len: jax.Array
-                             ) -> jax.Array:
+                             prefix_len: jax.Array, total_len: jax.Array,
+                             k_scale=None, v_scale=None) -> jax.Array:
     """Pure-JAX oracle for the paged prefill-append kernel: gather each
     slot's table pages, then causally masked attention for an S-row query
     block whose row ``i`` sits at absolute position ``prefix_len[b] + i``.
@@ -171,8 +194,8 @@ def paged_prefill_append_ref(q: jax.Array, k_pages: jax.Array,
     n_pages, page_size, hkv, _ = k_pages.shape
     g = h // hkv
     l = block_tables.shape[1] * page_size
-    k = jnp.take(k_pages, block_tables, axis=0).reshape(b, l, hkv, d)
-    v = jnp.take(v_pages, block_tables, axis=0).reshape(b, l, hkv, d)
+    k = _gather_dequant(k_pages, k_scale, block_tables, b, l, hkv, d)
+    v = _gather_dequant(v_pages, v_scale, block_tables, b, l, hkv, d)
     qg = q.reshape(b, s, hkv, g, d).astype(k.dtype)
     logits = jnp.einsum("bshgd,bkhd->bhgsk", qg, k,
                         preferred_element_type=jnp.float32) * d ** -0.5

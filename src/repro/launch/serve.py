@@ -80,7 +80,8 @@ def _auto_block_spec(spec: BCRSpec, shape, keep_frac: float, decode_m: int,
 
 def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
                 decode_m: int = 8, auto_block: bool = False,
-                block_runner=None, plan_fitness: str = "analytic") -> PyTree:
+                block_runner=None, plan_fitness: str = "analytic",
+                weight_dtype: str = "") -> PyTree:
     """Replace every prunable linear's {"w"} with {"w_packed": TBCRC}.
 
     With ``plan=True`` (default) this is GRIM's full compile step: every
@@ -95,6 +96,10 @@ def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
     ``bcr_block`` then only seeds the candidate set. ``plan_fitness``
     selects the GA tuner's fitness backend ("analytic" roofline, default,
     or "wallclock" host timing).
+
+    ``weight_dtype="int8"`` quantizes every packed tile to int8 codes plus
+    a per-block fp32 scale (applied in the kernels' epilogue) before plan
+    tuning, so the tuner's roofline prices the halved weight bytes.
     """
     fil = default_prune_filter(cfg)
 
@@ -124,6 +129,11 @@ def pack_params(cfg: ModelConfig, params: PyTree, *, plan: bool = True,
         return node
 
     packed = rewrite(params)
+    if weight_dtype:
+        if weight_dtype != "int8":
+            raise ValueError(f"unsupported weight_dtype {weight_dtype!r}")
+        from repro.kernels.plan import quantize_packed_params
+        packed = quantize_packed_params(packed)
     if plan:
         from repro.kernels.plan import plan_params
         packed = plan_params(packed, m=decode_m, fitness=plan_fitness,
@@ -351,7 +361,8 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
 
 def build_params(cfg: ModelConfig, log=print, *, decode_m: int = 8,
                  auto_block: bool = False,
-                 plan_fitness: str = "analytic") -> PyTree:
+                 plan_fitness: str = "analytic",
+                 weight_dtype: str = "") -> PyTree:
     fns = model_fns(cfg)
     params = fns.init_params(jax.random.PRNGKey(0))
     if cfg.bcr_keep_frac > 0:
@@ -359,7 +370,8 @@ def build_params(cfg: ModelConfig, log=print, *, decode_m: int = 8,
         # at (the engine's plan_params preserves pre-tuned plans)
         packed = pack_params(cfg, params, decode_m=decode_m,
                              auto_block=auto_block,
-                             plan_fitness=plan_fitness)
+                             plan_fitness=plan_fitness,
+                             weight_dtype=weight_dtype)
         log(f"packed weight bytes: "
             f"{packed_fraction(params, packed):.3f}x dense")
         params = packed
@@ -454,6 +466,15 @@ def main() -> None:
                    choices=["analytic", "wallclock"],
                    help="GA plan-tuner fitness backend (wallclock times "
                         "the jitted matmul per genome on this host)")
+    p.add_argument("--kv-dtype", default="", choices=["", "int8"],
+                   help="int8: store attention KV as symmetric int8 codes "
+                        "+ per-row-per-head fp32 scales, dequantized "
+                        "inside the paged Pallas kernels (~0.53x KV bytes "
+                        "per decode step vs bf16 pools)")
+    p.add_argument("--weight-dtype", default="", choices=["", "int8"],
+                   help="int8: quantize packed BCR tiles to int8 codes + "
+                        "per-block scales applied in the kernel epilogue "
+                        "(halves packed weight bytes; needs --bcr-keep)")
     p.add_argument("--json-out", default=None)
     args = p.parse_args()
 
@@ -465,9 +486,12 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, bcr_block=(b, b))
     params = build_params(
         cfg, decode_m=(args.batch if args.mode == "static" else args.slots),
-        auto_block=args.auto_block, plan_fitness=args.plan_fitness)
+        auto_block=args.auto_block, plan_fitness=args.plan_fitness,
+        weight_dtype=args.weight_dtype)
 
     if args.mode == "static":
+        if args.kv_dtype:
+            cfg = dataclasses.replace(cfg, kv_dtype=args.kv_dtype)
         generate(cfg, params, ServeConfig(batch=args.batch,
                                           prompt_len=args.prompt_len,
                                           gen_tokens=args.gen,
@@ -486,7 +510,8 @@ def main() -> None:
         n_slots=args.slots, capacity=args.capacity,
         page_size=args.page_size, kv_pages=args.kv_pages or None,
         prefix_cache=args.prefix_cache,
-        spec_k=args.spec_k, draft_cfg=draft_cfg),
+        spec_k=args.spec_k, draft_cfg=draft_cfg,
+        kv_dtype=args.kv_dtype),
         draft_params=draft_params)
     # mixed prompt lengths around --prompt-len, clamped so every request
     # fits its slot (prompt + gen + spec headroom ≤ capacity;

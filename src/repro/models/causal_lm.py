@@ -116,19 +116,27 @@ def layer_init(key, kinds: Tuple[str, str], cfg: ModelConfig) -> Params:
 def _mixer_cache_init(kind: str, cfg: ModelConfig, batch: int, capacity: int,
                       kv_pages: int = 0, page_size: int = 0):
     if kind == "attn":
+        quant = cfg.kv_dtype == "int8"
+        kv_dt = jnp.int8 if quant else cfg.c_dtype
         if page_size > 0:
             # block-paged layout: one shared page pool per layer, indexed
             # by per-slot block tables at decode (page 0 reserved as the
-            # null sink for pad/inactive writes)
+            # null sink for pad/inactive writes). kv_dtype="int8" stores
+            # quantized codes plus sibling per-row-per-head scale pools
+            # that share the page index space (so page copies / frees /
+            # table lookups cover data and scales together).
             shape = (kv_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
-            return {"k": jnp.zeros(shape, cfg.c_dtype),
-                    "v": jnp.zeros(shape, cfg.c_dtype)}
-        return {
-            "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim),
-                           cfg.c_dtype),
-            "v": jnp.zeros((batch, capacity, cfg.num_kv_heads, cfg.head_dim),
-                           cfg.c_dtype),
-        }
+            c = {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+            if quant:
+                c["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+                c["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            return c
+        shape = (batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+        c = {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+        if quant:
+            c["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            c["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        return c
     if kind == "mamba":
         return M.mamba_init_cache(cfg, batch, cfg.c_dtype)
     if kind == "rwkv":
@@ -183,9 +191,23 @@ def layer_apply(
             suffix_len=suffix_len, attn_impl=cfg.attn_impl,
             q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, impl=impl)
         if cache is not None or want_cache:
-            new_cache["mixer"] = {
-                "k": kv["k"].astype(cfg.c_dtype),
-                "v": kv["v"].astype(cfg.c_dtype)}
+            if "k_scale" in kv:
+                # quantized pools/caches come back from attention_apply in
+                # their final layout (codes + scales) — pass through
+                new_cache["mixer"] = kv
+            elif cfg.kv_dtype == "int8":
+                # fresh prefill rows: quantize on emission so the cache
+                # the slot pool inserts already matches the int8 + scale
+                # leaf structure of init_cache
+                from repro.kernels.quant import quantize_rows
+                kc, ks = quantize_rows(kv["k"])
+                vc, vs = quantize_rows(kv["v"])
+                new_cache["mixer"] = {"k": kc, "v": vc,
+                                      "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache["mixer"] = {
+                    "k": kv["k"].astype(cfg.c_dtype),
+                    "v": kv["v"].astype(cfg.c_dtype)}
     elif mixer_kind == "mamba":
         if cache is not None:
             out, mc = M.mamba_apply_step(lp["mixer"], h, cache["mixer"], cfg, impl)

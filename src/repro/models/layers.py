@@ -241,7 +241,8 @@ def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 512,
     return out.astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
+def decode_attention(q, k_cache, v_cache, cache_len,
+                     k_scale=None, v_scale=None) -> jax.Array:
     """Single-step attention against a (possibly partially filled) cache.
 
     q: (B, 1, H, D); caches: (B, L, Hkv, D); cache_len: int — number of
@@ -257,6 +258,13 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
     b, _, h, d = q.shape
     l, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv
+    if k_scale is not None:
+        # int8 caches on the unpaged path: correctness fallback only — this
+        # materializes a dequantized fp32 cache copy (the NB below is
+        # deliberately violated); bandwidth-proportional int8 decode is
+        # served by the paged Pallas kernels.
+        k_cache = k_cache.astype(jnp.float32) * k_scale[..., None]
+        v_cache = v_cache.astype(jnp.float32) * v_scale[..., None]
     k_cache = part.act(k_cache, "batch", "kv_seq", None, None)
     v_cache = part.act(v_cache, "batch", "kv_seq", None, None)
     qg = q.reshape(b, hkv, g, d).astype(k_cache.dtype)
@@ -281,24 +289,29 @@ def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
 
 
 def paged_decode_attention_dispatch(q, k_pages, v_pages, block_tables,
-                                    cache_len, attn_impl: str) -> jax.Array:
+                                    cache_len, attn_impl: str,
+                                    k_scale=None, v_scale=None) -> jax.Array:
     """Paged single-step attention: the Pallas flash-decode kernel when
     ``attn_impl`` asks for it ("paged" compiled, "paged_interpret" for CPU
     validation), else the pure-JAX gather ref — whose bytes still scale
-    with the table width handed in, not the slot capacity."""
+    with the table width handed in, not the slot capacity. With
+    ``k_scale``/``v_scale`` the pools hold int8 codes dequantized inside
+    the kernel (or after the ref's gather)."""
     from repro.kernels.paged_decode_attention import paged_decode_attention
     from repro.kernels.ref import paged_decode_attention_ref
     if attn_impl in ("paged", "paged_interpret"):
         return paged_decode_attention(
             q, k_pages, v_pages, block_tables, cache_len,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=(attn_impl == "paged_interpret"))
     return paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
-                                      cache_len)
+                                      cache_len, k_scale=k_scale,
+                                      v_scale=v_scale)
 
 
 def paged_prefill_append_dispatch(q, k_pages, v_pages, block_tables,
-                                  prefix_len, total_len,
-                                  attn_impl: str) -> jax.Array:
+                                  prefix_len, total_len, attn_impl: str,
+                                  k_scale=None, v_scale=None) -> jax.Array:
     """Prefill-append attention: the multi-query generalization of the
     flash-decode kernel (suffix rows run online softmax over the slot's
     cached prefix pages + a causal mask inside the chunk) or the pure-JAX
@@ -309,9 +322,35 @@ def paged_prefill_append_dispatch(q, k_pages, v_pages, block_tables,
     if attn_impl in ("paged", "paged_interpret"):
         return paged_prefill_append_attention(
             q, k_pages, v_pages, block_tables, prefix_len, total_len,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=(attn_impl == "paged_interpret"))
     return paged_prefill_append_ref(q, k_pages, v_pages, block_tables,
-                                    prefix_len, total_len)
+                                    prefix_len, total_len, k_scale=k_scale,
+                                    v_scale=v_scale)
+
+
+def _paged_write(pages, scale_pool, dest, rows, n_kv, head_dim):
+    """Scatter K/V rows into a page pool at flat row positions ``dest``.
+
+    Unquantized pools store ``rows`` cast to the pool dtype. int8 pools
+    (``scale_pool`` not None) quantize on store: each row gets a per-kv-
+    head symmetric scale written into the sibling ``(n_pages, page_size,
+    Hkv)`` scale pool at the same flat position, so the pool and its
+    scales can never drift apart (CoW copies, truncation and eviction all
+    move them together). Returns ``(pages, scale_pool)``.
+    """
+    flat = (-1, n_kv, head_dim)
+    if scale_pool is None:
+        pages = pages.reshape(flat).at[dest].set(
+            rows.reshape(flat).astype(pages.dtype)).reshape(pages.shape)
+        return pages, None
+    from repro.kernels.quant import quantize_rows
+    codes, scales = quantize_rows(rows.reshape(flat))
+    pages = pages.reshape(flat).at[dest].set(codes).reshape(pages.shape)
+    sshape = scale_pool.shape
+    scale_pool = scale_pool.reshape(-1, n_kv).at[dest].set(
+        scales.astype(scale_pool.dtype)).reshape(sshape)
+    return pages, scale_pool
 
 
 def attention_apply(
@@ -348,6 +387,7 @@ def attention_apply(
         plen = jnp.asarray(cache_len)
         slen = jnp.asarray(suffix_len)
         ck, cv = cache["k"], cache["v"]
+        ks_pool, vs_pool = cache.get("k_scale"), cache.get("v_scale")
         page_size = ck.shape[1]
         n_cols = block_tables.shape[1]
         pos = plen[:, None] + jnp.arange(s)[None]            # (B, S)
@@ -356,32 +396,35 @@ def attention_apply(
         dest = (jnp.take_along_axis(block_tables, col, axis=1) * page_size
                 + pos % page_size)
         dest = jnp.where(valid, dest, 0).reshape(-1)
-        flat = (-1, n_kv, head_dim)
-        k_pages = ck.reshape(flat).at[dest].set(
-            k.reshape(flat).astype(ck.dtype)).reshape(ck.shape)
-        v_pages = cv.reshape(flat).at[dest].set(
-            v.reshape(flat).astype(cv.dtype)).reshape(cv.shape)
+        k_pages, ks_pool = _paged_write(ck, ks_pool, dest, k, n_kv, head_dim)
+        v_pages, vs_pool = _paged_write(cv, vs_pool, dest, v, n_kv, head_dim)
         out = paged_prefill_append_dispatch(
-            q, k_pages, v_pages, block_tables, plen, plen + slen, attn_impl)
+            q, k_pages, v_pages, block_tables, plen, plen + slen, attn_impl,
+            k_scale=ks_pool, v_scale=vs_pool)
         new_cache = {"k": k_pages, "v": v_pages}
+        if ks_pool is not None:
+            new_cache.update(k_scale=ks_pool, v_scale=vs_pool)
     elif cache is not None and block_tables is not None:
         # paged decode: write K/V at flat position table[b, len // ps] * ps
         # + len % ps. Inactive slots (len 0, zeroed table row) land in the
         # reserved null page 0, which no live table entry ever points at.
         idx = jnp.asarray(cache_len)
         ck, cv = cache["k"], cache["v"]
+        ks_pool, vs_pool = cache.get("k_scale"), cache.get("v_scale")
         n_pages, page_size = ck.shape[0], ck.shape[1]
         dest = (jnp.take_along_axis(
             block_tables, (idx // page_size)[:, None], axis=1)[:, 0]
             * page_size + idx % page_size)
-        flat = (-1, n_kv, head_dim)
-        k_pages = ck.reshape(flat).at[dest].set(
-            k[:, 0].astype(ck.dtype)).reshape(ck.shape)
-        v_pages = cv.reshape(flat).at[dest].set(
-            v[:, 0].astype(cv.dtype)).reshape(cv.shape)
+        k_pages, ks_pool = _paged_write(ck, ks_pool, dest, k[:, 0],
+                                        n_kv, head_dim)
+        v_pages, vs_pool = _paged_write(cv, vs_pool, dest, v[:, 0],
+                                        n_kv, head_dim)
         out = paged_decode_attention_dispatch(
-            q, k_pages, v_pages, block_tables, idx + 1, attn_impl)
+            q, k_pages, v_pages, block_tables, idx + 1, attn_impl,
+            k_scale=ks_pool, v_scale=vs_pool)
         new_cache = {"k": k_pages, "v": v_pages}
+        if ks_pool is not None:
+            new_cache.update(k_scale=ks_pool, v_scale=vs_pool)
     elif cache is not None:
         # decode: write K/V at position cache_len, attend to ≤ cache_len+1.
         # cache_len is a scalar (uniform batch) or a (B,) vector (ragged
@@ -390,19 +433,28 @@ def attention_apply(
         idx = jnp.asarray(cache_len)
         ck = part.act(cache["k"], "batch", "kv_seq", None, None)
         cv = part.act(cache["v"], "batch", "kv_seq", None, None)
+        ks_cache, vs_cache = cache.get("k_scale"), cache.get("v_scale")
+        ku, vu = k.astype(ck.dtype), v.astype(cv.dtype)
+        ksu = vsu = None
+        if ks_cache is not None:
+            from repro.kernels.quant import quantize_rows
+            ku, ksu = quantize_rows(k)
+            vu, vsu = quantize_rows(v)
         if idx.ndim == 0:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                ck, k.astype(ck.dtype), idx, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cv, v.astype(cv.dtype), idx, axis=1)
+            def write(c, u):
+                return jax.lax.dynamic_update_slice_in_dim(c, u, idx, axis=1)
         else:
-            write = jax.vmap(
-                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
-                    c, u, i, axis=0))
-            k_cache = write(ck, k.astype(ck.dtype), idx)
-            v_cache = write(cv, v.astype(cv.dtype), idx)
-        out = decode_attention(q, k_cache, v_cache, idx + s)
+            def write(c, u):
+                return jax.vmap(
+                    lambda cc, uu, i: jax.lax.dynamic_update_slice_in_dim(
+                        cc, uu, i, axis=0))(c, u, idx)
+        k_cache, v_cache = write(ck, ku), write(cv, vu)
         new_cache = {"k": k_cache, "v": v_cache}
+        if ks_cache is not None:
+            ks_cache, vs_cache = write(ks_cache, ksu), write(vs_cache, vsu)
+            new_cache.update(k_scale=ks_cache, v_scale=vs_cache)
+        out = decode_attention(q, k_cache, v_cache, idx + s,
+                               k_scale=ks_cache, v_scale=vs_cache)
     else:
         if attn_impl == "dense":
             out = dense_attention(q, k, v, causal=causal)

@@ -150,6 +150,14 @@ class EngineConfig:
     # the commit frontier before acceptance rolls it back).
     spec_k: int = 0
     draft_cfg: Optional[ModelConfig] = None
+    # quantized serving: kv_dtype="int8" stores attention KV pages as
+    # symmetric int8 codes + per-row-per-head fp32 scale pools (dequantized
+    # inside the paged Pallas kernels — KV bytes/step roughly halve vs
+    # bf16); weight_dtype="int8" quantizes every packed BCR weight tile to
+    # int8 codes + per-block scales before plan tuning (the roofline then
+    # prices halved weight bytes). "" keeps the model's own dtypes.
+    kv_dtype: str = ""
+    weight_dtype: str = ""
 
 
 class InferenceEngine:
@@ -160,8 +168,21 @@ class InferenceEngine:
             raise NotImplementedError(
                 "InferenceEngine serves decoder-only families; encdec "
                 "prefill needs encoder frames and a different cache tree")
+        ec = ec or EngineConfig()
+        if ec.kv_dtype:
+            if ec.kv_dtype != "int8":
+                raise ValueError(f"unsupported kv_dtype {ec.kv_dtype!r}")
+            cfg = dataclasses.replace(cfg, kv_dtype=ec.kv_dtype)
         self.cfg = cfg
-        self.ec = ec = ec or EngineConfig()
+        self.ec = ec
+        if ec.weight_dtype and params is not None:
+            if ec.weight_dtype != "int8":
+                raise ValueError(
+                    f"unsupported weight_dtype {ec.weight_dtype!r}")
+            # quantize BEFORE planning so the tuner's roofline prices the
+            # halved weight-byte traffic of int8 tiles
+            from repro.kernels.plan import quantize_packed_params
+            params = quantize_packed_params(params)
         if ec.plan_packed and params is not None:
             # GRIM's compile step at engine build: attach GA-tuned
             # execution plans to packed weights (default plans tune for
@@ -216,11 +237,11 @@ class InferenceEngine:
         self.drafter = drafter
         self._rng = np.random.default_rng(ec.seed)
         # per-decode-step KV traffic accounting (BENCH/bench reporting):
-        # bytes one cache row (K+V, all attention layers) costs to read
-        from repro.models.causal_lm import layer_plan
-        n_attn = sum(1 for mixer, _ in layer_plan(cfg) if mixer == "attn")
-        self._kv_row_bytes = (2 * cfg.num_kv_heads * cfg.head_dim
-                              * cfg.c_dtype.itemsize * n_attn)
+        # bytes one cache position (K+V + any sibling scale leaves, all
+        # attention layers) costs to read — derived from the ACTUAL pool
+        # leaves, so int8 pools report their real (halved + scale) traffic
+        # instead of an assumed c_dtype width
+        self._kv_row_bytes = self._probe_kv_row_bytes()
 
         # sampling is fused into the prefill/decode programs: one dispatch
         # per engine step — at small model scale the extra host round-trip
@@ -324,6 +345,27 @@ class InferenceEngine:
     def _headroom(self) -> int:
         return self.ec.spec_k if self.spec else 0
 
+    def _probe_kv_row_bytes(self) -> int:
+        """Bytes one KV cache position costs to read across all attention
+        layers, summed over the pool's actual leaves (dtype-accurate:
+        int8 pools count 1 byte/element plus their fp32 scale siblings).
+        Paged pools: every page leaf holds ``n_pages × page_size``
+        positions. Unpaged: position-bearing leaves are found by probing
+        ``init_cache`` at two capacities (recurrent-state leaves have no
+        capacity axis and drop out of the difference)."""
+        leaves = jax.tree_util.tree_leaves
+        if self.paged:
+            n_rows = self.pool.n_pages * self.pool.page_size
+            return sum(leaf.size // n_rows * leaf.dtype.itemsize
+                       for leaf, pax in zip(leaves(self.pool.cache),
+                                            leaves(self.pool._page_axes))
+                       if pax >= 0)
+        c1 = jax.eval_shape(lambda: self.fns.init_cache(1, 8))
+        c2 = jax.eval_shape(lambda: self.fns.init_cache(1, 16))
+        return sum((b.size - a.size) // 8 * a.dtype.itemsize
+                   for a, b in zip(leaves(c1), leaves(c2))
+                   if a.shape != b.shape)
+
     def _bucket(self, n: int) -> int:
         if not self.pad_prefill:
             return n
@@ -335,6 +377,18 @@ class InferenceEngine:
     def _next_key(self) -> jax.Array:
         self._key, k = jax.random.split(self._key)
         return k
+
+    def _pow2_widths(self) -> List[int]:
+        """Every block-table width the pow2 bucketing can hand a paged
+        dispatch (decode, verify and prefill-append all bucket the same
+        way) — warmup compiles each of them."""
+        widths, w = [], 1
+        while True:
+            widths.append(min(w, self.pool.max_pages))
+            if w >= self.pool.max_pages:
+                break
+            w *= 2
+        return widths
 
     def _row_tiers(self) -> List[int]:
         """Admission-batch row counts the prefill program is compiled for:
@@ -445,14 +499,20 @@ class InferenceEngine:
         if cow:
             src, dst = zip(*cow)
             self.pool.copy_pages(np.asarray(src), np.asarray(dst))
-        # full-width tables (vs decode's pow2 live-width bucketing): the
-        # append dispatch runs once per ADMISSION, not per step, dead
-        # table columns skip compute + elide their DMA in the kernel, and
-        # bucketing here would multiply warmup's compiled-program grid by
-        # O(log max_pages). Revisit if TPU profiles show per-grid-step
-        # overhead dominating admission (ROADMAP).
-        bt = np.zeros((k_pad, self.pool.max_pages), np.int32)
-        bt[:k] = self.pool.table[slots[:k]]
+        # pow2-bucketed table width, like decode's live-width bucketing:
+        # the kernel grid is (B, Hkv, n_cols), so a full-width table made
+        # every admission sweep max_pages grid steps per slot even when
+        # the longest prompt covered a handful of pages. The bucket covers
+        # the widest member's prompt pages; warmup compiles the append
+        # program per (suffix bucket × row tier × width).
+        need = max(self.pool.pages_needed(req.prompt_len)
+                   for req, _ in group)
+        w = 1
+        while w < need:
+            w *= 2
+        w = min(w, self.pool.max_pages)
+        bt = np.zeros((k_pad, w), np.int32)
+        bt[:k] = self.pool.table[slots[:k], :w]
         tok_dev, self.pool.cache = self._append(
             self.params, jnp.asarray(toks), jnp.asarray(plens),
             jnp.asarray(slens), self.pool.cache, jnp.asarray(bt),
@@ -765,18 +825,22 @@ class InferenceEngine:
             zeros = jnp.zeros((self.ec.n_slots,), jnp.float32)
             for sb in sbuckets:
                 for tier in self._row_tiers():
-                    # all-zero tables route every write into the null
-                    # page; greedy sampling matches the cold-prefill
-                    # warmup's compiled sample path
-                    _, self.pool.cache = self._append(
-                        self.params,
-                        jnp.zeros((tier, sb), jnp.int32),
-                        jnp.zeros((tier,), jnp.int32),
-                        jnp.ones((tier,), jnp.int32),
-                        self.pool.cache,
-                        jnp.zeros((tier, self.pool.max_pages), jnp.int32),
-                        self._next_key(), zeros[:tier],
-                        zeros[:tier].astype(jnp.int32), use_topk=False)
+                    for w in self._pow2_widths():
+                        # all-zero tables route every write into the null
+                        # page; greedy sampling matches the cold-prefill
+                        # warmup's compiled sample path. Admission buckets
+                        # the table width to a power of two, so every
+                        # (suffix bucket × row tier × width) program must
+                        # exist before measured traffic.
+                        _, self.pool.cache = self._append(
+                            self.params,
+                            jnp.zeros((tier, sb), jnp.int32),
+                            jnp.zeros((tier,), jnp.int32),
+                            jnp.ones((tier,), jnp.int32),
+                            self.pool.cache,
+                            jnp.zeros((tier, w), jnp.int32),
+                            self._next_key(), zeros[:tier],
+                            zeros[:tier].astype(jnp.int32), use_topk=False)
             self.pool.reset_prefix()
         if self.paged:
             # compile the decode-path program for every block-table width
@@ -786,12 +850,7 @@ class InferenceEngine:
             # speculative mode every step is a verify dispatch, so that
             # program (spec_k+1 suffix rows, host-side sampling) is the
             # one compiled per width instead of the fused decode+sample.
-            widths, w = [], 1
-            while True:
-                widths.append(min(w, self.pool.max_pages))
-                if w >= self.pool.max_pages:
-                    break
-                w *= 2
+            widths = self._pow2_widths()
             zeros = jnp.zeros((self.ec.n_slots,), jnp.float32)
             lens0 = jnp.zeros((self.ec.n_slots,), jnp.int32)
             if self.spec:

@@ -1,0 +1,18 @@
+"""Suite-wide fixtures.
+
+The full tier-1 run compiles a few hundred distinct XLA programs in one
+process; on the CPU backend the accumulated compiled-program state can
+crash a late large compile (observed: segfault inside backend_compile
+on the decode-step scan once the suite grew past ~280 tests). Dropping
+jax's executable caches between modules bounds that state. Within-module
+jit reuse — where virtually all the cache hits are — is unaffected.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()
