@@ -504,6 +504,60 @@ def bench_quantized(args):
     return row
 
 
+def bench_overload(args):
+    """Open-loop overload: Poisson arrivals far above the service rate,
+    load shedding ON (bounded waiting queue + per-request deadlines) vs
+    OFF (unbounded queue, no deadlines). The CI claim: with shedding on,
+    the p99 TTFT of requests that actually finish stays bounded — the
+    on/off ratio is gated by --max-overload-p99-ratio — and the engine
+    drains with zero leaked pages (check_conservation) despite the churn
+    of sheds and timeouts. Runs the raw smoke config dense: overload is a
+    queueing-behavior bench, not a kernel bench."""
+    from repro.launch.serve import TrafficConfig, run_traffic
+    cfg = get_smoke_config(args.arch)
+    params = model_fns(cfg).init_params(jax.random.PRNGKey(0))
+
+    def run(max_waiting, deadline_s):
+        eng = InferenceEngine(cfg, params, EngineConfig(
+            n_slots=args.overload_slots, capacity=args.capacity,
+            page_size=args.page_size, plan_packed=False,
+            max_waiting=max_waiting))
+        tc = TrafficConfig(
+            n_requests=args.overload_requests, rate=args.overload_rate,
+            prompt_lens=(4, 8, 12), gen_tokens=args.overload_gen,
+            deadline_s=deadline_s, seed=11)
+        m = run_traffic(eng, tc, log=lambda *a: None)
+        eng.check_conservation()    # zero leaked pages/slots or it raises
+        return m
+
+    shed = run(max_waiting=args.overload_max_waiting,
+               deadline_s=args.overload_deadline)
+    noshed = run(max_waiting=None, deadline_s=0.0)
+    ratio = (shed["ttft_s"]["p99"] / noshed["ttft_s"]["p99"]
+             if noshed["ttft_s"]["p99"] > 0 else 0.0)
+    row = {
+        "section": "overload", "arch": args.arch,
+        "rate": args.overload_rate, "requests": args.overload_requests,
+        "gen": args.overload_gen, "slots": args.overload_slots,
+        "page_size": args.page_size, "capacity": args.capacity,
+        "max_waiting": args.overload_max_waiting,
+        "deadline_s": args.overload_deadline,
+        "shed_on": shed, "shed_off": noshed,
+        "overload_p99_ratio": ratio,
+        "leaked_pages": 0,      # check_conservation() raised otherwise
+    }
+    sc_on, sc_off = shed["status_counts"], noshed["status_counts"]
+    print(f"overload rate={args.overload_rate}/s x"
+          f"{args.overload_requests} req, {args.overload_slots} slots: "
+          f"shed-on p99 TTFT {shed['ttft_s']['p99']*1e3:.1f} ms "
+          f"(finished {sc_on['finished']}, rejected {sc_on['rejected']}, "
+          f"timeout {sc_on['timeout']}, goodput "
+          f"{shed['goodput_tok_s']:.1f} tok/s) vs shed-off "
+          f"{noshed['ttft_s']['p99']*1e3:.1f} ms "
+          f"(finished {sc_off['finished']}) → ratio {ratio:.3f}")
+    return row
+
+
 def bench_static(cfg, params, prompts, gens, batch, capacity):
     """Legacy one-batch-at-a-time loop at equal useful load: fixed batches
     in arrival order, uniform prompt padding, every batch decoded to its
@@ -606,6 +660,22 @@ def main():
     ap.add_argument("--min-quant-vs-fp", type=float, default=0.0,
                     help="exit 1 if int8-KV tok/s ÷ fp paged tok/s falls "
                          "below this (0 → no gate)")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload section: arrivals >> service rate, load "
+                         "shedding on vs off (bounded queue + deadlines)")
+    ap.add_argument("--overload-rate", type=float, default=400.0,
+                    help="overload arrival rate (req/s, Poisson)")
+    ap.add_argument("--overload-requests", type=int, default=64)
+    ap.add_argument("--overload-gen", type=int, default=16)
+    ap.add_argument("--overload-slots", type=int, default=2)
+    ap.add_argument("--overload-max-waiting", type=int, default=4,
+                    help="waiting-queue bound for the shed-on run")
+    ap.add_argument("--overload-deadline", type=float, default=0.25,
+                    help="per-request deadline (s) for the shed-on run")
+    ap.add_argument("--max-overload-p99-ratio", type=float, default=0.0,
+                    help="gate: shed-on p99 TTFT (FINISHED requests) must "
+                         "be at most this fraction of the shed-off p99 "
+                         "(0 → no gate)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -665,6 +735,11 @@ def main():
         quant_row = bench_quantized(args)
         results.append(quant_row)
 
+    overload_row = None
+    if args.overload:
+        overload_row = bench_overload(args)
+        results.append(overload_row)
+
     payload = {"benchmark": "serve", "packed_vs_dense": ratios,
                "results": results}
     if long_row is not None:
@@ -681,6 +756,9 @@ def main():
         payload["quant_divergence_rate"] = quant_row["excess_flip_rate"]
         payload["quant_vs_fp"] = quant_row["quant_vs_fp"]
         payload["quantized"] = quant_row
+    if overload_row is not None:
+        payload["overload_p99_ratio"] = overload_row["overload_p99_ratio"]
+        payload["overload"] = overload_row
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
@@ -715,6 +793,18 @@ def main():
                 f"{quant_row['quant_vs_fp']:.2f}x fp paged tok/s at batch "
                 f"{quant_row['batch']} (< {args.min_quant_vs_fp}x "
                 f"required)")
+
+    if args.max_overload_p99_ratio > 0:
+        if overload_row is None:
+            raise SystemExit("--max-overload-p99-ratio needs --overload")
+        if (overload_row["overload_p99_ratio"]
+                > args.max_overload_p99_ratio):
+            raise SystemExit(
+                f"TAIL LATENCY REGRESSION: with shedding on, p99 TTFT is "
+                f"{overload_row['overload_p99_ratio']:.3f}x the unbounded-"
+                f"queue p99 under overload "
+                f"(> {args.max_overload_p99_ratio}x allowed — shedding "
+                f"must keep the admitted tail bounded)")
 
     if args.min_spec_vs_plain > 0:
         if spec_row is None:

@@ -43,6 +43,7 @@ from repro.launch.train import default_prune_filter
 from repro.models.api import model_fns
 from repro.serving import EngineConfig, InferenceEngine
 from repro.serving.kv_slots import seat_prefill
+from repro.serving.scheduler import FINISHED
 
 PyTree = Any
 
@@ -239,6 +240,12 @@ class TrafficConfig:
     # serving shape the prefix cache targets). 0 → fully random prompts.
     system_prompts: int = 0
     system_len: int = 32
+    # lifecycle knobs: deadline_s > 0 arms a per-request deadline (TIMEOUT
+    # past it, waiting or running); cancel_rate > 0 cancels that fraction
+    # of requests at a random point after their arrival — both exercise
+    # the engine's terminal-status machinery under real traffic
+    deadline_s: float = 0.0
+    cancel_rate: float = 0.0
 
 
 def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
@@ -274,15 +281,32 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
                if tc.system_prompts else None)
         engine.warmup([len(p) for p in prompts], suffix_lens=sfx)
 
+    # client-side cancellations: each request independently gets a cancel
+    # scheduled at a random point after its arrival (within its deadline
+    # window when one is set). Cancels racing completion are no-ops.
+    cancel_at = np.full(tc.n_requests, np.inf)
+    if tc.cancel_rate > 0:
+        hit = rng.random(tc.n_requests) < tc.cancel_rate
+        span = tc.deadline_s if tc.deadline_s > 0 else 0.5
+        cancel_at[hit] = arrivals[hit] + rng.uniform(
+            0.01, max(span, 0.02), size=int(hit.sum()))
+
     t0 = time.perf_counter()
     submitted = 0
+    rids: List[int] = []
     while submitted < tc.n_requests or engine.sched.has_work():
         now = time.perf_counter() - t0
         while submitted < tc.n_requests and arrivals[submitted] <= now:
-            engine.submit(prompts[submitted], max_new_tokens=tc.gen_tokens,
-                          temperature=tc.temperature, top_k=tc.top_k,
-                          arrival_time=arrivals[submitted])
+            rids.append(engine.submit(
+                prompts[submitted], max_new_tokens=tc.gen_tokens,
+                temperature=tc.temperature, top_k=tc.top_k,
+                arrival_time=arrivals[submitted],
+                deadline_s=tc.deadline_s))
             submitted += 1
+        for i in np.nonzero(cancel_at <= now)[0]:
+            if i < submitted:
+                engine.cancel(rids[i])
+                cancel_at[i] = np.inf
         if not engine.sched.has_work():
             # idle: sleep until the next arrival instead of spinning
             time.sleep(max(0.0, arrivals[submitted] - now))
@@ -291,13 +315,21 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
     elapsed = time.perf_counter() - t0
 
     reqs = engine.sched.finished
+    fin = [r for r in reqs if r.status == FINISHED]
     itl: List[float] = []                      # inter-token latencies
     ttft: List[float] = []                     # arrival → first token
-    for r in reqs:
+    # latency percentiles cover FINISHED requests only: a shed/timed-out
+    # request has no meaningful TTFT, and mixing partial generations into
+    # the ITL tail would flatter overloaded runs
+    for r in fin:
         ttft.append((r.first_token_time - t0) - r.arrival_time)
         itl.extend(np.diff(r.token_times))
     total_tokens = sum(len(r.generated) for r in reqs)
+    good_tokens = sum(len(r.generated) for r in fin)
     prompt_tokens = sum(r.prompt_len for r in reqs)
+    status_counts = {
+        s.lower(): sum(1 for r in reqs if r.status == s)
+        for s in ("FINISHED", "TIMEOUT", "CANCELLED", "REJECTED", "FAILED")}
     pct = lambda a, q: float(np.percentile(a, q)) if len(a) else 0.0
     occ = engine.stats["slot_occupancy"]
     st = engine.stats
@@ -306,6 +338,12 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         "total_tokens": total_tokens,
         "elapsed_s": elapsed,
         "throughput_tok_s": total_tokens / elapsed,
+        # goodput counts tokens from FINISHED requests only — work spent
+        # on requests that later timed out / cancelled / failed is waste
+        "goodput_tok_s": good_tokens / elapsed,
+        "status_counts": status_counts,
+        "preempted": st["preemptions"],
+        "shed": st["shed"],
         "decode_steps": engine.stats["decode_steps"],
         # per-DECODE-step commit rate: each request's first token is
         # prefill-sampled and never passed through a decode step, so it
@@ -335,6 +373,12 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         f"→ {metrics['throughput_tok_s']:.1f} tok/s; "
         f"mean occupancy {metrics['mean_slot_occupancy']:.2f}/"
         f"{engine.ec.n_slots} slots")
+    log(f"status: finished {status_counts['finished']} / "
+        f"timeout {status_counts['timeout']} / "
+        f"cancelled {status_counts['cancelled']} / "
+        f"rejected {status_counts['rejected']} / "
+        f"preempted {st['preemptions']} / failed {status_counts['failed']}; "
+        f"goodput {metrics['goodput_tok_s']:.1f} tok/s (FINISHED only)")
     log(f"TTFT p50/p95/p99: {metrics['ttft_s']['p50']*1e3:.1f}/"
         f"{metrics['ttft_s']['p95']*1e3:.1f}/"
         f"{metrics['ttft_s']['p99']*1e3:.1f} ms; per-token p50/p95/p99: "
@@ -452,6 +496,21 @@ def main() -> None:
     p.add_argument("--rate", type=float, default=8.0, help="req/s (Poisson)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
+    p.add_argument("--deadline-s", type=float, default=0.0,
+                   help="per-request deadline (seconds from submit): past "
+                        "it requests retire as TIMEOUT, waiting or "
+                        "mid-decode (0 → no deadlines)")
+    p.add_argument("--cancel-rate", type=float, default=0.0,
+                   help="fraction of requests cancelled client-side at a "
+                        "random point after arrival (0 → none)")
+    p.add_argument("--max-waiting", type=int, default=0,
+                   help="bound the waiting queue: beyond it submit sheds "
+                        "the earliest-deadline waiting request as REJECTED "
+                        "(0 → unbounded)")
+    p.add_argument("--preempt-after-stalls", type=int, default=0,
+                   help="page-pressure preemption: after this many "
+                        "consecutive fully-stalled admission steps, evict "
+                        "the youngest running slot (0 → off)")
     p.add_argument("--bcr-keep", type=float, default=0.0)
     p.add_argument("--bcr-block", type=int, default=0,
                    help="BCR block side; 0 → 16 for --smoke configs "
@@ -511,7 +570,9 @@ def main() -> None:
         page_size=args.page_size, kv_pages=args.kv_pages or None,
         prefix_cache=args.prefix_cache,
         spec_k=args.spec_k, draft_cfg=draft_cfg,
-        kv_dtype=args.kv_dtype),
+        kv_dtype=args.kv_dtype,
+        max_waiting=args.max_waiting or None,
+        preempt_after_stalls=args.preempt_after_stalls),
         draft_params=draft_params)
     # mixed prompt lengths around --prompt-len, clamped so every request
     # fits its slot (prompt + gen + spec headroom ≤ capacity;
@@ -530,7 +591,8 @@ def main() -> None:
         n_requests=args.requests, rate=args.rate, gen_tokens=args.gen,
         prompt_lens=plens,
         temperature=args.temperature, top_k=args.top_k,
-        system_prompts=args.system_prompts, system_len=args.system_len)
+        system_prompts=args.system_prompts, system_len=args.system_len,
+        deadline_s=args.deadline_s, cancel_rate=args.cancel_rate)
     metrics = run_traffic(engine, tc)
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -4,20 +4,32 @@ Layering (docs/serving.md has the full picture):
 
   kv_slots    — slot-based KV/recurrent-state pools with per-slot lengths
                 (capacity-dense SlotPool, block-paged PagedSlotPool)
-  scheduler   — FCFS request queue: admission into free slots, retirement
+  scheduler   — FCFS request queue: admission into free slots, retirement;
+                per-request lifecycle statuses (QUEUED → RUNNING →
+                FINISHED/TIMEOUT/CANCELLED/REJECTED/FAILED, with
+                PREEMPTED→requeued under page pressure)
   engine      — InferenceEngine: batched prefill for prompt ingestion, one
                 jit'd ragged decode step (optionally over block-paged KV),
                 greedy/temperature/top-k sampling; with spec_k > 0 each
-                step is a speculative draft→verify→accept iteration
+                step is a speculative draft→verify→accept iteration;
+                deadlines, cancellation, load shedding and NaN-logit
+                containment ride the same step loop
   speculative — drafters (DraftModel: a small second causal_lm;
                 OracleDraft: synthetic replay) + acceptance rules
+  faults      — deterministic FaultInjector chaos harness + StepWatchdog
+                (EWMA slow-step detector) + FakeClock for tests
 """
 
 from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: F401
+from repro.serving.faults import (  # noqa: F401
+    FakeClock, FaultInjector, StepWatchdog,
+)
 from repro.serving.kv_slots import (  # noqa: F401
     PagedSlotPool, SlotPool, seat_prefill,
 )
-from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request, Scheduler, TERMINAL,
+)
 from repro.serving.speculative import (  # noqa: F401
     DraftModel, OracleDraft, accept_draft,
 )

@@ -59,7 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -67,8 +67,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import model_fns
+from repro.serving.faults import StepWatchdog
 from repro.serving.kv_slots import PagedSlotPool, SlotPool
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import (CANCELLED, FAILED, REJECTED, TIMEOUT,
+                                     Request, Scheduler)
 
 PyTree = Any
 
@@ -158,12 +160,27 @@ class EngineConfig:
     # prices halved weight bytes). "" keeps the model's own dtypes.
     kv_dtype: str = ""
     weight_dtype: str = ""
+    # lifecycle hardening: max_waiting bounds the waiting queue — beyond it
+    # submit() sheds the waiting request with the earliest absolute deadline
+    # (ties: oldest rid; no deadline sorts last) as REJECTED.
+    # preempt_after_stalls > 0 arms page-pressure preemption: when the FCFS
+    # head stalls on pages for more than that many consecutive steps, the
+    # youngest RUNNING slot is evicted (its generated tokens fold into its
+    # prompt, so re-prefill — cheap under the prefix cache — replays them
+    # bit-identically). watchdog_threshold scales the EWMA slow-step
+    # detector (0 disables); fault_injector takes a
+    # ``serving/faults.py`` FaultInjector for chaos testing.
+    max_waiting: Optional[int] = None
+    preempt_after_stalls: int = 0
+    watchdog_threshold: float = 3.0
+    fault_injector: Any = None
 
 
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree,
                  ec: Optional[EngineConfig] = None, *,
-                 draft_params: PyTree = None, drafter: Any = None):
+                 draft_params: PyTree = None, drafter: Any = None,
+                 clock: Optional[Callable[[], float]] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "InferenceEngine serves decoder-only families; encdec "
@@ -236,6 +253,12 @@ class InferenceEngine:
                                      min_bucket=ec.min_bucket)
         self.drafter = drafter
         self._rng = np.random.default_rng(ec.seed)
+        # injectable clock: deadlines, latency timestamps and the watchdog
+        # all read it, so tests drive time deterministically (FakeClock)
+        self._clock: Callable[[], float] = clock or time.perf_counter
+        self.faults = ec.fault_injector
+        self._step_idx = -1      # engine step counter (fault schedule index)
+        self._stall_steps = 0    # consecutive fully-page-stalled steps
         # per-decode-step KV traffic accounting (BENCH/bench reporting):
         # bytes one cache position (K+V + any sibling scale leaves, all
         # attention layers) costs to read — derived from the ACTUAL pool
@@ -245,14 +268,20 @@ class InferenceEngine:
 
         # sampling is fused into the prefill/decode programs: one dispatch
         # per engine step — at small model scale the extra host round-trip
-        # of a separate sampling call costs as much as the step itself
+        # of a separate sampling call costs as much as the step itself.
+        # Each program also returns a per-row finite-logits flag (a cheap
+        # isfinite reduction over the sampled row) riding the transfer the
+        # tokens already pay — the host fails ONLY the offending request on
+        # a poisoned row instead of propagating garbage tokens.
         def prefill_sample(p, toks, length, mask, key, temps, topks,
                            use_topk):
             logits, pcache = fns.prefill(p, {"tokens": toks,
                                              "length": length,
                                              "token_mask": mask})
-            tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
-            return tok, pcache
+            last = logits[:, -1]
+            ok = jnp.isfinite(last).all(axis=-1)
+            tok = sample_tokens(last, key, temps, topks, use_topk)
+            return tok, ok, pcache
 
         def decode_sample(p, toks, lens, cache, key, temps, topks, bt,
                           use_topk):
@@ -263,16 +292,20 @@ class InferenceEngine:
                 p, {"tokens": toks, "cache_len": lens,
                     "block_tables": bt,
                     "token_mask": (lens > 0)[:, None]}, cache)
-            tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
-            return tok, cache
+            last = logits[:, -1]
+            ok = jnp.isfinite(last).all(axis=-1)
+            tok = sample_tokens(last, key, temps, topks, use_topk)
+            return tok, ok, cache
 
         def append_sample(p, toks, plen, slen, cache, bt, key, temps,
                           topks, use_topk):
             logits, cache = fns.prefill_append(
                 p, {"tokens": toks, "prefix_len": plen, "length": slen,
                     "block_tables": bt}, cache)
-            tok = sample_tokens(logits[:, -1], key, temps, topks, use_topk)
-            return tok, cache
+            last = logits[:, -1]
+            ok = jnp.isfinite(last).all(axis=-1)
+            tok = sample_tokens(last, key, temps, topks, use_topk)
+            return tok, ok, cache
 
         def verify_logits(p, toks, plen, slen, cache, bt, greedy_only):
             # speculative verification: score every suffix position in one
@@ -286,9 +319,14 @@ class InferenceEngine:
             logits, cache = fns.prefill_append(
                 p, {"tokens": toks, "prefix_len": plen, "length": slen,
                     "block_tables": bt, "all_logits": True}, cache)
+            # finite check over the REAL suffix rows only (pad rows past
+            # slen carry garbage by construction)
+            pad = jnp.arange(logits.shape[1])[None, :] >= slen[:, None]
+            ok = jnp.all(jnp.isfinite(logits).all(axis=2) | pad, axis=1)
             if greedy_only:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
-            return logits, cache
+                return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                        ok, cache)
+            return logits, ok, cache
 
         self._prefill = jax.jit(prefill_sample,
                                 static_argnames=("use_topk",))
@@ -316,29 +354,74 @@ class InferenceEngine:
 
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
                temperature: float = 0.0, top_k: int = 0,
-               eos_id: Optional[int] = None, arrival_time: float = 0.0) -> int:
+               eos_id: Optional[int] = None, arrival_time: float = 0.0,
+               deadline_s: float = 0.0) -> int:
+        """Enqueue a request; returns its rid. A request the engine can
+        NEVER seat (slot capacity / page pool too small) is retired
+        immediately as REJECTED — the rid still comes back, so an open-loop
+        driver keeps running and reads the status off the finished list.
+        ``deadline_s`` > 0 arms a wall-clock deadline (engine clock,
+        measured from this submit): expired requests retire as TIMEOUT
+        whether waiting or mid-decode."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
+        req = Request(
+            prompt=prompt, max_new_tokens=max_new_tokens,
+            temperature=temperature, top_k=top_k, eos_id=eos_id,
+            arrival_time=arrival_time, deadline_s=float(deadline_s),
+            submit_time=self._clock())
         # speculative decoding scratch: the verify dispatch writes up to
         # spec_k draft K/V rows past the commit frontier before acceptance
         # rolls them back, so the slot needs that much extra headroom
         total = prompt.size + max_new_tokens + self._headroom()
         if total > self.ec.capacity:
-            raise ValueError(
+            self.stats["rejected"] += 1
+            return self.sched.reject(
+                req,
                 f"prompt_len {prompt.size} + max_new_tokens {max_new_tokens}"
                 + (f" + spec_k {self.ec.spec_k}" if self.spec else "")
                 + f" exceeds slot capacity {self.ec.capacity}")
         if self.paged:
             need = self.pool.pages_needed(total)
             if need > self.pool.n_pages - 1:
-                raise ValueError(
+                self.stats["rejected"] += 1
+                return self.sched.reject(
+                    req,
                     f"request needs {need} KV pages but the pool only has "
                     f"{self.pool.n_pages - 1} allocatable pages")
-        return self.sched.submit(Request(
-            prompt=prompt, max_new_tokens=max_new_tokens,
-            temperature=temperature, top_k=top_k, eos_id=eos_id,
-            arrival_time=arrival_time))
+        rid = self.sched.submit(req)
+        if (self.ec.max_waiting
+                and len(self.sched.waiting) > self.ec.max_waiting):
+            # load shedding: drop the waiting request least likely to make
+            # its deadline — earliest absolute deadline first (no-deadline
+            # requests sort last, ties break oldest-rid)
+            victim = min(
+                self.sched.waiting,
+                key=lambda r: ((r.submit_time + r.deadline_s)
+                               if r.deadline_s > 0 else float("inf"),
+                               r.rid))
+            self.sched.drop_waiting(victim, REJECTED,
+                                    "shed: waiting queue full")
+            self.stats["shed"] += 1
+        return rid
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Cancel a request by rid, waiting or mid-decode. A running
+        request's slot retires immediately and its KV pages / prefix
+        refcounts (and any drafter rows) release. Returns the request (now
+        CANCELLED), or None if the rid is not live — already terminal or
+        unknown — which makes racing a cancel against completion a no-op."""
+        for slot, req in list(self.sched.active.items()):
+            if req.rid == rid:
+                self._release(slot)
+                self.stats["cancelled"] += 1
+                return self.sched.retire(slot, CANCELLED)
+        for req in list(self.sched.waiting):
+            if req.rid == rid:
+                self.stats["cancelled"] += 1
+                return self.sched.drop_waiting(req, CANCELLED)
+        return None
 
     # -- internals ---------------------------------------------------------
 
@@ -402,31 +485,49 @@ class InferenceEngine:
         tiers.append(self.ec.n_slots)
         return tiers
 
-    def _finish_admission(self, group: List, tok_dev) -> None:
+    def _finish_admission(self, group: List, tok_dev, ok_dev
+                          ) -> List[Request]:
         """Shared post-dispatch bookkeeping: record the prefill-sampled
         first token and per-request timing, publish full prompt pages into
-        the prefix index when sharing is on."""
+        the prefix index when sharing is on. Rows whose logits came back
+        non-finite retire as FAILED right here — no token is recorded and
+        their (possibly poisoned) prompt never enters the prefix index.
+        Returns the failed requests."""
         toks_host = np.asarray(tok_dev)
-        now = time.perf_counter()
+        ok = np.asarray(ok_dev)
+        now = self._clock()
+        failed: List[Request] = []
+        alive: List = []
         for i, (req, slot) in enumerate(group):
             self._temps[slot] = req.temperature
             self._topks[slot] = req.top_k
+            if not ok[i]:
+                req.error = "non-finite logits at prefill"
+                self._release(slot)
+                failed.append(self.sched.retire(slot, FAILED))
+                self.stats["failed"] += 1
+                continue
             tok = int(toks_host[i])
             req.admit_time = now
-            req.first_token_time = now
+            if req.first_token_time == 0.0:
+                # preserved across preemption re-admissions: TTFT measures
+                # the FIRST first-token, not the re-prefill's
+                req.first_token_time = now
             req.generated.append(tok)
             req.token_times.append(now)
             self._tokens[slot, 0] = tok
             self.stats["tokens_generated"] += 1
             if self.prefix_cache:
                 self.pool.register_prefix(slot, req.prompt)
-        if self.spec:
+            alive.append((req, slot))
+        if self.spec and alive:
             # the drafter builds its own full-prompt cache (no prefix
             # sharing on its side — prefix-hit admissions prefill the
             # whole prompt here, at drafter scale)
-            self.drafter.admit([(req, slot) for req, slot in group])
+            self.drafter.admit(alive)
+        return failed
 
-    def _admit_group(self, group: List) -> None:
+    def _admit_group(self, group: List) -> List[Request]:
         """ONE prefill dispatch for a batch of admissions. Prompts are
         right-padded to the largest member's bucket (causality keeps pads
         invisible; per-row ``length`` reads the true last-token logits) and
@@ -452,16 +553,16 @@ class InferenceEngine:
             topks[i] = req.top_k
             slots[i] = slot
         slots[k:] = slots[0]
-        tok_dev, pcache = self._prefill(
+        tok_dev, ok_dev, pcache = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             jnp.asarray(mask), self._next_key(), jnp.asarray(temps),
             jnp.asarray(topks), use_topk=bool(topks.any()))
         self.pool.insert_rows(pcache, slots, lens[:k])
         self.stats["prefills"] += 1
         self.stats["prefill_rows"] += k
-        self._finish_admission(group, tok_dev)
+        return self._finish_admission(group, tok_dev, ok_dev)
 
-    def _admit_group_append(self, group: List) -> None:
+    def _admit_group_append(self, group: List) -> List[Request]:
         """ONE prefill-append dispatch for a batch of prefix-hit
         admissions: only each request's uncached suffix is computed,
         attending to its adopted prefix pages through the block tables.
@@ -513,7 +614,7 @@ class InferenceEngine:
         w = min(w, self.pool.max_pages)
         bt = np.zeros((k_pad, w), np.int32)
         bt[:k] = self.pool.table[slots[:k], :w]
-        tok_dev, self.pool.cache = self._append(
+        tok_dev, ok_dev, self.pool.cache = self._append(
             self.params, jnp.asarray(toks), jnp.asarray(plens),
             jnp.asarray(slens), self.pool.cache, jnp.asarray(bt),
             self._next_key(), jnp.asarray(temps), jnp.asarray(topks),
@@ -524,7 +625,7 @@ class InferenceEngine:
         self.stats["prefill_rows"] += k
         self.stats["prefix_hit_tokens"] += int(sum(r.prefix_hit
                                                    for r, _ in group))
-        self._finish_admission(group, tok_dev)
+        return self._finish_admission(group, tok_dev, ok_dev)
 
     def _should_admit(self) -> bool:
         """Chunked-backfill hysteresis: batch steady-state admissions into
@@ -544,9 +645,29 @@ class InferenceEngine:
         return False
 
     def step(self) -> List[Request]:
-        """One engine iteration; returns requests that finished this step."""
+        """One engine iteration; returns every request that reached a
+        terminal status this step (FINISHED, but also TIMEOUT, CANCELLED
+        and FAILED — check ``Request.status``)."""
+        self._step_idx += 1
+        t_step = self._clock()
+        finished: List[Request] = []
+        faults = self.faults
+        if faults is not None:
+            faults.maybe_sleep(self._step_idx)
+            if faults.fires(self._step_idx, "cancel"):
+                live = sorted([r.rid for r in self.sched.active.values()]
+                              + [r.rid for r in self.sched.waiting])
+                if live:
+                    rid = live[faults.choose(len(live))]
+                    faults.record(self._step_idx, "cancel", rid)
+                    req = self.cancel(rid)
+                    if req is not None:
+                        finished.append(req)
+        finished.extend(self._expire_deadlines())
+
         admitted = self.sched.admit(self.ec.max_admit_per_step) \
             if self._should_admit() else []
+        stalled = False
         if admitted and self.paged:
             # page-budget admission control: each admission reserves its
             # worst-case page count (prompt + max_new_tokens) so a running
@@ -559,35 +680,57 @@ class InferenceEngine:
             # first adopts each prompt's cached full-page prefix and only
             # reserves the uncached-suffix budget.
             fit = len(admitted)
-            for i, (req, slot) in enumerate(admitted):
-                total = (req.prompt_len + req.max_new_tokens
-                         + self._headroom())
-                if self.prefix_cache:
-                    hit = self.pool.admit_prefix(slot, req.prompt, total)
-                    if hit is None:
+            if faults is not None and faults.fires(self._step_idx,
+                                                   "page_alloc"):
+                # injected allocator failure: the whole admission wave
+                # behaves as if the pool were exhausted (stall path)
+                faults.record(self._step_idx, "page_alloc")
+                fit = 0
+            else:
+                for i, (req, slot) in enumerate(admitted):
+                    # folded preemption tokens are part of the prompt now,
+                    # but only max_new_tokens - folded generations remain:
+                    # the total is invariant across folds
+                    total = (req.prompt_len - req.folded
+                             + req.max_new_tokens + self._headroom())
+                    if self.prefix_cache:
+                        hit = self.pool.admit_prefix(slot, req.prompt, total)
+                        if hit is None:
+                            fit = i
+                            break
+                        req.prefix_hit = hit
+                        self.stats["pages_shared"] += -(-hit
+                                                        // self.pool.page_size)
+                    elif not self.pool.reserve(slot, total):
                         fit = i
                         break
-                    req.prefix_hit = hit
-                    self.stats["pages_shared"] += -(-hit
-                                                    // self.pool.page_size)
-                elif not self.pool.reserve(slot, total):
-                    fit = i
-                    break
             for req, slot in reversed(admitted[fit:]):
                 self.sched.requeue(slot)
                 self.stats["page_stalls"] += 1
+            stalled = fit == 0
             admitted = admitted[:fit]
+        if stalled and self.ec.preempt_after_stalls > 0:
+            # page-pressure preemption: when the FCFS head has stalled past
+            # the defer budget and slots are still running, evict the
+            # youngest running request so the head can seat next step
+            self._stall_steps += 1
+            if (self._stall_steps > self.ec.preempt_after_stalls
+                    and self.sched.active):
+                self._preempt_youngest()
+                self._stall_steps = 0
+        elif admitted or not self.sched.waiting:
+            self._stall_steps = 0
         if admitted:
             self._defer_steps = 0
             hits = [(r, s) for r, s in admitted if r.prefix_hit > 0]
             cold = [(r, s) for r, s in admitted if r.prefix_hit == 0]
             if hits:
                 # prefix-hit admissions share ONE suffix-only dispatch
-                self._admit_group_append(hits)
+                finished.extend(self._admit_group_append(hits))
             if cold and self.pad_prefill:
                 # padded families: ONE merged dispatch for the whole batch
                 # of admissions, whatever their prompt lengths
-                self._admit_group(cold)
+                finished.extend(self._admit_group(cold))
             elif cold:
                 # recurrent families prefill at exact length (pads would
                 # advance the state) — group by exact prompt length
@@ -595,22 +738,21 @@ class InferenceEngine:
                 for req, slot in cold:
                     groups.setdefault(req.prompt_len, []).append((req, slot))
                 for group in groups.values():
-                    self._admit_group(group)
+                    finished.extend(self._admit_group(group))
 
-        finished: List[Request] = []
         # requests whose first (prefill-sampled) token already completed them
         for slot, req in list(self.sched.active.items()):
             if req.is_finished():
                 self._release(slot)
                 finished.append(self.sched.retire(slot))
         if not self.sched.active:
-            self._sync_pool_stats()
+            self._finish_step(t_step)
             return finished
 
         self.stats["slot_occupancy"].append(len(self.sched.active))
         if self.spec:
             finished.extend(self._spec_step())
-            self._sync_pool_stats()
+            self._finish_step(t_step)
             return finished
         if self.paged:
             bt = self._prepare_paged_writes(
@@ -621,16 +763,30 @@ class InferenceEngine:
             rows = self.ec.n_slots * self.ec.capacity
             self.stats["kv_bytes_read"] += rows * self._kv_row_bytes
             self.stats["kv_bytes_read_live"] += rows * self._kv_row_bytes
-        tok_dev, self.pool.cache = self._decode(
+        tok_dev, ok_dev, self.pool.cache = self._decode(
             self.params, jnp.asarray(self._tokens),
             jnp.asarray(self.pool.lens), self.pool.cache,
             self._next_key(), jnp.asarray(self._temps),
             jnp.asarray(self._topks), bt, use_topk=bool(self._topks.any()))
         next_tok = np.asarray(tok_dev)
-        now = time.perf_counter()
+        ok = np.array(ok_dev)      # writable: the fault hook may flip a row
+        if faults is not None and faults.fires(self._step_idx, "nan_logits"):
+            slots_live = sorted(self.sched.active)
+            victim = slots_live[faults.choose(len(slots_live))]
+            faults.record(self._step_idx, "nan_logits", victim)
+            ok[victim] = False
+        now = self._clock()
         self.stats["decode_steps"] += 1
 
         for slot, req in list(self.sched.active.items()):
+            if not ok[slot]:
+                # containment: fail ONLY the poisoned row — its token is
+                # garbage, so nothing is emitted and the slot retires
+                req.error = "non-finite logits at decode"
+                self._release(slot)
+                finished.append(self.sched.retire(slot, FAILED))
+                self.stats["failed"] += 1
+                continue
             tok = int(next_tok[slot])
             req.generated.append(tok)
             req.token_times.append(now)
@@ -640,13 +796,77 @@ class InferenceEngine:
             if req.is_finished():
                 self._release(slot)
                 finished.append(self.sched.retire(slot))
-        self._sync_pool_stats()
+        self._finish_step(t_step)
         return finished
+
+    def _finish_step(self, t_start: float) -> None:
+        """End-of-step bookkeeping shared by every return path: mirror pool
+        counters and feed the step duration to the watchdog."""
+        self._sync_pool_stats()
+        if self._watchdog is not None:
+            self._watchdog.record(self._clock() - t_start)
+            self.stats["watchdog_slow_steps"] = self._watchdog.slow_steps
+            self.stats["step_time_ewma"] = self._watchdog.ewma
 
     def _release(self, slot: int) -> None:
         self.pool.release(slot)
         if self.spec:
             self.drafter.release(slot)
+
+    def _expire_deadlines(self) -> List[Request]:
+        """Retire every live request whose deadline has passed (TIMEOUT)."""
+        out: List[Request] = []
+        now = self._clock()
+        for req in list(self.sched.waiting):
+            if req.deadline_s > 0 and now > req.submit_time + req.deadline_s:
+                out.append(self.sched.drop_waiting(
+                    req, TIMEOUT, "deadline expired while queued"))
+                self.stats["timeouts"] += 1
+        for slot, req in list(self.sched.active.items()):
+            if req.deadline_s > 0 and now > req.submit_time + req.deadline_s:
+                req.error = "deadline expired mid-decode"
+                self._release(slot)
+                out.append(self.sched.retire(slot, TIMEOUT))
+                self.stats["timeouts"] += 1
+        return out
+
+    def _preempt_youngest(self) -> Request:
+        """Page-pressure eviction: fold the victim's generated tokens into
+        its prompt (so the re-prefill replays them and samples exactly the
+        next token — bit-identical under greedy), release its slot + pages,
+        and requeue it behind the stalled FCFS head. The reservation
+        total ``prompt_len - folded + max_new_tokens`` is invariant across
+        folds, so an admitted request always re-fits eventually."""
+        slot, req = max(self.sched.active.items(),
+                        key=lambda kv: (kv[1].admit_time, kv[1].rid))
+        new = req.generated[req.folded:]
+        if new:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(new, np.int32)])
+            req.folded = len(req.generated)
+        self._release(slot)
+        self.stats["preemptions"] += 1
+        return self.sched.preempt(slot)
+
+    def check_conservation(self) -> None:
+        """Assert nothing leaked once the engine drains: every slot free,
+        no live requests, and (paged) every non-null page accounted for
+        with consistent refcounts. Chaos tests call this after mixed-fault
+        runs; it is cheap enough to call in benches too."""
+        assert not self.sched.active and not self.sched.waiting, \
+            "check_conservation() needs a drained engine"
+        assert self.sched.free_slots() == self.ec.n_slots, "leaked slots"
+        if self.paged:
+            self.pool.check_consistency()
+            idle = self.pool.idle_pages()
+            assert idle == self.pool.n_pages - 1, \
+                f"leaked {self.pool.n_pages - 1 - idle} KV pages"
+        else:
+            assert int(np.asarray(self.pool.lens).sum()) == 0, \
+                "leaked slot lengths"
+        if self.spec and hasattr(self.drafter, "pool"):
+            assert int(np.asarray(self.drafter.pool.lens).sum()) == 0, \
+                "leaked drafter slot lengths"
 
     def _prepare_paged_writes(self, write_lens: Dict[int, int],
                               extra: int) -> jax.Array:
@@ -699,8 +919,22 @@ class InferenceEngine:
         from repro.serving.speculative import accept_draft, accept_greedy
         active = sorted(self.sched.active.items())
         tlens = self.pool.lens.copy()
-        proposals = self.drafter.propose(active, tlens, self.ec.spec_k,
-                                         self._rng)
+        faults = self.faults
+        try:
+            if faults is not None and faults.fires(self._step_idx,
+                                                   "drafter"):
+                faults.record(self._step_idx, "drafter")
+                raise RuntimeError("injected drafter failure")
+            proposals = self.drafter.propose(active, tlens, self.ec.spec_k,
+                                             self._rng)
+        except Exception:
+            # drafter containment: a failed propose degrades this round to
+            # a zero-draft verify — exactly a plain decode step. A drafter
+            # whose internal state desynced (DraftModel asserts catch-up ≤
+            # 1) keeps failing here, so the engine permanently degrades to
+            # 1-token steps instead of crashing; output is unchanged.
+            self.stats["drafter_failures"] += 1
+            proposals = {slot: ([], None) for slot, _ in active}
         s_max = self.ec.spec_k + 1
         toks = np.zeros((self.ec.n_slots, s_max), np.int32)
         plens = np.zeros((self.ec.n_slots,), np.int32)
@@ -717,17 +951,31 @@ class InferenceEngine:
         # logits — at real vocab sizes that is the difference between a
         # few KB and a few MB on the device-host link every step
         greedy_only = all(req.temperature <= 0 for _, req in active)
-        out_dev, self.pool.cache = self._verify(
+        out_dev, ok_dev, self.pool.cache = self._verify(
             self.params, jnp.asarray(toks), jnp.asarray(plens),
             jnp.asarray(slens), self.pool.cache, bt,
             greedy_only=greedy_only)
         out = np.asarray(out_dev)
-        now = time.perf_counter()
+        ok = np.array(ok_dev)      # writable: the fault hook may flip a row
+        if faults is not None and faults.fires(self._step_idx, "nan_logits"):
+            victim = active[faults.choose(len(active))][0]
+            faults.record(self._step_idx, "nan_logits", victim)
+            ok[victim] = False
+        now = self._clock()
         self.stats["decode_steps"] += 1
         self.stats["spec_steps"] += 1
 
         finished: List[Request] = []
         for slot, req in active:
+            if not ok[slot]:
+                # containment: every token this verify scored for the slot
+                # is suspect — emit nothing, fail the request, release its
+                # pages (including the draft rows past the frontier)
+                req.error = "non-finite logits at verify"
+                self._release(slot)
+                finished.append(self.sched.retire(slot, FAILED))
+                self.stats["failed"] += 1
+                continue
             props, qrows = proposals[slot]
             n = len(props)
             if greedy_only:
@@ -771,7 +1019,14 @@ class InferenceEngine:
                           prefix_hit_tokens=0, pages_shared=0,
                           cow_copies=0, evictions=0, pages_allocated=0,
                           spec_steps=0, draft_proposed=0, draft_accepted=0,
-                          accepted_hist=[0] * (self.ec.spec_k + 1))
+                          accepted_hist=[0] * (self.ec.spec_k + 1),
+                          preemptions=0, shed=0, rejected=0, timeouts=0,
+                          cancelled=0, failed=0, drafter_failures=0,
+                          watchdog_slow_steps=0, step_time_ewma=0.0)
+        # fresh watchdog per reset: warmup's compile-heavy steps must not
+        # seed the EWMA the measured window is judged against
+        self._watchdog = (StepWatchdog(threshold=self.ec.watchdog_threshold)
+                          if self.ec.watchdog_threshold > 0 else None)
         if self.paged:
             self.pool.reset_stats()
 
@@ -832,7 +1087,7 @@ class InferenceEngine:
                         # the table width to a power of two, so every
                         # (suffix bucket × row tier × width) program must
                         # exist before measured traffic.
-                        _, self.pool.cache = self._append(
+                        _, _, self.pool.cache = self._append(
                             self.params,
                             jnp.zeros((tier, sb), jnp.int32),
                             jnp.zeros((tier,), jnp.int32),
@@ -859,7 +1114,7 @@ class InferenceEngine:
                 for w in widths:
                     bt = jnp.zeros((self.ec.n_slots, w), jnp.int32)
                     for greedy_only in (True, False):  # both static paths
-                        _, self.pool.cache = self._verify(
+                        _, _, self.pool.cache = self._verify(
                             self.params, toks, lens0, lens0,
                             self.pool.cache, bt, greedy_only=greedy_only)
                 if hasattr(self.drafter, "warmup"):
@@ -871,7 +1126,7 @@ class InferenceEngine:
                 for w in widths:
                     bt = jnp.zeros((self.ec.n_slots, w), jnp.int32)
                     for use_topk in (False, True):  # both sample paths
-                        _, self.pool.cache = self._decode(
+                        _, _, self.pool.cache = self._decode(
                             self.params, toks, lens0, self.pool.cache,
                             self._next_key(), zeros,
                             zeros.astype(jnp.int32), bt, use_topk=use_topk)
@@ -896,4 +1151,7 @@ class InferenceEngine:
                             temperature=temperature, top_k=top_k,
                             eos_id=eos_id) for p in prompts]
         by_rid = {r.rid: r for r in self.run()}
-        return [by_rid[rid].generated for rid in rids]
+        # requests rejected at submit never pass through run(); they come
+        # back as empty generations rather than a KeyError
+        return [by_rid[rid].generated if rid in by_rid else []
+                for rid in rids]

@@ -614,3 +614,54 @@ class PagedSlotPool:
         self._n_alloc[slot] = 0
         self._set_reserved(slot, 0)
         self.lens[slot] = 0
+
+    def idle_pages(self) -> int:
+        """Non-null pages held by no slot: free list + LRU-parked prefix
+        pages. On a fully drained pool this equals ``n_pages - 1``; the
+        chaos harness checks exactly that to prove nothing leaked."""
+        return len(self._free) + len(self._lru)
+
+    def check_consistency(self) -> None:
+        """Audit the allocator's bookkeeping against the tables themselves.
+
+        Rebuilds every page's reference count from the slot tables and
+        asserts the conservation invariants the chaos tests rely on: each
+        non-null page is in exactly one of {free list, LRU, live}; stored
+        refcounts match the rebuilt ones; reservation totals agree; and
+        free + LRU + live + null covers the pool exactly. Cheap (host-side
+        ints only), so callable mid-run too."""
+        ref = np.zeros((self.n_pages,), np.int64)
+        for slot in range(self.n_slots):
+            n = int(self._n_alloc[slot])
+            for pid in self.table[slot, :n]:
+                assert int(pid) != 0, f"null page in live table of slot {slot}"
+                ref[int(pid)] += 1
+            assert not self.table[slot, n:].any(), \
+                f"slot {slot} table non-zero past its {n} allocated pages"
+            assert self.pages_needed(int(self.lens[slot])) <= n, \
+                f"slot {slot} length {int(self.lens[slot])} overruns its " \
+                f"{n} allocated pages"
+        free = list(self._free)
+        free_set = set(free)
+        assert len(free) == len(free_set), "duplicate pages on the free list"
+        assert 0 not in free_set and 0 not in self._lru, \
+            "null page entered the free/LRU lists"
+        for pid in range(1, self.n_pages):
+            states = ((pid in free_set) + (pid in self._lru)
+                      + (ref[pid] > 0))
+            assert states == 1, \
+                f"page {pid} in {states} of free/LRU/live (refs={ref[pid]})"
+            assert int(self._refcount[pid]) == int(ref[pid]), \
+                f"page {pid} refcount {int(self._refcount[pid])} != " \
+                f"{int(ref[pid])} table references"
+            if pid in self._lru:
+                assert pid in self._page_key, \
+                    f"LRU page {pid} missing from the prefix index"
+            if pid in free_set:
+                assert pid not in self._page_key, \
+                    f"free page {pid} still registered in the prefix index"
+        assert self._reserved_total == int(self._reserved.sum()), \
+            "reservation total out of sync with per-slot reservations"
+        live = int((ref > 0).sum())
+        assert len(free) + len(self._lru) + live + 1 == self.n_pages, \
+            "free + LRU + live + null does not cover the pool"

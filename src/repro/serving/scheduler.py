@@ -5,6 +5,18 @@ Pure host-side bookkeeping — no jax. The engine drives it each step:
   submit() enqueues; admit() pops waiting requests into free slots (FCFS,
   bounded by ``max_admit`` so prefill work interleaves with decode instead
   of starving running requests); retire() frees a slot for reuse.
+
+Every request carries a ``status`` that walks a small state machine::
+
+    QUEUED -> RUNNING -> FINISHED | TIMEOUT | CANCELLED | FAILED
+       |         |
+       |         +-> PREEMPTED -> (waiting again) -> RUNNING -> ...
+       +-> TIMEOUT | CANCELLED | REJECTED          (dropped while waiting)
+
+``REJECTED`` is assigned at submit time (oversized request or load shed);
+``PREEMPTED`` is the observable waiting-after-eviction state and clears back
+to RUNNING on re-admission. Exactly one terminal status per request; the
+engine appends each request to ``finished`` exactly once, when it reaches one.
 """
 
 from __future__ import annotations
@@ -15,6 +27,20 @@ from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# Lifecycle statuses (plain strings so they serialize/log cleanly).
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+FINISHED = "FINISHED"
+TIMEOUT = "TIMEOUT"
+CANCELLED = "CANCELLED"
+REJECTED = "REJECTED"
+PREEMPTED = "PREEMPTED"
+FAILED = "FAILED"
+
+#: Statuses a request can end in. PREEMPTED is transient (the request is
+#: back in the waiting queue and will run again), so it is not terminal.
+TERMINAL = frozenset({FINISHED, TIMEOUT, CANCELLED, REJECTED, FAILED})
 
 
 @dataclasses.dataclass
@@ -27,11 +53,14 @@ class Request:
     top_k: int = 0                      # 0 → no top-k filtering
     eos_id: Optional[int] = None
     arrival_time: float = 0.0           # driver clock, for latency metrics
+    deadline_s: float = 0.0             # 0 → no deadline; else seconds from submit
 
     # filled in by the scheduler/engine
     rid: int = -1
     slot: int = -1
+    status: str = QUEUED
     generated: List[int] = dataclasses.field(default_factory=list)
+    submit_time: float = 0.0            # engine clock at submit (deadline base)
     admit_time: float = 0.0
     first_token_time: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
@@ -39,6 +68,12 @@ class Request:
     # (0 = cold / sharing off); reset on requeue so a later admission
     # re-matches against the index as it stands then
     prefix_hit: int = 0
+    # preemption bookkeeping: how many times evicted, and how many generated
+    # tokens have been folded into ``prompt`` so re-prefill replays them.
+    # Generated token i lives at absolute position (prompt_len - folded) + i.
+    preemptions: int = 0
+    folded: int = 0
+    error: str = ""                     # reason for FAILED/REJECTED/TIMEOUT
 
     @property
     def prompt_len(self) -> int:
@@ -64,7 +99,16 @@ class Scheduler:
 
     def submit(self, req: Request) -> int:
         req.rid = next(self._ids)
+        req.status = QUEUED
         self.waiting.append(req)
+        return req.rid
+
+    def reject(self, req: Request, reason: str) -> int:
+        """Assign a rid and retire the request immediately as REJECTED."""
+        req.rid = next(self._ids)
+        req.status = REJECTED
+        req.error = reason
+        self.finished.append(req)
         return req.rid
 
     def admit(self, max_admit: Optional[int] = None) -> List[Tuple[Request, int]]:
@@ -77,6 +121,7 @@ class Scheduler:
             req = self.waiting.popleft()
             slot = self._free.popleft()
             req.slot = slot
+            req.status = RUNNING
             self.active[slot] = req
             out.append((req, slot))
         return out
@@ -88,14 +133,43 @@ class Scheduler:
         them in reverse admission order to preserve FCFS."""
         req = self.active.pop(slot)
         req.slot = -1
+        req.status = QUEUED
         req.prefix_hit = 0
         self._free.append(slot)
         self.waiting.appendleft(req)
         return req
 
-    def retire(self, slot: int) -> Request:
+    def preempt(self, slot: int) -> Request:
+        """Evict a RUNNING request back into the waiting queue under page
+        pressure. Unlike :meth:`requeue` (which unwinds a same-step admission
+        to the queue front), the victim re-enters *behind* the stalled head —
+        the head stalled because the victim's pages were needed, so putting
+        the victim first would just re-stall it — but ahead of later arrivals
+        so it is not starved."""
         req = self.active.pop(slot)
+        req.slot = -1
+        req.status = PREEMPTED
+        req.prefix_hit = 0
+        req.preemptions += 1
         self._free.append(slot)
+        # deque.insert clamps to append when index > len.
+        self.waiting.insert(1, req)
+        return req
+
+    def retire(self, slot: int, status: str = FINISHED) -> Request:
+        req = self.active.pop(slot)
+        req.status = status
+        self._free.append(slot)
+        self.finished.append(req)
+        return req
+
+    def drop_waiting(self, req: Request, status: str, reason: str = "") -> Request:
+        """Remove a request from the waiting queue with a terminal status
+        (load shed, timeout, or cancellation before it ever ran)."""
+        self.waiting.remove(req)
+        req.status = status
+        if reason:
+            req.error = reason
         self.finished.append(req)
         return req
 

@@ -234,9 +234,12 @@ class DraftModel:
             tlen = int(target_lens[slot])
             assert 0 <= tlen - dlen <= 1, (slot, dlen, tlen)
             # tokens for positions [dlen, tlen]: trailing committed tokens
-            # the drafter has not ingested, ending with the pending one
-            feeds[slot] = [int(t) for t in
-                           req.generated[dlen - req.prompt_len:]]
+            # the drafter has not ingested, ending with the pending one.
+            # Generated token i sits at absolute position
+            # (prompt_len - folded) + i — preemption folds re-played
+            # tokens into the prompt, so the base shifts by ``folded``.
+            base = req.prompt_len - req.folded
+            feeds[slot] = [int(t) for t in req.generated[dlen - base:]]
         toks = np.zeros((self.n_slots, 1), np.int32)
         for slot, _ in active:
             toks[slot, 0] = feeds[slot][0]

@@ -240,8 +240,10 @@ class TestPagedEngine:
         cfg, fns, params = llama_fns
         eng = InferenceEngine(cfg, params, EngineConfig(
             n_slots=1, capacity=64, page_size=8, kv_pages=3))
-        with pytest.raises(ValueError):
-            eng.submit(np.zeros(20, np.int32), max_new_tokens=8)
+        rid = eng.submit(np.zeros(20, np.int32), max_new_tokens=8)
+        rej = eng.sched.finished[-1]
+        assert rej.rid == rid and rej.status == "REJECTED"
+        assert "pages" in rej.error
 
     def test_recurrent_family_keeps_unpaged_path(self):
         cfg = get_smoke_config("rwkv6-3b")

@@ -1,0 +1,368 @@
+"""Request-lifecycle hardening: randomized chaos sweeps (injected
+page-alloc/NaN/drafter/cancel/slow-step faults) asserting conservation
+invariants across dense/packed/prefix-cache/speculative engines, plus
+deterministic tests for rejection, cancellation, deadlines, page-pressure
+preemption (FCFS preserved across evict→requeue→re-admit), NaN containment
+and the step watchdog."""
+
+import dataclasses
+from collections import Counter
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.api import model_fns
+from repro.serving import (EngineConfig, FakeClock, FaultInjector,
+                           InferenceEngine, OracleDraft, StepWatchdog,
+                           TERMINAL)
+from repro.serving.scheduler import (CANCELLED, FAILED, FINISHED, REJECTED,
+                                     TIMEOUT)
+
+N_SLOTS = 3
+CAPACITY = 64
+GEN = 8
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              bcr_keep_frac=0.25, bcr_block=(16, 16))
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+@pytest.fixture(scope="module")
+def packed(llama):
+    from repro.launch.serve import pack_params
+    cfg, fns, params = llama
+    return pack_params(cfg, params)
+
+
+VARIANTS = ("dense", "packed", "prefix", "spec")
+
+
+def make_engine(variant, llama, packed_params, *, faults=None, clock=None,
+                preempt=0, max_waiting=None, **overrides):
+    cfg, fns, params = llama
+    kw = dict(n_slots=N_SLOTS, capacity=CAPACITY, plan_packed=False,
+              fault_injector=faults, preempt_after_stalls=preempt,
+              max_waiting=max_waiting)
+    drafter = None
+    if variant == "packed":
+        params = packed_params
+    elif variant == "prefix":
+        kw.update(page_size=8, prefix_cache=True)
+    elif variant == "spec":
+        # OracleDraft with no continuations proposes nothing: every step
+        # is a 1-token verify, bit-identical to plain greedy decode
+        kw.update(page_size=8, spec_k=2)
+        drafter = OracleDraft()
+    kw.update(overrides)
+    return InferenceEngine(cfg, params, EngineConfig(**kw),
+                           drafter=drafter, clock=clock)
+
+
+def chaos_prompts(cfg, n, seed=9):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(4, 17))).astype(np.int32)
+            for _ in range(n)]
+
+
+class TestChaosSweep:
+    """300-step seeded randomized fault schedule against every engine
+    variant. The invariants, per ISSUE 7: every submitted rid reaches
+    exactly one terminal status, the page pool ends with zero leaked or
+    over-referenced pages, and requests the faults did not touch produce
+    tokens bit-identical to a fault-free run."""
+
+    N_REQ = 20
+    RATES = {"page_alloc": 0.06, "nan_logits": 0.02, "cancel": 0.03,
+             "slow_step": 0.02, "drafter": 0.05}
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_conservation_under_chaos(self, variant, llama, packed):
+        cfg = llama[0]
+        prompts = chaos_prompts(cfg, self.N_REQ)
+
+        ref_eng = make_engine(variant, llama, packed)
+        ref = ref_eng.generate(prompts, max_new_tokens=GEN)
+        ref_eng.check_conservation()
+
+        clk = FakeClock()
+        faults = FaultInjector(seed=13, sleep=clk.sleep).random_schedule(
+            300, self.RATES, slow_s=0.3)
+        eng = make_engine(variant, llama, packed, faults=faults, clock=clk,
+                          preempt=2, max_waiting=8)
+        rids, done, submitted = [], [], 0
+        for step in range(300):
+            if step % 3 == 0 and submitted < self.N_REQ:
+                rids.append(eng.submit(
+                    prompts[submitted], max_new_tokens=GEN,
+                    deadline_s=2.0 if submitted % 4 == 0 else 0.0))
+                submitted += 1
+            if eng.sched.has_work():
+                done.extend(eng.step())
+            clk.advance(0.01)
+        for _ in range(500):
+            if not eng.sched.has_work():
+                break
+            done.extend(eng.step())
+            clk.advance(0.01)
+        assert not eng.sched.has_work(), "engine failed to drain"
+        assert submitted == self.N_REQ
+
+        # exactly one terminal status per rid, each recorded exactly once
+        finished = eng.sched.finished
+        assert Counter(r.rid for r in finished) == Counter(rids)
+        assert all(r.status in TERMINAL for r in finished)
+        # faults actually happened and didn't take everything down
+        by_status = Counter(r.status for r in finished)
+        assert faults.fired, "chaos schedule never fired"
+        assert by_status[FINISHED] > 0, by_status
+
+        # nothing leaked: pages, refcounts, reservations, slots
+        eng.check_conservation()
+
+        # survivors are bit-identical to the fault-free run (greedy)
+        by_rid = {r.rid: r for r in finished}
+        for i, rid in enumerate(rids):
+            r = by_rid[rid]
+            if r.status == FINISHED:
+                assert r.generated == ref[i], \
+                    (variant, rid, r.preemptions, r.generated, ref[i])
+        if variant == "spec":
+            assert eng.stats["spec_steps"] > 0
+            fired_drafter = any(k == "drafter" for _, k, _ in faults.fired)
+            assert eng.stats["drafter_failures"] > 0 or not fired_drafter
+
+
+class TestPreemption:
+    def test_fcfs_preserved_and_bit_identical(self, llama):
+        """Deterministic page-pressure preemption: pool of 7 allocatable
+        pages, A(3)+B(4) fill it, C(3) stalls → the youngest runner (B)
+        is evicted, C seats, B re-admits after C but before later
+        arrivals, and B's tokens survive evict→requeue→re-admit
+        bit-identically (generated tokens fold into its prompt)."""
+        cfg = llama[0]
+        pa = (np.arange(16) * 5 + 1) % cfg.vocab_size
+        pb = (np.arange(24) * 3 + 2) % cfg.vocab_size
+        pc = (np.arange(16) * 7 + 3) % cfg.vocab_size
+
+        ref_eng = make_engine("dense", llama, None, page_size=8)
+        ref = ref_eng.generate([pa, pb, pc], max_new_tokens=GEN)
+
+        eng = make_engine("dense", llama, None, page_size=8, kv_pages=8,
+                          preempt=1)
+        a = eng.submit(pa, max_new_tokens=GEN)
+        b = eng.submit(pb, max_new_tokens=GEN)
+        for _ in range(3):
+            eng.step()
+        assert set(eng.sched.active) and len(eng.sched.active) == 2
+        c = eng.submit(pc, max_new_tokens=GEN)
+        d = eng.submit(pa.copy(), max_new_tokens=GEN)
+        done = []
+        for _ in range(120):
+            done.extend(eng.step())
+            if not eng.sched.has_work():
+                break
+        assert not eng.sched.has_work()
+        by = {r.rid: r for r in done}
+        assert set(by) == {a, b, c, d}
+        assert eng.stats["preemptions"] == 1
+        assert by[b].preemptions == 1 and by[b].folded > 0
+        # FCFS across the eviction: C (the stalled head) seats before B
+        # re-admits, and D (a later arrival) seats after B
+        assert by[c].admit_time <= by[b].admit_time
+        assert by[b].admit_time <= by[d].admit_time
+        for rid, i in ((a, 0), (b, 1), (c, 2)):
+            assert by[rid].status == FINISHED
+            assert by[rid].generated == ref[i], (rid, i)
+        assert by[d].generated == ref[0]     # same prompt as A
+        eng.check_conservation()
+
+
+class TestRejection:
+    def test_over_pool_request_rejected_not_raised(self, llama):
+        # a request the page pool can never hold comes back REJECTED and
+        # the engine keeps serving
+        eng = make_engine("dense", llama, None, page_size=8, kv_pages=4)
+        rid = eng.submit(np.arange(30, dtype=np.int32), max_new_tokens=8)
+        rej = eng.sched.finished[-1]
+        assert rej.rid == rid and rej.status == REJECTED
+        assert "pages" in rej.error
+        out = eng.generate([np.arange(8, dtype=np.int32)], max_new_tokens=4)
+        assert len(out[0]) == 4
+        eng.check_conservation()
+
+    def test_shedding_drops_earliest_deadline(self, llama):
+        clk = FakeClock()
+        eng = make_engine("dense", llama, None, max_waiting=2, clock=clk,
+                          backfill_chunk=1)
+        # fill every slot so later submissions queue (admit each eagerly —
+        # three queued submits would themselves overflow max_waiting)
+        running = []
+        for _ in range(N_SLOTS):
+            running.append(eng.submit(np.arange(4, dtype=np.int32),
+                                      max_new_tokens=GEN))
+            eng.step()
+        assert len(eng.sched.active) == N_SLOTS
+        tight = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=4,
+                           deadline_s=0.5)
+        loose = eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=4,
+                           deadline_s=50.0)
+        assert len(eng.sched.waiting) == 2
+        # queue now over its bound → the earliest-deadline request sheds
+        trigger = eng.submit(np.arange(7, dtype=np.int32), max_new_tokens=4)
+        shed = next(r for r in eng.sched.finished if r.rid == tight)
+        assert shed.status == REJECTED and "shed" in shed.error
+        assert eng.stats["shed"] == 1
+        done = eng.run()
+        by = {r.rid: r for r in done}
+        assert by[loose].status == FINISHED
+        assert by[trigger].status == FINISHED
+        eng.check_conservation()
+
+
+class TestCancellation:
+    def test_cancel_waiting_and_running(self, llama):
+        eng = make_engine("dense", llama, None, page_size=8)
+        run_rid = eng.submit(np.arange(4, dtype=np.int32),
+                             max_new_tokens=GEN)
+        fill = [eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+                for _ in range(N_SLOTS - 1)]
+        wait_rid = eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=4)
+        eng.step()
+        assert eng.sched.active and eng.sched.waiting
+        got = eng.cancel(wait_rid)
+        assert got is not None and got.status == CANCELLED
+        got = eng.cancel(run_rid)
+        assert got is not None and got.status == CANCELLED
+        assert got.generated              # it had started decoding
+        # cancelling a dead rid is a no-op
+        assert eng.cancel(run_rid) is None
+        assert eng.cancel(10_000) is None
+        done = eng.run()
+        assert {r.rid for r in done} == set(fill)
+        assert all(r.status == FINISHED for r in done)
+        eng.check_conservation()
+        assert eng.stats["cancelled"] == 2
+
+
+class TestDeadlines:
+    def test_timeout_waiting_and_running(self, llama):
+        clk = FakeClock()
+        eng = make_engine("dense", llama, None, page_size=8, clock=clk)
+        run_rid = eng.submit(np.arange(4, dtype=np.int32),
+                             max_new_tokens=64 - 4, deadline_s=1.0)
+        fill = [eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+                for _ in range(N_SLOTS - 1)]
+        wait_rid = eng.submit(np.arange(6, dtype=np.int32),
+                              max_new_tokens=4, deadline_s=1.0)
+        eng.step()
+        clk.advance(2.0)
+        done = eng.step()
+        by = {r.rid: r for r in done}
+        assert by[run_rid].status == TIMEOUT
+        assert by[wait_rid].status == TIMEOUT
+        assert eng.stats["timeouts"] == 2
+        done = eng.run()
+        assert all(r.status == FINISHED for r in done)
+        assert {r.rid for r in done} == set(fill)
+        eng.check_conservation()
+
+
+class TestNaNContainment:
+    def test_injected_nan_fails_only_offender(self, llama):
+        cfg = llama[0]
+        pa = (np.arange(6) + 1) % cfg.vocab_size
+        pb = (np.arange(9) * 2 + 1) % cfg.vocab_size
+        ref = make_engine("dense", llama, None).generate(
+            [pa, pb], max_new_tokens=GEN)
+
+        faults = FaultInjector(seed=0).at(3, "nan_logits")
+        eng = make_engine("dense", llama, None, faults=faults)
+        ra = eng.submit(pa, max_new_tokens=GEN)
+        rb = eng.submit(pb, max_new_tokens=GEN)
+        done = eng.run()
+        by_status = Counter(r.status for r in done)
+        assert by_status == Counter({FAILED: 1, FINISHED: 1})
+        survivor = next(r for r in done if r.status == FINISHED)
+        assert survivor.generated == ref[{ra: 0, rb: 1}[survivor.rid]]
+        victim = next(r for r in done if r.status == FAILED)
+        assert "non-finite" in victim.error
+        eng.check_conservation()
+
+    def test_real_nan_params_fail_cleanly(self, llama):
+        # poison one weight: genuinely non-finite logits on device must
+        # surface as FAILED requests, not an engine crash or garbage tokens
+        cfg, fns, params = llama
+        leaves, td = jax.tree_util.tree_flatten(params)
+        for i, leaf in enumerate(leaves):
+            if (hasattr(leaf, "dtype")
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)):
+                leaves[i] = leaf.at[(0,) * leaf.ndim].set(jnp.nan)
+                break
+        bad = jax.tree_util.tree_unflatten(td, leaves)
+        eng = InferenceEngine(cfg, bad, EngineConfig(
+            n_slots=2, capacity=32, plan_packed=False))
+        eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+        done = eng.run()
+        assert done and all(r.status == FAILED for r in done)
+        assert all(not r.generated for r in done)
+        eng.check_conservation()
+
+
+class TestFaultInjector:
+    def test_schedule_deterministic_and_idempotent(self):
+        a = FaultInjector(seed=3).random_schedule(100, {"cancel": 0.1})
+        b = FaultInjector(seed=3).random_schedule(100, {"cancel": 0.1})
+        hits = [s for s in range(100) if a.fires(s, "cancel")]
+        assert hits == [s for s in range(100) if b.fires(s, "cancel")]
+        assert hits, "0.1 rate over 100 steps should fire"
+        # queries are pure: asking again does not consume the schedule
+        assert all(a.fires(s, "cancel") for s in hits)
+        assert not a.fires(hits[0], "nan_logits")
+        assert a.arg(hits[0], "cancel") == 0.0
+        with pytest.raises(ValueError):
+            a.at(0, "bogus_kind")
+
+    def test_slow_step_uses_injected_sleep(self):
+        clk = FakeClock()
+        fi = FaultInjector(sleep=clk.sleep).at(2, "slow_step", 0.5)
+        fi.maybe_sleep(1)
+        assert clk.now == 0.0
+        fi.maybe_sleep(2)
+        assert clk.now == 0.5
+        assert fi.fired == [(2, "slow_step", 0.5)]
+
+
+class TestStepWatchdog:
+    def test_flags_outlier_before_ewma_absorbs_it(self):
+        wd = StepWatchdog(alpha=0.2, threshold=3.0, min_steps=5)
+        for _ in range(10):
+            assert not wd.record(0.01)
+        assert wd.record(0.1)            # 10x the running EWMA
+        assert wd.slow_steps == 1 and wd.last_flagged
+        assert wd.ewma < 0.05            # flagged first, absorbed after
+        assert not wd.record(0.01)
+
+    def test_quiet_until_min_steps(self):
+        wd = StepWatchdog(min_steps=5)
+        assert not wd.record(10.0)       # huge first sample: no baseline yet
+        for _ in range(3):
+            assert not wd.record(0.01)
+
+    def test_engine_surfaces_watchdog(self, llama):
+        clk = FakeClock()
+        faults = FaultInjector(seed=0, sleep=clk.sleep).at(
+            9, "slow_step", 5.0)
+        eng = make_engine("dense", llama, None, faults=faults, clock=clk)
+        eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=12)
+        eng.run()
+        assert eng.stats["watchdog_slow_steps"] >= 1
+        assert eng.stats["step_time_ewma"] > 0.0

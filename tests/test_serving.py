@@ -189,10 +189,17 @@ class TestEngineEquivalence:
                    for row in outs[0] for t in row)
 
     def test_capacity_guard(self, llama):
+        # oversized requests come back as a REJECTED rid instead of a
+        # ValueError that would kill an open-loop driver
         cfg, fns, params = llama
         eng = InferenceEngine(cfg, params, EngineConfig(n_slots=1, capacity=8))
-        with pytest.raises(ValueError):
-            eng.submit(np.zeros(6, np.int32), max_new_tokens=4)
+        rid = eng.submit(np.zeros(6, np.int32), max_new_tokens=4)
+        rej = eng.sched.finished[-1]
+        assert rej.rid == rid and rej.status == "REJECTED"
+        assert "capacity" in rej.error
+        # the engine still serves later, well-sized requests
+        out = eng.generate([np.zeros(4, np.int32)], max_new_tokens=4)
+        assert len(out[0]) == 4
 
     def test_encdec_rejected(self):
         cfg = get_smoke_config("whisper-large-v3")

@@ -387,8 +387,10 @@ class TestSpecEngine:
         dcfg, dparams = _draft(cfg)
         eng = self._engine(cfg, params, spec_k=4, dcfg=dcfg,
                            dparams=dparams)
-        with pytest.raises(ValueError, match="spec_k"):
-            eng.submit(np.zeros(40, np.int32), max_new_tokens=21)
+        rid = eng.submit(np.zeros(40, np.int32), max_new_tokens=21)
+        rej = eng.sched.finished[-1]
+        assert rej.rid == rid and rej.status == "REJECTED"
+        assert "spec_k" in rej.error
 
     def test_spec_requires_paged_pool(self, llama):
         cfg, fns, params = llama
