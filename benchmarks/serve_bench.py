@@ -558,6 +558,94 @@ def bench_overload(args):
     return row
 
 
+def bench_http(args, overload_row):
+    """HTTP front-end overhead: the overload shed-on workload replayed
+    through the asyncio server (real sockets, SSE streaming) against the
+    in-process shed-on run as baseline. Client-side TTFT is measured from
+    each request's *scheduled* Poisson arrival (open-loop — queueing the
+    client causes counts, like the in-process bench), p99 over FINISHED
+    requests only. The gate (--max-http-ttft-overhead) bounds how much
+    tail latency the HTTP layer — parsing, the cross-thread mailbox, SSE
+    fan-out — may add on top of the engine itself. The run ends with a
+    graceful drain and the engine's conservation check."""
+    import threading
+    from collections import Counter
+
+    from repro.serving.server import (ServerConfig, start_in_thread,
+                                      stream_completion)
+
+    cfg = get_smoke_config(args.arch)
+    params = model_fns(cfg).init_params(jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, EngineConfig(
+        n_slots=args.overload_slots, capacity=args.capacity,
+        page_size=args.page_size, plan_packed=False,
+        max_waiting=args.overload_max_waiting))
+    plens = [4, 8, 12]
+    h = start_in_thread(eng, ServerConfig(), warmup_lens=plens)
+
+    n = args.overload_requests
+    rng = np.random.default_rng(11)     # same seed as the in-process bench
+    arrivals = np.cumsum(rng.exponential(1.0 / args.overload_rate, size=n))
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.choice(plens))).tolist()
+               for _ in range(n)]
+    results = [None] * n
+    t0 = time.perf_counter()
+
+    def client(i):
+        sched = t0 + arrivals[i]
+        delay = sched - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        r = stream_completion(
+            "127.0.0.1", h.port,
+            {"prompt": prompts[i], "max_tokens": args.overload_gen,
+             "deadline_s": args.overload_deadline})
+        results[i] = (r, sched)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(300)
+    h.request_drain()
+    h.wait_closed(120)
+    assert h.server.conservation_ok, "HTTP bench leaked slots/pages"
+
+    counts: Counter = Counter()
+    ttfts = []
+    for r, sched in results:
+        status = (r.final or {}).get("status", "FAILED").lower()
+        counts[status] += 1
+        if status == "finished" and r.t_first > 0:
+            ttfts.append(r.t_first - sched)
+    p = (lambda q: float(np.percentile(ttfts, q))) if ttfts else lambda q: 0.0
+    inproc_p99 = overload_row["shed_on"]["ttft_s"]["p99"]
+    http_p99 = p(99)
+    row = {
+        "section": "http", "arch": args.arch,
+        "rate": args.overload_rate, "requests": n,
+        "gen": args.overload_gen, "slots": args.overload_slots,
+        "max_waiting": args.overload_max_waiting,
+        "deadline_s": args.overload_deadline,
+        "ttft_s": {"p50": p(50), "p95": p(95), "p99": http_p99},
+        "status_counts": dict(counts),
+        "inproc_p99_s": inproc_p99,
+        "http_vs_inproc_p99": (http_p99 / inproc_p99
+                               if inproc_p99 > 0 else 0.0),
+        "restarts": h.server.host.restarts,
+        "leaked_pages": 0,              # asserted via conservation above
+    }
+    print(f"http rate={args.overload_rate}/s x{n} req, "
+          f"{args.overload_slots} slots: server-side p99 TTFT "
+          f"{http_p99*1e3:.1f} ms vs in-process shed-on "
+          f"{inproc_p99*1e3:.1f} ms → "
+          f"{row['http_vs_inproc_p99']:.2f}x overhead "
+          f"(finished {counts.get('finished', 0)}, rejected "
+          f"{counts.get('rejected', 0)}, timeout {counts.get('timeout', 0)})")
+    return row
+
+
 def bench_static(cfg, params, prompts, gens, batch, capacity):
     """Legacy one-batch-at-a-time loop at equal useful load: fixed batches
     in arrival order, uniform prompt padding, every batch decoded to its
@@ -676,6 +764,14 @@ def main():
                     help="gate: shed-on p99 TTFT (FINISHED requests) must "
                          "be at most this fraction of the shed-off p99 "
                          "(0 → no gate)")
+    ap.add_argument("--http", action="store_true",
+                    help="HTTP front-end section: the overload shed-on "
+                         "workload replayed through the asyncio server "
+                         "(needs --overload for the in-process baseline)")
+    ap.add_argument("--max-http-ttft-overhead", type=float, default=0.0,
+                    help="gate: server-side p99 TTFT over HTTP must be at "
+                         "most this multiple of the in-process shed-on "
+                         "p99 (0 → no gate)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -740,6 +836,14 @@ def main():
         overload_row = bench_overload(args)
         results.append(overload_row)
 
+    http_row = None
+    if args.http:
+        if overload_row is None:
+            raise SystemExit("--http needs --overload (the in-process "
+                             "shed-on run is its baseline)")
+        http_row = bench_http(args, overload_row)
+        results.append(http_row)
+
     payload = {"benchmark": "serve", "packed_vs_dense": ratios,
                "results": results}
     if long_row is not None:
@@ -759,6 +863,9 @@ def main():
     if overload_row is not None:
         payload["overload_p99_ratio"] = overload_row["overload_p99_ratio"]
         payload["overload"] = overload_row
+    if http_row is not None:
+        payload["http_ttft_overhead"] = http_row["http_vs_inproc_p99"]
+        payload["http"] = http_row
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
@@ -805,6 +912,17 @@ def main():
                 f"queue p99 under overload "
                 f"(> {args.max_overload_p99_ratio}x allowed — shedding "
                 f"must keep the admitted tail bounded)")
+
+    if args.max_http_ttft_overhead > 0:
+        if http_row is None:
+            raise SystemExit("--max-http-ttft-overhead needs --http")
+        if http_row["http_vs_inproc_p99"] > args.max_http_ttft_overhead:
+            raise SystemExit(
+                f"TAIL LATENCY REGRESSION: p99 TTFT through the HTTP "
+                f"front-end is {http_row['http_vs_inproc_p99']:.2f}x the "
+                f"in-process shed-on p99 under the same overload "
+                f"(> {args.max_http_ttft_overhead}x allowed — the server "
+                f"layer must not dominate the tail)")
 
     if args.min_spec_vs_plain > 0:
         if spec_row is None:

@@ -1,0 +1,114 @@
+"""HTTP serving entry point: the InferenceEngine behind an asyncio API.
+
+Builds the same (BCR-packed, optionally paged / prefix-cached /
+speculative) engine as ``launch/serve.py``, then serves it over
+``serving/server.py``'s stdlib HTTP front-end instead of driving
+synthetic traffic at it:
+
+    PYTHONPATH=src python -m repro.launch.api --arch llama3.2-1b --smoke \\
+        --slots 8 --page-size 16 --bcr-keep 0.25 --port 8080
+
+    curl -N localhost:8080/v1/completions -d \\
+        '{"prompt": [1, 2, 3], "max_tokens": 8, "stream": true}'
+
+SIGTERM (or Ctrl-C) triggers graceful drain: readiness flips false, the
+waiting queue is shed, in-flight requests finish and flush their streams,
+and ``check_conservation()`` verifies nothing leaked before exit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.serve import build_draft, build_params
+from repro.serving import EngineConfig, InferenceEngine
+from repro.serving.server import InferenceServer, ServerConfig
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8080)
+    p.add_argument("--slots", type=int, default=8)
+    p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--page-size", type=int, default=0)
+    p.add_argument("--kv-pages", type=int, default=0)
+    p.add_argument("--prefix-cache", action="store_true")
+    p.add_argument("--spec-k", type=int, default=0)
+    p.add_argument("--draft-d-model", type=int, default=0)
+    p.add_argument("--draft-layers", type=int, default=2)
+    p.add_argument("--draft-bcr-keep", type=float, default=0.0)
+    p.add_argument("--bcr-keep", type=float, default=0.0)
+    p.add_argument("--bcr-block", type=int, default=0)
+    p.add_argument("--impl", default="ref",
+                   choices=["ref", "interpret", "pallas"])
+    p.add_argument("--kv-dtype", default="", choices=["", "int8"])
+    p.add_argument("--weight-dtype", default="", choices=["", "int8"])
+    p.add_argument("--max-waiting", type=int, default=0,
+                   help="bound the waiting queue; overflow sheds the "
+                        "lowest-tier earliest-deadline waiter as 429")
+    p.add_argument("--preempt-after-stalls", type=int, default=0)
+    p.add_argument("--default-max-tokens", type=int, default=16)
+    p.add_argument("--max-restarts", type=int, default=3,
+                   help="supervisor budget: crashes tolerated per "
+                        "--restart-window-s before giving up")
+    p.add_argument("--restart-window-s", type=float, default=60.0)
+    p.add_argument("--slow-steps-restart", type=int, default=0,
+                   help="restart the step loop after this many NEW "
+                        "watchdog-flagged slow steps (0 → off)")
+    p.add_argument("--no-warmup", action="store_true",
+                   help="skip compile-ahead warmup (readiness flips "
+                        "immediately; first requests pay jit)")
+    p.add_argument("--warmup-lens", type=int, nargs="*", default=[16, 32],
+                   help="prompt lengths to compile ahead of readiness")
+    args = p.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, bcr_keep_frac=args.bcr_keep,
+                              kernel_impl=args.impl)
+    if args.bcr_block or args.smoke:
+        b = args.bcr_block or 16
+        cfg = dataclasses.replace(cfg, bcr_block=(b, b))
+    params = build_params(cfg, decode_m=args.slots,
+                          weight_dtype=args.weight_dtype)
+    if args.prefix_cache and not args.page_size:
+        p.error("--prefix-cache needs --page-size (paged KV pool)")
+    if args.spec_k and not args.page_size:
+        p.error("--spec-k needs --page-size")
+    draft_cfg, draft_params = None, None
+    if args.spec_k:
+        draft_cfg, draft_params = build_draft(cfg, args)
+    engine = InferenceEngine(cfg, params, EngineConfig(
+        n_slots=args.slots, capacity=args.capacity,
+        page_size=args.page_size, kv_pages=args.kv_pages or None,
+        prefix_cache=args.prefix_cache,
+        spec_k=args.spec_k, draft_cfg=draft_cfg,
+        kv_dtype=args.kv_dtype,
+        max_waiting=args.max_waiting or None,
+        preempt_after_stalls=args.preempt_after_stalls),
+        draft_params=draft_params)
+    server = InferenceServer(engine, ServerConfig(
+        host=args.host, port=args.port,
+        default_max_tokens=args.default_max_tokens,
+        max_restarts=args.max_restarts,
+        restart_window_s=args.restart_window_s,
+        slow_steps_restart=args.slow_steps_restart))
+    warmup = None if args.no_warmup else args.warmup_lens
+    print(f"serving {cfg.name} on http://{args.host}:{args.port} "
+          f"(slots={args.slots}, page_size={args.page_size}, "
+          f"warmup={'off' if warmup is None else warmup})")
+    try:
+        asyncio.run(server.serve_forever(warmup))
+    except KeyboardInterrupt:
+        pass
+    print("drained; conservation "
+          + ("ok" if server.conservation_ok else "FAILED"))
+
+
+if __name__ == "__main__":
+    main()

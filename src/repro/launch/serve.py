@@ -246,6 +246,38 @@ class TrafficConfig:
     # the engine's terminal-status machinery under real traffic
     deadline_s: float = 0.0
     cancel_rate: float = 0.0
+    # trace replay: a list of records (see load_trace) overrides the
+    # Poisson arrival process — per-record arrival offset, prompt length,
+    # max_new_tokens, priority and deadline drive the run instead
+    trace: Any = None
+
+
+def load_trace(path: str) -> List[Dict[str, Any]]:
+    """Parse a jsonl request trace for :func:`run_traffic`.
+
+    One JSON object per line::
+
+        {"t": 0.12, "prompt_len": 16, "max_new_tokens": 16,
+         "priority": 1, "deadline_s": 2.0}
+
+    ``t`` (arrival offset in seconds from the run start) is required and
+    must be non-decreasing; everything else defaults (prompt_len 16,
+    max_new_tokens/deadline from the TrafficConfig, priority 0).
+    """
+    trace: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            rec = json.loads(line)
+            if "t" not in rec:
+                raise ValueError(f"{path}:{ln}: trace record needs 't' "
+                                 f"(arrival offset in seconds)")
+            trace.append(rec)
+    if any(b["t"] < a["t"] for a, b in zip(trace, trace[1:])):
+        raise ValueError(f"{path}: arrival offsets must be non-decreasing")
+    return trace
 
 
 def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
@@ -257,9 +289,32 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
     batch, and sleeps only when fully idle ahead of the next arrival.
     """
     rng = np.random.default_rng(tc.seed)
-    gaps = rng.exponential(1.0 / tc.rate, size=tc.n_requests)
-    arrivals = np.cumsum(gaps)
-    plens = rng.choice(tc.prompt_lens, size=tc.n_requests)
+    if tc.trace is not None:
+        # trace replay: arrivals, prompt lengths, generation budgets,
+        # priorities and deadlines all come from the records
+        n_requests = len(tc.trace)
+        arrivals = np.asarray([float(r["t"]) for r in tc.trace])
+        plens = np.asarray([int(r.get("prompt_len", 16))
+                            for r in tc.trace])
+        gens = [int(r.get("max_new_tokens", tc.gen_tokens))
+                for r in tc.trace]
+        prios = [int(r.get("priority", 0)) for r in tc.trace]
+        deadlines = [float(r.get("deadline_s", tc.deadline_s))
+                     for r in tc.trace]
+        # clamp so no record can exceed its slot (prompt + gen + spec
+        # headroom ≤ capacity) — a trace is a workload shape, not a
+        # rejection test
+        cap = engine.ec.capacity - engine._headroom()
+        plens = np.asarray([max(1, min(int(p), cap - g))
+                            for p, g in zip(plens, gens)])
+    else:
+        n_requests = tc.n_requests
+        gaps = rng.exponential(1.0 / tc.rate, size=n_requests)
+        arrivals = np.cumsum(gaps)
+        plens = rng.choice(tc.prompt_lens, size=n_requests)
+        gens = [tc.gen_tokens] * n_requests
+        prios = [0] * n_requests
+        deadlines = [tc.deadline_s] * n_requests
     if tc.system_prompts > 0:
         systems = [rng.integers(0, engine.cfg.vocab_size,
                                 size=tc.system_len).astype(np.int32)
@@ -284,9 +339,9 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
     # client-side cancellations: each request independently gets a cancel
     # scheduled at a random point after its arrival (within its deadline
     # window when one is set). Cancels racing completion are no-ops.
-    cancel_at = np.full(tc.n_requests, np.inf)
+    cancel_at = np.full(n_requests, np.inf)
     if tc.cancel_rate > 0:
-        hit = rng.random(tc.n_requests) < tc.cancel_rate
+        hit = rng.random(n_requests) < tc.cancel_rate
         span = tc.deadline_s if tc.deadline_s > 0 else 0.5
         cancel_at[hit] = arrivals[hit] + rng.uniform(
             0.01, max(span, 0.02), size=int(hit.sum()))
@@ -294,14 +349,15 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
     t0 = time.perf_counter()
     submitted = 0
     rids: List[int] = []
-    while submitted < tc.n_requests or engine.sched.has_work():
+    while submitted < n_requests or engine.sched.has_work():
         now = time.perf_counter() - t0
-        while submitted < tc.n_requests and arrivals[submitted] <= now:
+        while submitted < n_requests and arrivals[submitted] <= now:
             rids.append(engine.submit(
-                prompts[submitted], max_new_tokens=tc.gen_tokens,
+                prompts[submitted], max_new_tokens=gens[submitted],
                 temperature=tc.temperature, top_k=tc.top_k,
                 arrival_time=arrivals[submitted],
-                deadline_s=tc.deadline_s))
+                deadline_s=deadlines[submitted],
+                priority=prios[submitted]))
             submitted += 1
         for i in np.nonzero(cancel_at <= now)[0]:
             if i < submitted:
@@ -494,6 +550,11 @@ def main() -> None:
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--requests", type=int, default=32)
     p.add_argument("--rate", type=float, default=8.0, help="req/s (Poisson)")
+    p.add_argument("--trace", default=None, metavar="FILE.jsonl",
+                   help="replay a jsonl request trace instead of Poisson "
+                        "arrivals: per-record arrival offset 't', "
+                        "prompt_len, max_new_tokens, priority, deadline_s "
+                        "(see examples/trace_heavy_tail.jsonl)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--deadline-s", type=float, default=0.0,
@@ -592,7 +653,8 @@ def main() -> None:
         prompt_lens=plens,
         temperature=args.temperature, top_k=args.top_k,
         system_prompts=args.system_prompts, system_len=args.system_len,
-        deadline_s=args.deadline_s, cancel_rate=args.cancel_rate)
+        deadline_s=args.deadline_s, cancel_rate=args.cancel_rate,
+        trace=load_trace(args.trace) if args.trace else None)
     metrics = run_traffic(engine, tc)
     if args.json_out:
         with open(args.json_out, "w") as f:

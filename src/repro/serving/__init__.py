@@ -18,6 +18,10 @@ Layering (docs/serving.md has the full picture):
                 OracleDraft: synthetic replay) + acceptance rules
   faults      — deterministic FaultInjector chaos harness + StepWatchdog
                 (EWMA slow-step detector) + FakeClock for tests
+  server      — stdlib asyncio HTTP front-end: SSE streaming completions,
+                disconnect→cancel propagation, graceful drain, and a
+                supervised engine thread restarted through
+                ``InferenceEngine.recover()`` (launch/api.py is the CLI)
 """
 
 from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: F401
@@ -29,6 +33,9 @@ from repro.serving.kv_slots import (  # noqa: F401
 )
 from repro.serving.scheduler import (  # noqa: F401
     Request, Scheduler, TERMINAL,
+)
+from repro.serving.server import (  # noqa: F401
+    EngineHost, InferenceServer, ServerConfig, start_in_thread,
 )
 from repro.serving.speculative import (  # noqa: F401
     DraftModel, OracleDraft, accept_draft,

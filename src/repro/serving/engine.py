@@ -47,6 +47,14 @@ target's own distribution. Rejected drafts rewind: the pool truncates
 back to the committed frontier and tail pages return to the slot's
 reservation (they were allocated this step and never shared/registered).
 
+Thread safety: one reentrant engine lock guards every scheduler/pool
+mutation (``submit`` / ``cancel`` / ``step`` / ``reset_stats`` and the
+drain/recover hooks), so an asyncio HTTP front-end (``serving/server.py``)
+can submit and cancel from its event-loop thread while a dedicated engine
+thread runs the step loop. ``stats_snapshot()`` returns a consistent copy
+for ``/metrics`` (no torn counters) and ``poll()`` hands cross-thread
+callers copies of per-request progress in one lock acquisition.
+
 Prompt padding: for pure-attention families prompts are right-padded to a
 power-of-two bucket (causality keeps right-pads invisible to real
 positions; ``prefill(..., length=...)`` reads logits at the true last
@@ -58,8 +66,9 @@ serving granularity.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -186,6 +195,11 @@ class InferenceEngine:
                 "InferenceEngine serves decoder-only families; encdec "
                 "prefill needs encoder frames and a different cache tree")
         ec = ec or EngineConfig()
+        # one reentrant lock around every scheduler/pool mutation: submit/
+        # cancel/step/reset_stats (and the drain/recover hooks) are safe
+        # under cross-thread callers — reentrant because step() itself
+        # cancels (fault injection) and recovers
+        self._elock = threading.RLock()
         if ec.kv_dtype:
             if ec.kv_dtype != "int8":
                 raise ValueError(f"unsupported kv_dtype {ec.kv_dtype!r}")
@@ -355,73 +369,165 @@ class InferenceEngine:
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
                temperature: float = 0.0, top_k: int = 0,
                eos_id: Optional[int] = None, arrival_time: float = 0.0,
-               deadline_s: float = 0.0) -> int:
+               deadline_s: float = 0.0, priority: int = 0) -> int:
         """Enqueue a request; returns its rid. A request the engine can
         NEVER seat (slot capacity / page pool too small) is retired
         immediately as REJECTED — the rid still comes back, so an open-loop
         driver keeps running and reads the status off the finished list.
         ``deadline_s`` > 0 arms a wall-clock deadline (engine clock,
         measured from this submit): expired requests retire as TIMEOUT
-        whether waiting or mid-decode."""
+        whether waiting or mid-decode. ``priority`` picks the QoS tier:
+        higher tiers are admitted first (FCFS within a tier) and lower
+        tiers are preferred as shedding/preemption victims.
+        Thread-safe: any thread may call this against a stepping engine."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        req = Request(
-            prompt=prompt, max_new_tokens=max_new_tokens,
-            temperature=temperature, top_k=top_k, eos_id=eos_id,
-            arrival_time=arrival_time, deadline_s=float(deadline_s),
-            submit_time=self._clock())
-        # speculative decoding scratch: the verify dispatch writes up to
-        # spec_k draft K/V rows past the commit frontier before acceptance
-        # rolls them back, so the slot needs that much extra headroom
-        total = prompt.size + max_new_tokens + self._headroom()
-        if total > self.ec.capacity:
-            self.stats["rejected"] += 1
-            return self.sched.reject(
-                req,
-                f"prompt_len {prompt.size} + max_new_tokens {max_new_tokens}"
-                + (f" + spec_k {self.ec.spec_k}" if self.spec else "")
-                + f" exceeds slot capacity {self.ec.capacity}")
-        if self.paged:
-            need = self.pool.pages_needed(total)
-            if need > self.pool.n_pages - 1:
+        with self._elock:
+            req = Request(
+                prompt=prompt, max_new_tokens=max_new_tokens,
+                temperature=temperature, top_k=top_k, eos_id=eos_id,
+                arrival_time=arrival_time, deadline_s=float(deadline_s),
+                priority=int(priority), submit_time=self._clock())
+            # speculative decoding scratch: the verify dispatch writes up
+            # to spec_k draft K/V rows past the commit frontier before
+            # acceptance rolls them back — the slot needs that headroom
+            total = prompt.size + max_new_tokens + self._headroom()
+            if total > self.ec.capacity:
                 self.stats["rejected"] += 1
                 return self.sched.reject(
                     req,
-                    f"request needs {need} KV pages but the pool only has "
-                    f"{self.pool.n_pages - 1} allocatable pages")
-        rid = self.sched.submit(req)
-        if (self.ec.max_waiting
-                and len(self.sched.waiting) > self.ec.max_waiting):
-            # load shedding: drop the waiting request least likely to make
-            # its deadline — earliest absolute deadline first (no-deadline
-            # requests sort last, ties break oldest-rid)
-            victim = min(
-                self.sched.waiting,
-                key=lambda r: ((r.submit_time + r.deadline_s)
-                               if r.deadline_s > 0 else float("inf"),
-                               r.rid))
-            self.sched.drop_waiting(victim, REJECTED,
-                                    "shed: waiting queue full")
-            self.stats["shed"] += 1
-        return rid
+                    f"prompt_len {prompt.size} + max_new_tokens "
+                    f"{max_new_tokens}"
+                    + (f" + spec_k {self.ec.spec_k}" if self.spec else "")
+                    + f" exceeds slot capacity {self.ec.capacity}")
+            if self.paged:
+                need = self.pool.pages_needed(total)
+                if need > self.pool.n_pages - 1:
+                    self.stats["rejected"] += 1
+                    return self.sched.reject(
+                        req,
+                        f"request needs {need} KV pages but the pool only "
+                        f"has {self.pool.n_pages - 1} allocatable pages")
+            rid = self.sched.submit(req)
+            if (self.ec.max_waiting
+                    and len(self.sched.waiting) > self.ec.max_waiting):
+                # load shedding: drop the lowest-tier waiting request least
+                # likely to make its deadline — earliest absolute deadline
+                # within the tier (no-deadline requests sort last, ties
+                # break oldest-rid)
+                victim = min(
+                    self.sched.waiting,
+                    key=lambda r: (r.priority,
+                                   (r.submit_time + r.deadline_s)
+                                   if r.deadline_s > 0 else float("inf"),
+                                   r.rid))
+                self.sched.drop_waiting(victim, REJECTED,
+                                        "shed: waiting queue full")
+                self.stats["shed"] += 1
+            return rid
 
     def cancel(self, rid: int) -> Optional[Request]:
         """Cancel a request by rid, waiting or mid-decode. A running
         request's slot retires immediately and its KV pages / prefix
         refcounts (and any drafter rows) release. Returns the request (now
         CANCELLED), or None if the rid is not live — already terminal or
-        unknown — which makes racing a cancel against completion a no-op."""
-        for slot, req in list(self.sched.active.items()):
-            if req.rid == rid:
+        unknown — which makes racing a cancel against completion a no-op.
+        Thread-safe and idempotent under cross-thread racing: whichever of
+        a cancel and a step-side retirement wins the engine lock retires
+        the request; the loser sees a non-live rid and no-ops."""
+        with self._elock:
+            for slot, req in list(self.sched.active.items()):
+                if req.rid == rid:
+                    self._release(slot)
+                    self.stats["cancelled"] += 1
+                    return self.sched.retire(slot, CANCELLED)
+            for req in list(self.sched.waiting):
+                if req.rid == rid:
+                    self.stats["cancelled"] += 1
+                    return self.sched.drop_waiting(req, CANCELLED)
+            return None
+
+    # -- cross-thread serving hooks (used by serving/server.py) ------------
+
+    def stats_snapshot(self) -> Dict[str, Any]:
+        """Consistent copy of ``stats`` for a concurrent reader (``/metrics``):
+        taken under the engine lock so no counter is torn mid-step. List-
+        valued entries are summarized (mean occupancy) or copied, and live
+        queue depths ride along."""
+        with self._elock:
+            snap: Dict[str, Any] = {}
+            for k, v in self.stats.items():
+                if k == "slot_occupancy":
+                    snap["slot_occupancy_mean"] = (
+                        float(np.mean(v)) if v else 0.0)
+                elif isinstance(v, list):
+                    snap[k] = list(v)
+                else:
+                    snap[k] = v
+            snap["active"] = len(self.sched.active)
+            snap["waiting"] = len(self.sched.waiting)
+            return snap
+
+    def poll(self, cursor: int = 0, trim: bool = False
+             ) -> Tuple[int, List[Tuple[int, List[int]]],
+                        List[Tuple[int, List[int], str, str]]]:
+        """One-lock progress snapshot for a cross-thread consumer: returns
+        ``(new_cursor, live, fin)`` where ``live`` is ``(rid, generated)``
+        for every waiting/running request and ``fin`` is
+        ``(rid, generated, status, error)`` for each newly terminal request
+        past ``cursor`` on the finished list. All token lists are copies.
+        ``trim=True`` drops the consumed finished entries instead of
+        advancing the cursor (single-consumer memory hygiene for a
+        long-running server; the returned cursor is then always 0)."""
+        with self._elock:
+            fin = [(r.rid, list(r.generated), r.status, r.error)
+                   for r in self.sched.finished[cursor:]]
+            live = ([(r.rid, list(r.generated))
+                     for r in self.sched.active.values()]
+                    + [(r.rid, list(r.generated))
+                       for r in self.sched.waiting])
+            if trim:
+                del self.sched.finished[cursor:]
+                return 0, live, fin
+            return len(self.sched.finished), live, fin
+
+    def shed_waiting(self, reason: str) -> List[Request]:
+        """Drop every waiting request as REJECTED (graceful drain: running
+        requests finish, queued ones are turned away). Returns them."""
+        with self._elock:
+            dropped: List[Request] = []
+            for req in list(self.sched.waiting):
+                dropped.append(self.sched.drop_waiting(req, REJECTED, reason))
+                self.stats["shed"] += 1
+            return dropped
+
+    def recover(self) -> int:
+        """Crash recovery for a supervised step loop: called after
+        ``step()`` raised (or a watchdog flagged the loop wedged) to bring
+        the scheduler/pool back to a consistent state WITHOUT rebuilding
+        the engine — compiled programs, params and the page pool survive.
+        Every running request is folded (generated tokens into its prompt,
+        so the re-prefill replays them bit-identically under greedy),
+        released, and requeued at the front in reverse admission order
+        (earliest admit ends leftmost — FCFS is preserved). The prefix
+        index is reset (its entries may reference released pages) and the
+        stall/defer counters cleared. Returns the survivor count."""
+        with self._elock:
+            survivors = sorted(self.sched.active.items(),
+                               key=lambda kv: (kv[1].admit_time,
+                                               kv[1].rid),
+                               reverse=True)
+            for slot, req in survivors:
+                self._fold(req)
                 self._release(slot)
-                self.stats["cancelled"] += 1
-                return self.sched.retire(slot, CANCELLED)
-        for req in list(self.sched.waiting):
-            if req.rid == rid:
-                self.stats["cancelled"] += 1
-                return self.sched.drop_waiting(req, CANCELLED)
-        return None
+                self.sched.requeue(slot)
+            if self.prefix_cache:
+                self.pool.reset_prefix()
+            self._stall_steps = 0
+            self._defer_steps = 0
+            self.stats["recoveries"] += 1
+            return len(survivors)
 
     # -- internals ---------------------------------------------------------
 
@@ -647,7 +753,13 @@ class InferenceEngine:
     def step(self) -> List[Request]:
         """One engine iteration; returns every request that reached a
         terminal status this step (FINISHED, but also TIMEOUT, CANCELLED
-        and FAILED — check ``Request.status``)."""
+        and FAILED — check ``Request.status``). Holds the engine lock for
+        the whole iteration: cross-thread submit/cancel callers serialize
+        against it (they block at most one step)."""
+        with self._elock:
+            return self._step()
+
+    def _step(self) -> List[Request]:
         self._step_idx += 1
         t_step = self._clock()
         finished: List[Request] = []
@@ -830,20 +942,30 @@ class InferenceEngine:
                 self.stats["timeouts"] += 1
         return out
 
-    def _preempt_youngest(self) -> Request:
-        """Page-pressure eviction: fold the victim's generated tokens into
-        its prompt (so the re-prefill replays them and samples exactly the
-        next token — bit-identical under greedy), release its slot + pages,
-        and requeue it behind the stalled FCFS head. The reservation
-        total ``prompt_len - folded + max_new_tokens`` is invariant across
-        folds, so an admitted request always re-fits eventually."""
-        slot, req = max(self.sched.active.items(),
-                        key=lambda kv: (kv[1].admit_time, kv[1].rid))
+    @staticmethod
+    def _fold(req: Request) -> None:
+        """Fold a request's generated-so-far tokens into its prompt so a
+        later re-prefill replays them and samples exactly the next token
+        (bit-identical under greedy). The reservation total
+        ``prompt_len - folded + max_new_tokens`` is invariant across folds,
+        so a folded request always re-fits eventually. Shared by
+        page-pressure preemption and crash :meth:`recover`."""
         new = req.generated[req.folded:]
         if new:
             req.prompt = np.concatenate(
                 [req.prompt, np.asarray(new, np.int32)])
             req.folded = len(req.generated)
+
+    def _preempt_youngest(self) -> Request:
+        """Page-pressure eviction: fold the victim's generated tokens into
+        its prompt, release its slot + pages, and requeue it behind the
+        stalled FCFS head. The victim is the youngest running request of
+        the LOWEST priority tier — a high-priority request is evicted only
+        when nothing cheaper is running."""
+        slot, req = max(self.sched.active.items(),
+                        key=lambda kv: (-kv[1].priority, kv[1].admit_time,
+                                        kv[1].rid))
+        self._fold(req)
         self._release(slot)
         self.stats["preemptions"] += 1
         return self.sched.preempt(slot)
@@ -853,20 +975,21 @@ class InferenceEngine:
         no live requests, and (paged) every non-null page accounted for
         with consistent refcounts. Chaos tests call this after mixed-fault
         runs; it is cheap enough to call in benches too."""
-        assert not self.sched.active and not self.sched.waiting, \
-            "check_conservation() needs a drained engine"
-        assert self.sched.free_slots() == self.ec.n_slots, "leaked slots"
-        if self.paged:
-            self.pool.check_consistency()
-            idle = self.pool.idle_pages()
-            assert idle == self.pool.n_pages - 1, \
-                f"leaked {self.pool.n_pages - 1 - idle} KV pages"
-        else:
-            assert int(np.asarray(self.pool.lens).sum()) == 0, \
-                "leaked slot lengths"
-        if self.spec and hasattr(self.drafter, "pool"):
-            assert int(np.asarray(self.drafter.pool.lens).sum()) == 0, \
-                "leaked drafter slot lengths"
+        with self._elock:
+            assert not self.sched.active and not self.sched.waiting, \
+                "check_conservation() needs a drained engine"
+            assert self.sched.free_slots() == self.ec.n_slots, "leaked slots"
+            if self.paged:
+                self.pool.check_consistency()
+                idle = self.pool.idle_pages()
+                assert idle == self.pool.n_pages - 1, \
+                    f"leaked {self.pool.n_pages - 1 - idle} KV pages"
+            else:
+                assert int(np.asarray(self.pool.lens).sum()) == 0, \
+                    "leaked slot lengths"
+            if self.spec and hasattr(self.drafter, "pool"):
+                assert int(np.asarray(self.drafter.pool.lens).sum()) == 0, \
+                    "leaked drafter slot lengths"
 
     def _prepare_paged_writes(self, write_lens: Dict[int, int],
                               extra: int) -> jax.Array:
@@ -1011,24 +1134,28 @@ class InferenceEngine:
     # -- convenience -------------------------------------------------------
 
     def reset_stats(self) -> None:
-        self.stats.clear()
-        self.stats.update(decode_steps=0, prefills=0, prefill_rows=0,
-                          deferred_admissions=0, tokens_generated=0,
-                          page_stalls=0, kv_bytes_read=0,
-                          kv_bytes_read_live=0, slot_occupancy=[],
-                          prefix_hit_tokens=0, pages_shared=0,
-                          cow_copies=0, evictions=0, pages_allocated=0,
-                          spec_steps=0, draft_proposed=0, draft_accepted=0,
-                          accepted_hist=[0] * (self.ec.spec_k + 1),
-                          preemptions=0, shed=0, rejected=0, timeouts=0,
-                          cancelled=0, failed=0, drafter_failures=0,
-                          watchdog_slow_steps=0, step_time_ewma=0.0)
-        # fresh watchdog per reset: warmup's compile-heavy steps must not
-        # seed the EWMA the measured window is judged against
-        self._watchdog = (StepWatchdog(threshold=self.ec.watchdog_threshold)
-                          if self.ec.watchdog_threshold > 0 else None)
-        if self.paged:
-            self.pool.reset_stats()
+        with self._elock:
+            self.stats.clear()
+            self.stats.update(decode_steps=0, prefills=0, prefill_rows=0,
+                              deferred_admissions=0, tokens_generated=0,
+                              page_stalls=0, kv_bytes_read=0,
+                              kv_bytes_read_live=0, slot_occupancy=[],
+                              prefix_hit_tokens=0, pages_shared=0,
+                              cow_copies=0, evictions=0, pages_allocated=0,
+                              spec_steps=0, draft_proposed=0,
+                              draft_accepted=0,
+                              accepted_hist=[0] * (self.ec.spec_k + 1),
+                              preemptions=0, shed=0, rejected=0, timeouts=0,
+                              cancelled=0, failed=0, drafter_failures=0,
+                              recoveries=0, watchdog_slow_steps=0,
+                              step_time_ewma=0.0)
+            # fresh watchdog per reset: warmup's compile-heavy steps must
+            # not seed the EWMA the measured window is judged against
+            self._watchdog = (
+                StepWatchdog(threshold=self.ec.watchdog_threshold)
+                if self.ec.watchdog_threshold > 0 else None)
+            if self.paged:
+                self.pool.reset_stats()
 
     def _sync_pool_stats(self) -> None:
         """Mirror the allocator's counters (they tick deep inside page

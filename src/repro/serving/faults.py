@@ -32,6 +32,11 @@ Fault kinds
 ``cancel``
     A uniformly chosen live request (waiting or running) is cancelled via
     :meth:`InferenceEngine.cancel`.
+``crash_step``
+    Consumed by the HTTP layer, not the engine: the supervised step loop in
+    ``serving/server.py`` raises before dispatching that step, exercising
+    the supervisor's recover→restart path. Indexed by the *host* loop's
+    step-attempt counter (which counts exactly the engine steps it drives).
 """
 
 from __future__ import annotations
@@ -42,7 +47,8 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-KINDS = ("page_alloc", "nan_logits", "drafter", "slow_step", "cancel")
+KINDS = ("page_alloc", "nan_logits", "drafter", "slow_step", "cancel",
+         "crash_step")
 
 
 @dataclass

@@ -1,10 +1,16 @@
-"""FCFS request scheduler for the continuous-batching engine.
+"""Priority-tiered FCFS request scheduler for the continuous-batching engine.
 
 Pure host-side bookkeeping — no jax. The engine drives it each step:
 
-  submit() enqueues; admit() pops waiting requests into free slots (FCFS,
-  bounded by ``max_admit`` so prefill work interleaves with decode instead
-  of starving running requests); retire() frees a slot for reuse.
+  submit() enqueues; admit() pops waiting requests into free slots (highest
+  ``Request.priority`` tier first, FCFS within a tier, bounded by
+  ``max_admit`` so prefill work interleaves with decode instead of starving
+  running requests); retire() frees a slot for reuse.
+
+The waiting deque is kept in admission order at all times — submit()
+inserts each request behind every waiting request of its own or a higher
+tier, so admit() just pops from the left. With every priority equal
+(the default 0) this degrades to exactly the old strict-FCFS queue.
 
 Every request carries a ``status`` that walks a small state machine::
 
@@ -43,9 +49,16 @@ FAILED = "FAILED"
 TERMINAL = frozenset({FINISHED, TIMEOUT, CANCELLED, REJECTED, FAILED})
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
-    """One generation request plus its serving-lifetime bookkeeping."""
+    """One generation request plus its serving-lifetime bookkeeping.
+
+    ``eq=False``: requests compare by identity. The generated ``__eq__``
+    would compare the ``prompt`` arrays elementwise (ambiguous truth
+    value) the moment ``drop_waiting``'s ``deque.remove`` probes past a
+    non-victim entry — identity is also the semantically right notion
+    here (two requests are never "the same" just because their fields
+    match)."""
 
     prompt: np.ndarray                  # (P,) int32 token ids
     max_new_tokens: int = 16
@@ -54,6 +67,9 @@ class Request:
     eos_id: Optional[int] = None
     arrival_time: float = 0.0           # driver clock, for latency metrics
     deadline_s: float = 0.0             # 0 → no deadline; else seconds from submit
+    # QoS tier: higher admitted first; FCFS within a tier. Load shedding
+    # and page-pressure preemption both prefer the lowest tier as victim.
+    priority: int = 0
 
     # filled in by the scheduler/engine
     rid: int = -1
@@ -100,7 +116,15 @@ class Scheduler:
     def submit(self, req: Request) -> int:
         req.rid = next(self._ids)
         req.status = QUEUED
-        self.waiting.append(req)
+        # priority-ordered insert: behind every waiting request of the same
+        # or a higher tier (within-tier FCFS), ahead of strictly lower
+        # tiers. All-equal priorities → plain append, the old FCFS queue.
+        for i, w in enumerate(self.waiting):
+            if w.priority < req.priority:
+                self.waiting.insert(i, req)
+                break
+        else:
+            self.waiting.append(req)
         return req.rid
 
     def reject(self, req: Request, reason: str) -> int:
@@ -112,8 +136,9 @@ class Scheduler:
         return req.rid
 
     def admit(self, max_admit: Optional[int] = None) -> List[Tuple[Request, int]]:
-        """Seat waiting requests into free slots, FCFS; returns
-        (request, slot) pairs for the engine to prefill."""
+        """Seat waiting requests into free slots (highest tier first, FCFS
+        within a tier — the deque is priority-ordered by construction);
+        returns (request, slot) pairs for the engine to prefill."""
         out: List[Tuple[Request, int]] = []
         while self.waiting and self._free:
             if max_admit is not None and len(out) >= max_admit:
@@ -145,15 +170,22 @@ class Scheduler:
         to the queue front), the victim re-enters *behind* the stalled head —
         the head stalled because the victim's pages were needed, so putting
         the victim first would just re-stall it — but ahead of later arrivals
-        so it is not starved."""
+        of its own tier so it is not starved. Strictly higher-tier waiters
+        past the head keep their place ahead of the victim."""
         req = self.active.pop(slot)
         req.slot = -1
         req.status = PREEMPTED
         req.prefix_hit = 0
         req.preemptions += 1
         self._free.append(slot)
-        # deque.insert clamps to append when index > len.
-        self.waiting.insert(1, req)
+        # behind the head (position 1) is absolute — even a lower-tier head
+        # stays put, it stalled precisely because it needs the victim's
+        # pages; past it, skip higher-tier waiters to keep the deque's
+        # priority order. deque.insert clamps to append when index > len.
+        idx = 1
+        while idx < len(self.waiting) and self.waiting[idx].priority > req.priority:
+            idx += 1
+        self.waiting.insert(idx, req)
         return req
 
     def retire(self, slot: int, status: str = FINISHED) -> Request:

@@ -366,3 +366,105 @@ class TestStepWatchdog:
         eng.run()
         assert eng.stats["watchdog_slow_steps"] >= 1
         assert eng.stats["step_time_ewma"] > 0.0
+
+
+class TestPriority:
+    """QoS tiers: higher `Request.priority` admitted first, FCFS within a
+    tier, lowest tier preferred as shed/preemption victim — and the
+    stalled FCFS head is never starved by a preempted higher-tier
+    request jumping it."""
+
+    @staticmethod
+    def _sched_reqs(priorities):
+        from repro.serving.scheduler import Request, Scheduler
+        sched = Scheduler(2)
+        reqs = [Request(prompt=np.arange(4, dtype=np.int32), priority=p)
+                for p in priorities]
+        for r in reqs:
+            sched.submit(r)
+        return sched, reqs
+
+    def test_waiting_order_by_tier_then_fcfs(self):
+        sched, reqs = self._sched_reqs([0, 0, 2, 1, 2])
+        # deque is kept priority-ordered at insert: tier 2 (rids 2, 4 in
+        # arrival order), then tier 1 (rid 3), then tier 0 (rids 0, 1)
+        assert [r.rid for r in sched.waiting] == [2, 4, 3, 0, 1]
+        admitted = sched.admit()
+        assert [r.rid for r, _ in admitted] == [2, 4]
+
+    def test_all_equal_priorities_is_strict_fcfs(self):
+        sched, reqs = self._sched_reqs([0, 0, 0, 0])
+        assert [r.rid for r in sched.waiting] == [0, 1, 2, 3]
+
+    def test_preempt_goes_behind_head_but_skips_higher_tiers(self):
+        from repro.serving.scheduler import Request, Scheduler
+        sched = Scheduler(1)
+        head = Request(prompt=np.arange(4, dtype=np.int32), priority=0)
+        hi = Request(prompt=np.arange(4, dtype=np.int32), priority=2)
+        victim = Request(prompt=np.arange(4, dtype=np.int32), priority=1)
+        sched.submit(victim)
+        (v, slot), = sched.admit()
+        sched.submit(head)          # tier-0 head, stalled on pages
+        sched.submit(hi)            # tier-2 waiter behind it
+        # deque is [hi, head] (priority order); the preempted tier-1
+        # victim must stay behind the ABSOLUTE head (hi — it did not
+        # stall, priority order holds) but that is also where tier order
+        # puts it: [hi(2), victim(1), head(0)]
+        sched.preempt(slot)
+        assert [r.priority for r in sched.waiting] == [2, 1, 0]
+        # with only same/lower tiers waiting, the victim sits exactly at
+        # position 1: the stalled head keeps the front
+        sched2 = Scheduler(1)
+        v2 = Request(prompt=np.arange(4, dtype=np.int32), priority=2)
+        h2 = Request(prompt=np.arange(4, dtype=np.int32), priority=0)
+        sched2.submit(v2)
+        (_, s2), = sched2.admit()
+        sched2.submit(h2)
+        sched2.preempt(s2)
+        assert [r.priority for r in sched2.waiting] == [0, 2]
+        assert sched2.waiting[0] is h2
+
+    def test_engine_seats_high_tier_first(self, llama):
+        eng = make_engine("dense", llama, None)
+        # fill every slot, then queue lo before hi
+        blockers = [eng.submit(np.arange(4, dtype=np.int32),
+                               max_new_tokens=4) for _ in range(N_SLOTS)]
+        lo = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                        priority=0)
+        hi = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2,
+                        priority=2)
+        done = {r.rid: r for r in eng.run()}
+        eng.check_conservation()
+        assert done[hi].admit_time <= done[lo].admit_time
+        assert all(done[r].status == FINISHED for r in blockers + [lo, hi])
+
+    def test_shed_prefers_lowest_tier(self, llama):
+        eng = make_engine("dense", llama, None, max_waiting=2)
+        for _ in range(N_SLOTS):
+            eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=8)
+            eng.step()                 # seat each blocker as it arrives
+        hi = eng.submit(np.arange(4, dtype=np.int32), priority=2)
+        lo = eng.submit(np.arange(4, dtype=np.int32), priority=0)
+        over = eng.submit(np.arange(4, dtype=np.int32), priority=1)
+        shed = [r for r in eng.sched.finished if r.status == REJECTED]
+        assert [r.rid for r in shed] == [lo]
+        done = {r.rid: r for r in eng.run()}
+        assert done[hi].status == FINISHED and done[over].status == FINISHED
+
+    def test_preemption_victim_is_lowest_tier(self, llama):
+        eng = make_engine("prefix", llama, None, preempt=1,
+                          backfill_chunk=1)
+        # seat a LOW-tier older request and a HIGH-tier younger one
+        lo = eng.submit(np.arange(8, dtype=np.int32), max_new_tokens=8,
+                        priority=0)
+        eng.step()
+        hi = eng.submit(np.arange(8, dtype=np.int32), max_new_tokens=8,
+                        priority=2)
+        eng.step()
+        assert len(eng.sched.active) == 2
+        victim = eng._preempt_youngest()
+        # the young request is HIGH tier; the older LOW-tier one is evicted
+        assert victim.rid == lo and victim.preemptions == 1
+        done = {r.rid: r for r in eng.run()}
+        eng.check_conservation()
+        assert done[lo].status == FINISHED and done[hi].status == FINISHED
