@@ -31,7 +31,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.launch.serve import ServeConfig, generate, pack_params
 from repro.models.api import model_fns
-from repro.serving import EngineConfig, InferenceEngine
+from repro.serving import EngineConfig, InferenceEngine, TenantQuota
 
 
 def scaled_cfg(args, keep):
@@ -558,6 +558,161 @@ def bench_overload(args):
     return row
 
 
+def bench_overload_slo(args):
+    """Predictive admission vs reactive deadline enforcement on the SAME
+    overload workload. The reactive run admits everything into an
+    unbounded queue and enforces deadlines after the fact — doomed
+    requests are admitted, wait, and TIMEOUT in the waiting queue, and
+    the finished tail stretches toward the deadline. The predictive run
+    arms the seat-time estimator instead: provably-doomed requests are
+    rejected at submit with a computed Retry-After, and anything admitted
+    was estimated to finish within slack x deadline. The CI claims:
+    (a) zero admitted-then-TIMEOUT-in-the-waiting-queue under predictive
+    admission, and (b) the p99 TTFT of admitted requests is no worse
+    than the reactive run's (--max-slo-p99-ratio — structurally true
+    because the estimator stops admitting around slack x deadline of
+    queue delay while the reactive queue fills right up to the
+    deadline). Wasted prefill (prompt tokens spent on requests that
+    never delivered) is reported for both sides — the cost predictive
+    admission exists to avoid."""
+    from repro.launch.serve import TrafficConfig, run_traffic
+    cfg = get_smoke_config(args.arch)
+    params = model_fns(cfg).init_params(jax.random.PRNGKey(0))
+    plens = (4, 8, 12)
+
+    def run(slo):
+        eng = InferenceEngine(cfg, params, EngineConfig(
+            n_slots=args.overload_slots, capacity=args.capacity,
+            page_size=args.page_size, plan_packed=False,
+            slo_admission=slo, slo_slack=args.slo_slack))
+        # calibrate the step-time EWMA before the measured window:
+        # warmup() wipes it, an uncalibrated estimator admits everything
+        # (reactive degrade), and at 400/s the whole burst arrives before
+        # the first real steps could teach it anything. A short priming
+        # drain gives the estimator measured step times; its requests are
+        # then scrubbed from the books so the traffic run starts clean
+        # (_step_time survives reset_stats by design). The reactive run
+        # is primed identically so the comparison shares one code path.
+        eng.warmup(list(plens))
+        rng = np.random.default_rng(3)
+        eng.generate(
+            [rng.integers(0, cfg.vocab_size, size=p).astype(np.int32)
+             for p in plens], max_new_tokens=args.overload_gen)
+        eng.sched.finished.clear()
+        eng.reset_stats()
+        tc = TrafficConfig(
+            n_requests=args.overload_requests, rate=args.overload_rate,
+            prompt_lens=plens, gen_tokens=args.overload_gen,
+            deadline_s=args.slo_deadline, seed=11, warmup=False)
+        m = run_traffic(eng, tc, log=lambda *a: None)
+        eng.check_conservation()    # zero leaked pages/slots or it raises
+        return m
+
+    reactive = run(False)
+    m = run(True)
+    ratio = (m["ttft_s"]["p99"] / reactive["ttft_s"]["p99"]
+             if reactive["ttft_s"]["p99"] > 0 else 0.0)
+    row = {
+        "section": "overload_slo", "arch": args.arch,
+        "rate": args.overload_rate, "requests": args.overload_requests,
+        "gen": args.overload_gen, "slots": args.overload_slots,
+        "deadline_s": args.slo_deadline, "slo_slack": args.slo_slack,
+        "predictive": m, "reactive": reactive,
+        "slo_p99_ratio": ratio,
+        "slo_rejected": m["slo_rejected"],
+        "timeouts_waiting": m["timeouts_waiting"],
+        "reactive_timeouts_waiting": reactive["timeouts_waiting"],
+        "wasted_prefill_tokens": m["wasted_prefill_tokens"],
+        "reactive_wasted_prefill_tokens": reactive["wasted_prefill_tokens"],
+        "leaked_pages": 0,          # check_conservation() raised otherwise
+    }
+    sc = m["status_counts"]
+    print(f"overload-slo rate={args.overload_rate}/s x"
+          f"{args.overload_requests} req: predictive p99 TTFT "
+          f"{m['ttft_s']['p99']*1e3:.1f} ms (finished {sc['finished']}, "
+          f"slo-rejected {m['slo_rejected']}, waiting timeouts "
+          f"{m['timeouts_waiting']}, wasted prefill "
+          f"{m['wasted_prefill_tokens']} tok) vs reactive "
+          f"{reactive['ttft_s']['p99']*1e3:.1f} ms (waiting timeouts "
+          f"{reactive['timeouts_waiting']}, wasted prefill "
+          f"{reactive['wasted_prefill_tokens']} tok) → ratio {ratio:.3f}")
+    return row
+
+
+def bench_tenancy(args):
+    """Tenant isolation under an aggressor: a victim tenant offering a
+    modest, fully-serviceable load (solo goodput ≈ its fair-share
+    entitlement — it asks for less than half the machine) shares the
+    engine with an aggressor flooding at ~20x the victim's rate. Weighted
+    fair queueing (equal weights) must keep the victim's deadline-bound
+    goodput: the gate (--min-victim-goodput-frac) bounds contended victim
+    goodput tokens as a fraction of the solo run's. Both runs replay the
+    same victim trace; deadlines turn lost share into measurable loss
+    (waiting-queue timeouts) instead of unbounded latency."""
+    from repro.launch.serve import TrafficConfig, run_traffic
+    cfg = get_smoke_config(args.arch)
+    params = model_fns(cfg).init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    vic_t = np.cumsum(rng.exponential(
+        1.0 / args.tenancy_victim_rate, size=args.tenancy_victim_requests))
+    agg_t = np.cumsum(rng.exponential(
+        1.0 / args.tenancy_aggressor_rate,
+        size=args.tenancy_aggressor_requests))
+
+    def recs(ts, tenant):
+        return [{"t": float(t), "prompt_len": 8,
+                 "max_new_tokens": args.tenancy_gen,
+                 "deadline_s": args.tenancy_deadline, "tenant": tenant}
+                for t in ts]
+
+    solo_trace = recs(vic_t, "victim")
+    contended_trace = sorted(solo_trace + recs(agg_t, "aggressor"),
+                             key=lambda r: r["t"])
+
+    def run(trace):
+        eng = InferenceEngine(cfg, params, EngineConfig(
+            n_slots=args.overload_slots, capacity=args.capacity,
+            page_size=args.page_size, plan_packed=False,
+            tenant_quotas={"victim": TenantQuota(weight=1.0),
+                           "aggressor": TenantQuota(weight=1.0)}))
+        tc = TrafficConfig(trace=trace, gen_tokens=args.tenancy_gen,
+                           seed=17)
+        m = run_traffic(eng, tc, log=lambda *a: None)
+        eng.check_conservation()    # zero leaked pages/slots or it raises
+        return m
+
+    solo = run(solo_trace)
+    cont = run(contended_trace)
+    vic_solo = solo["tenants"].get("victim", {})
+    vic_cont = cont["tenants"].get("victim", {})
+    agg_cont = cont["tenants"].get("aggressor", {})
+    frac = (vic_cont.get("goodput_tokens", 0)
+            / max(vic_solo.get("goodput_tokens", 0), 1))
+    row = {
+        "section": "tenancy", "arch": args.arch,
+        "slots": args.overload_slots, "capacity": args.capacity,
+        "page_size": args.page_size, "gen": args.tenancy_gen,
+        "deadline_s": args.tenancy_deadline,
+        "victim_rate": args.tenancy_victim_rate,
+        "victim_requests": args.tenancy_victim_requests,
+        "aggressor_rate": args.tenancy_aggressor_rate,
+        "aggressor_requests": args.tenancy_aggressor_requests,
+        "victim_solo": vic_solo, "victim_contended": vic_cont,
+        "aggressor_contended": agg_cont,
+        "victim_goodput_frac": frac,
+        "leaked_pages": 0,          # check_conservation() raised otherwise
+    }
+    print(f"tenancy victim {args.tenancy_victim_rate}/s vs aggressor "
+          f"{args.tenancy_aggressor_rate}/s on {args.overload_slots} "
+          f"slots: victim goodput {vic_cont.get('goodput_tokens', 0)} tok "
+          f"contended vs {vic_solo.get('goodput_tokens', 0)} solo → "
+          f"{frac:.2f}x fair share (victim finished "
+          f"{vic_cont.get('finished', 0)}/{args.tenancy_victim_requests}, "
+          f"aggressor finished {agg_cont.get('finished', 0)}/"
+          f"{args.tenancy_aggressor_requests})")
+    return row
+
+
 def bench_http(args, overload_row):
     """HTTP front-end overhead: the overload shed-on workload replayed
     through the asyncio server (real sockets, SSE streaming) against the
@@ -764,6 +919,43 @@ def main():
                     help="gate: shed-on p99 TTFT (FINISHED requests) must "
                          "be at most this fraction of the shed-off p99 "
                          "(0 → no gate)")
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO-admission section: the overload workload "
+                         "with the predictive seat-time estimator on, vs "
+                         "a reactive run that admits everything and "
+                         "enforces the same deadlines after the fact")
+    ap.add_argument("--slo-deadline", type=float, default=0.5,
+                    help="per-request deadline (s) for the --slo runs: "
+                         "long enough that the structural gap between "
+                         "stop-admitting-at-slack-x-deadline and "
+                         "fill-right-up-to-the-deadline dominates "
+                         "estimator noise in the gated p99 ratio")
+    ap.add_argument("--slo-slack", type=float, default=0.8,
+                    help="admission slack for the --slo run: admit "
+                         "while estimated finish ≤ slack × deadline "
+                         "(< 1 leaves margin so borderline admits don't "
+                         "miss their deadline on a noisy box)")
+    ap.add_argument("--max-slo-p99-ratio", type=float, default=0.0,
+                    help="gate: predictive-admission p99 TTFT (FINISHED "
+                         "requests) must be at most this fraction of the "
+                         "reactive shed-on p99, AND the predictive run "
+                         "must have zero waiting-queue timeouts "
+                         "(0 → no gate)")
+    ap.add_argument("--tenancy", action="store_true",
+                    help="tenant-isolation section: aggressor flood vs a "
+                         "modest victim under weighted fair queueing")
+    ap.add_argument("--tenancy-victim-rate", type=float, default=6.0)
+    ap.add_argument("--tenancy-victim-requests", type=int, default=12)
+    ap.add_argument("--tenancy-aggressor-rate", type=float, default=200.0)
+    ap.add_argument("--tenancy-aggressor-requests", type=int, default=96)
+    ap.add_argument("--tenancy-gen", type=int, default=16)
+    ap.add_argument("--tenancy-deadline", type=float, default=0.75,
+                    help="per-request deadline (s) for both tenants — "
+                         "turns lost share into measurable loss")
+    ap.add_argument("--min-victim-goodput-frac", type=float, default=0.0,
+                    help="gate: contended victim goodput tokens must be "
+                         "at least this fraction of the victim-solo run "
+                         "(0 → no gate)")
     ap.add_argument("--http", action="store_true",
                     help="HTTP front-end section: the overload shed-on "
                          "workload replayed through the asyncio server "
@@ -836,6 +1028,16 @@ def main():
         overload_row = bench_overload(args)
         results.append(overload_row)
 
+    slo_row = None
+    if args.slo:
+        slo_row = bench_overload_slo(args)
+        results.append(slo_row)
+
+    tenancy_row = None
+    if args.tenancy:
+        tenancy_row = bench_tenancy(args)
+        results.append(tenancy_row)
+
     http_row = None
     if args.http:
         if overload_row is None:
@@ -863,6 +1065,12 @@ def main():
     if overload_row is not None:
         payload["overload_p99_ratio"] = overload_row["overload_p99_ratio"]
         payload["overload"] = overload_row
+    if slo_row is not None:
+        payload["slo_p99_ratio"] = slo_row["slo_p99_ratio"]
+        payload["overload_slo"] = slo_row
+    if tenancy_row is not None:
+        payload["victim_goodput_frac"] = tenancy_row["victim_goodput_frac"]
+        payload["tenancy"] = tenancy_row
     if http_row is not None:
         payload["http_ttft_overhead"] = http_row["http_vs_inproc_p99"]
         payload["http"] = http_row
@@ -912,6 +1120,38 @@ def main():
                 f"queue p99 under overload "
                 f"(> {args.max_overload_p99_ratio}x allowed — shedding "
                 f"must keep the admitted tail bounded)")
+
+    if args.max_slo_p99_ratio > 0:
+        if slo_row is None:
+            raise SystemExit("--max-slo-p99-ratio needs --slo")
+        if slo_row["timeouts_waiting"] > 0:
+            raise SystemExit(
+                f"ADMISSION REGRESSION: {slo_row['timeouts_waiting']} "
+                f"requests were admitted by the SLO estimator and then "
+                f"timed out in the waiting queue — predictive admission "
+                f"must reject provably-doomed requests at submit, not "
+                f"admit them to die")
+        if slo_row["slo_p99_ratio"] > args.max_slo_p99_ratio:
+            raise SystemExit(
+                f"TAIL LATENCY REGRESSION: with SLO admission on, p99 "
+                f"TTFT of admitted requests is "
+                f"{slo_row['slo_p99_ratio']:.3f}x the reactive shed-on "
+                f"p99 under the same overload "
+                f"(> {args.max_slo_p99_ratio}x allowed — rejecting the "
+                f"doomed at submit must not slow the admitted)")
+
+    if args.min_victim_goodput_frac > 0:
+        if tenancy_row is None:
+            raise SystemExit("--min-victim-goodput-frac needs --tenancy")
+        if (tenancy_row["victim_goodput_frac"]
+                < args.min_victim_goodput_frac):
+            raise SystemExit(
+                f"ISOLATION REGRESSION: the victim tenant kept only "
+                f"{tenancy_row['victim_goodput_frac']:.2f}x of its solo "
+                f"goodput under the aggressor flood "
+                f"(< {args.min_victim_goodput_frac}x required — weighted "
+                f"fair queueing must protect a tenant offering less than "
+                f"its fair share)")
 
     if args.max_http_ttft_overhead > 0:
         if http_row is None:

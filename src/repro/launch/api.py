@@ -24,8 +24,32 @@ import dataclasses
 
 from repro.configs import get_config, get_smoke_config
 from repro.launch.serve import build_draft, build_params
-from repro.serving import EngineConfig, InferenceEngine
+from repro.serving import EngineConfig, InferenceEngine, TenantQuota
 from repro.serving.server import InferenceServer, ServerConfig
+
+
+def parse_tenant_quotas(specs) -> dict:
+    """Parse repeated ``--tenant NAME,KEY=V[,KEY=V...]`` CLI specs.
+
+    Keys: rate (admits/s), burst, concurrent, pages, weight — e.g.
+    ``--tenant acme,rate=5,burst=10,weight=2 --tenant free,rate=1``.
+    """
+    quotas = {}
+    for spec in specs or ():
+        name, _, rest = spec.partition(",")
+        if not name:
+            raise ValueError(f"--tenant {spec!r}: empty tenant name")
+        kw = {}
+        for item in filter(None, rest.split(",")):
+            k, _, v = item.partition("=")
+            key = {"rate": "rate", "burst": "burst",
+                   "concurrent": "max_concurrent", "pages": "max_pages",
+                   "weight": "weight"}.get(k.strip())
+            if key is None:
+                raise ValueError(f"--tenant {spec!r}: unknown key {k!r}")
+            kw[key] = float(v) if key in ("rate", "weight") else int(v)
+        quotas[name] = TenantQuota(**kw)
+    return quotas
 
 
 def main() -> None:
@@ -53,6 +77,41 @@ def main() -> None:
                    help="bound the waiting queue; overflow sheds the "
                         "lowest-tier earliest-deadline waiter as 429")
     p.add_argument("--preempt-after-stalls", type=int, default=0)
+    p.add_argument("--slo-admission", action="store_true",
+                   help="SLO-aware admission: 429 deadline-carrying "
+                        "requests at submit when the seat-time estimator "
+                        "says they cannot finish in time, with a computed "
+                        "Retry-After")
+    p.add_argument("--slo-slack", type=float, default=1.0,
+                   help="admission slack: admit while estimated finish ≤ "
+                        "slack × deadline")
+    p.add_argument("--tenant", action="append", default=[],
+                   metavar="NAME,KEY=V[,...]",
+                   help="per-tenant quota (repeatable): keys rate "
+                        "(admits/s), burst, concurrent, pages, weight — "
+                        "e.g. --tenant acme,rate=5,burst=10,weight=2")
+    p.add_argument("--default-tenant-quota", default="",
+                   metavar="KEY=V[,...]",
+                   help="quota applied to tenants without a --tenant "
+                        "entry (same keys, no name)")
+    p.add_argument("--stream-queue-max", type=int, default=256,
+                   help="per-stream SSE high-water mark: past this many "
+                        "undelivered tokens the slow-client policy "
+                        "engages (0 → unbounded)")
+    p.add_argument("--slow-client-policy", default="cancel",
+                   choices=["cancel", "pause"],
+                   help="what to do with a stalled SSE reader past the "
+                        "high-water mark: cancel the request, or pause "
+                        "its scheduling (freeing the slot) and resume "
+                        "once the stream drains")
+    p.add_argument("--no-keep-alive", action="store_true",
+                   help="close every connection after one response "
+                        "(HTTP keep-alive is on by default)")
+    p.add_argument("--keepalive-idle-s", type=float, default=5.0,
+                   help="drop keep-alive connections idle this long")
+    p.add_argument("--max-conn-requests", type=int, default=100,
+                   help="requests served per connection before the "
+                        "server answers Connection: close")
     p.add_argument("--default-max-tokens", type=int, default=16)
     p.add_argument("--max-restarts", type=int, default=3,
                    help="supervisor budget: crashes tolerated per "
@@ -90,14 +149,24 @@ def main() -> None:
         spec_k=args.spec_k, draft_cfg=draft_cfg,
         kv_dtype=args.kv_dtype,
         max_waiting=args.max_waiting or None,
-        preempt_after_stalls=args.preempt_after_stalls),
+        preempt_after_stalls=args.preempt_after_stalls,
+        slo_admission=args.slo_admission, slo_slack=args.slo_slack,
+        tenant_quotas=parse_tenant_quotas(args.tenant) or None,
+        default_tenant_quota=(
+            parse_tenant_quotas(["_," + args.default_tenant_quota])["_"]
+            if args.default_tenant_quota else None)),
         draft_params=draft_params)
     server = InferenceServer(engine, ServerConfig(
         host=args.host, port=args.port,
         default_max_tokens=args.default_max_tokens,
         max_restarts=args.max_restarts,
         restart_window_s=args.restart_window_s,
-        slow_steps_restart=args.slow_steps_restart))
+        slow_steps_restart=args.slow_steps_restart,
+        stream_queue_max=args.stream_queue_max,
+        slow_client_policy=args.slow_client_policy,
+        keep_alive=not args.no_keep_alive,
+        keepalive_idle_s=args.keepalive_idle_s,
+        max_requests_per_conn=args.max_conn_requests))
     warmup = None if args.no_warmup else args.warmup_lens
     print(f"serving {cfg.name} on http://{args.host}:{args.port} "
           f"(slots={args.slots}, page_size={args.page_size}, "

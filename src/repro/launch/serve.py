@@ -248,8 +248,13 @@ class TrafficConfig:
     cancel_rate: float = 0.0
     # trace replay: a list of records (see load_trace) overrides the
     # Poisson arrival process — per-record arrival offset, prompt length,
-    # max_new_tokens, priority and deadline drive the run instead
+    # max_new_tokens, priority, deadline and tenant drive the run instead
     trace: Any = None
+    # multi-tenant traffic: Poisson-mode requests are tagged round-robin
+    # from this tuple (empty → untagged); trace records carry their own
+    # "tenant". Tags feed per-tenant quota/WFQ enforcement in the engine
+    # and the per-tenant breakdown in the returned metrics.
+    tenants: tuple = ()
 
 
 def load_trace(path: str) -> List[Dict[str, Any]]:
@@ -258,7 +263,7 @@ def load_trace(path: str) -> List[Dict[str, Any]]:
     One JSON object per line::
 
         {"t": 0.12, "prompt_len": 16, "max_new_tokens": 16,
-         "priority": 1, "deadline_s": 2.0}
+         "priority": 1, "deadline_s": 2.0, "tenant": "acme"}
 
     ``t`` (arrival offset in seconds from the run start) is required and
     must be non-decreasing; everything else defaults (prompt_len 16,
@@ -301,6 +306,7 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         prios = [int(r.get("priority", 0)) for r in tc.trace]
         deadlines = [float(r.get("deadline_s", tc.deadline_s))
                      for r in tc.trace]
+        tenants = [str(r.get("tenant", "")) for r in tc.trace]
         # clamp so no record can exceed its slot (prompt + gen + spec
         # headroom ≤ capacity) — a trace is a workload shape, not a
         # rejection test
@@ -315,6 +321,9 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         gens = [tc.gen_tokens] * n_requests
         prios = [0] * n_requests
         deadlines = [tc.deadline_s] * n_requests
+        tenants = ([tc.tenants[i % len(tc.tenants)]
+                    for i in range(n_requests)] if tc.tenants
+                   else [""] * n_requests)
     if tc.system_prompts > 0:
         systems = [rng.integers(0, engine.cfg.vocab_size,
                                 size=tc.system_len).astype(np.int32)
@@ -357,7 +366,8 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
                 temperature=tc.temperature, top_k=tc.top_k,
                 arrival_time=arrivals[submitted],
                 deadline_s=deadlines[submitted],
-                priority=prios[submitted]))
+                priority=prios[submitted],
+                tenant=tenants[submitted]))
             submitted += 1
         for i in np.nonzero(cancel_at <= now)[0]:
             if i < submitted:
@@ -424,6 +434,16 @@ def run_traffic(engine: InferenceEngine, tc: TrafficConfig, log=print
         "draft_accepted": st["draft_accepted"],
         "acceptance_rate": (st["draft_accepted"] / st["draft_proposed"]
                             if st["draft_proposed"] else 0.0),
+        # overload/SLO accounting: predictive admission turns would-be
+        # queue timeouts into immediate rejects and keeps prefill work
+        # from being wasted on doomed requests
+        "slo_rejected": st.get("slo_rejected", 0),
+        "quota_rejected": st.get("quota_rejected", 0),
+        "timeouts_waiting": st.get("timeouts_waiting", 0),
+        "timeouts_running": st.get("timeouts_running", 0),
+        "wasted_prefill_tokens": st.get("wasted_prefill_tokens", 0),
+        "tenants": {t: dict(v)
+                    for t, v in st.get("tenants", {}).items()},
     }
     log(f"{len(reqs)} requests, {total_tokens} tokens in {elapsed:.2f}s "
         f"→ {metrics['throughput_tok_s']:.1f} tok/s; "
@@ -568,6 +588,18 @@ def main() -> None:
                    help="bound the waiting queue: beyond it submit sheds "
                         "the earliest-deadline waiting request as REJECTED "
                         "(0 → unbounded)")
+    p.add_argument("--slo-admission", action="store_true",
+                   help="SLO-aware admission: reject a deadline-carrying "
+                        "request at submit when the seat-time estimator "
+                        "(occupancy + queue + step-time EWMA + prefix-"
+                        "cache probe) says it cannot finish in time")
+    p.add_argument("--slo-slack", type=float, default=1.0,
+                   help="admission slack: admit while estimated finish ≤ "
+                        "slack × deadline (>1 lenient, <1 conservative)")
+    p.add_argument("--tenants", default="",
+                   help="comma-separated tenant names; Poisson-mode "
+                        "requests are tagged round-robin (enables the "
+                        "per-tenant metrics breakdown)")
     p.add_argument("--preempt-after-stalls", type=int, default=0,
                    help="page-pressure preemption: after this many "
                         "consecutive fully-stalled admission steps, evict "
@@ -633,7 +665,8 @@ def main() -> None:
         spec_k=args.spec_k, draft_cfg=draft_cfg,
         kv_dtype=args.kv_dtype,
         max_waiting=args.max_waiting or None,
-        preempt_after_stalls=args.preempt_after_stalls),
+        preempt_after_stalls=args.preempt_after_stalls,
+        slo_admission=args.slo_admission, slo_slack=args.slo_slack),
         draft_params=draft_params)
     # mixed prompt lengths around --prompt-len, clamped so every request
     # fits its slot (prompt + gen + spec headroom ≤ capacity;
@@ -654,7 +687,8 @@ def main() -> None:
         temperature=args.temperature, top_k=args.top_k,
         system_prompts=args.system_prompts, system_len=args.system_len,
         deadline_s=args.deadline_s, cancel_rate=args.cancel_rate,
-        trace=load_trace(args.trace) if args.trace else None)
+        trace=load_trace(args.trace) if args.trace else None,
+        tenants=tuple(t for t in args.tenants.split(",") if t))
     metrics = run_traffic(engine, tc)
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -4,10 +4,14 @@ Layering (docs/serving.md has the full picture):
 
   kv_slots    — slot-based KV/recurrent-state pools with per-slot lengths
                 (capacity-dense SlotPool, block-paged PagedSlotPool)
-  scheduler   — FCFS request queue: admission into free slots, retirement;
-                per-request lifecycle statuses (QUEUED → RUNNING →
-                FINISHED/TIMEOUT/CANCELLED/REJECTED/FAILED, with
-                PREEMPTED→requeued under page pressure)
+  admission   — pure admission arithmetic: seat-time estimator behind
+                SLO-aware admission and computed Retry-After, TenantQuota
+                limits, TokenBucket rate limiter
+  scheduler   — priority/WFQ request queue: admission into free slots,
+                retirement; per-request lifecycle statuses (QUEUED →
+                RUNNING → FINISHED/TIMEOUT/CANCELLED/REJECTED/FAILED,
+                with PREEMPTED→requeued under page pressure and
+                PAUSED→resumed under slow-client backpressure)
   engine      — InferenceEngine: batched prefill for prompt ingestion, one
                 jit'd ragged decode step (optionally over block-paged KV),
                 greedy/temperature/top-k sampling; with spec_k > 0 each
@@ -24,6 +28,9 @@ Layering (docs/serving.md has the full picture):
                 ``InferenceEngine.recover()`` (launch/api.py is the CLI)
 """
 
+from repro.serving.admission import (  # noqa: F401
+    TenantQuota, TokenBucket, estimate_seat_steps,
+)
 from repro.serving.engine import EngineConfig, InferenceEngine  # noqa: F401
 from repro.serving.faults import (  # noqa: F401
     FakeClock, FaultInjector, StepWatchdog,
@@ -35,7 +42,7 @@ from repro.serving.scheduler import (  # noqa: F401
     Request, Scheduler, TERMINAL,
 )
 from repro.serving.server import (  # noqa: F401
-    EngineHost, InferenceServer, ServerConfig, start_in_thread,
+    EngineHost, HttpSession, InferenceServer, ServerConfig, start_in_thread,
 )
 from repro.serving.speculative import (  # noqa: F401
     DraftModel, OracleDraft, accept_draft,

@@ -76,10 +76,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import model_fns
+from repro.serving.admission import (TenantQuota, TokenBucket,
+                                     estimate_seat_steps, request_work_steps)
 from repro.serving.faults import StepWatchdog
 from repro.serving.kv_slots import PagedSlotPool, SlotPool
-from repro.serving.scheduler import (CANCELLED, FAILED, REJECTED, TIMEOUT,
-                                     Request, Scheduler)
+from repro.serving.scheduler import (CANCELLED, FAILED, FINISHED, REJECTED,
+                                     TIMEOUT, Request, Scheduler)
 
 PyTree = Any
 
@@ -183,6 +185,27 @@ class EngineConfig:
     preempt_after_stalls: int = 0
     watchdog_threshold: float = 3.0
     fault_injector: Any = None
+    # SLO-aware admission (serving/admission.py): with slo_admission on,
+    # submit() event-simulates slot turnover (free slots + per-request
+    # remaining work + tier-aware queue depth ahead) against the measured
+    # step-time EWMA and rejects a deadline-carrying request at submit
+    # when even its *finish* is provably past deadline_s × slo_slack —
+    # instead of queueing work that is doomed to TIMEOUT. Prefix-cache
+    # hits discount the prefill term (cheap admits are admitted
+    # opportunistically). slo_step_time pins the step-time estimate in
+    # seconds (0 → use the calibration EWMA, which survives reset_stats
+    # but is cleared by warmup so compile steps never pollute it). Every
+    # reject/shed computes Request.retry_after_s from the same simulation.
+    slo_admission: bool = False
+    slo_slack: float = 1.0
+    slo_step_time: float = 0.0
+    # per-tenant isolation: tenant_quotas maps tenant -> TenantQuota
+    # (rate/burst token bucket, concurrent-request cap, KV page budget,
+    # WFQ weight); default_tenant_quota applies to tenants not listed
+    # (None → unlimited). Quota rejects are REJECTED with a computed
+    # retry_after_s; WFQ weights feed the scheduler's admission order.
+    tenant_quotas: Optional[Dict[str, TenantQuota]] = None
+    default_tenant_quota: Optional[TenantQuota] = None
 
 
 class InferenceEngine:
@@ -273,6 +296,15 @@ class InferenceEngine:
         self.faults = ec.fault_injector
         self._step_idx = -1      # engine step counter (fault schedule index)
         self._stall_steps = 0    # consecutive fully-page-stalled steps
+        # admission-estimator step-time calibration: a second EWMA beside
+        # the watchdog's that SURVIVES reset_stats (the watchdog is
+        # recreated fresh per reset, so its EWMA is useless right after
+        # warmup). warmup() clears it so compile-heavy steps never seed it.
+        self._step_time = 0.0
+        self._buckets: Dict[str, TokenBucket] = {}   # tenant rate limiters
+        if ec.tenant_quotas:
+            self.sched.weights = {t: q.weight
+                                  for t, q in ec.tenant_quotas.items()}
         # per-decode-step KV traffic accounting (BENCH/bench reporting):
         # bytes one cache position (K+V + any sibling scale leaves, all
         # attention layers) costs to read — derived from the ACTUAL pool
@@ -363,13 +395,18 @@ class InferenceEngine:
         self._topks = np.zeros((ec.n_slots,), np.int32)
         self.stats: Dict[str, Any] = {}
         self.reset_stats()
+        # single choke point for terminal transitions: the scheduler fires
+        # this the moment any request enters `finished`, wherever the
+        # retire/reject/drop happened — per-tenant counters cannot drift
+        self.sched.on_terminal = self._account_terminal
 
     # -- request intake ----------------------------------------------------
 
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
                temperature: float = 0.0, top_k: int = 0,
                eos_id: Optional[int] = None, arrival_time: float = 0.0,
-               deadline_s: float = 0.0, priority: int = 0) -> int:
+               deadline_s: float = 0.0, priority: int = 0,
+               tenant: str = "") -> int:
         """Enqueue a request; returns its rid. A request the engine can
         NEVER seat (slot capacity / page pool too small) is retired
         immediately as REJECTED — the rid still comes back, so an open-loop
@@ -378,7 +415,11 @@ class InferenceEngine:
         measured from this submit): expired requests retire as TIMEOUT
         whether waiting or mid-decode. ``priority`` picks the QoS tier:
         higher tiers are admitted first (FCFS within a tier) and lower
-        tiers are preferred as shedding/preemption victims.
+        tiers are preferred as shedding/preemption victims. ``tenant``
+        names the quota/fairness bucket: over-quota submits are REJECTED
+        with a computed ``retry_after_s``, and with ``slo_admission`` on,
+        a deadline the occupancy simulation proves unmakeable is rejected
+        right here instead of queueing a doomed request.
         Thread-safe: any thread may call this against a stepping engine."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
@@ -388,7 +429,9 @@ class InferenceEngine:
                 prompt=prompt, max_new_tokens=max_new_tokens,
                 temperature=temperature, top_k=top_k, eos_id=eos_id,
                 arrival_time=arrival_time, deadline_s=float(deadline_s),
-                priority=int(priority), submit_time=self._clock())
+                priority=int(priority), tenant=str(tenant),
+                submit_time=self._clock())
+            self._tenant_stats(req.tenant)["submitted"] += 1
             # speculative decoding scratch: the verify dispatch writes up
             # to spec_k draft K/V rows past the commit frontier before
             # acceptance rolls them back — the slot needs that headroom
@@ -409,6 +452,18 @@ class InferenceEngine:
                         req,
                         f"request needs {need} KV pages but the pool only "
                         f"has {self.pool.n_pages - 1} allocatable pages")
+            reason = self._quota_check_locked(req)
+            if reason is not None:
+                self.stats["rejected"] += 1
+                self.stats["quota_rejected"] += 1
+                return self.sched.reject(req, reason)
+            if self.ec.slo_admission and req.deadline_s > 0:
+                reason = self._slo_check_locked(req)
+                if reason is not None:
+                    self.stats["rejected"] += 1
+                    self.stats["slo_rejected"] += 1
+                    req.retry_after_s = self._drain_estimate_locked()
+                    return self.sched.reject(req, reason)
             rid = self.sched.submit(req)
             if (self.ec.max_waiting
                     and len(self.sched.waiting) > self.ec.max_waiting):
@@ -422,10 +477,175 @@ class InferenceEngine:
                                    (r.submit_time + r.deadline_s)
                                    if r.deadline_s > 0 else float("inf"),
                                    r.rid))
+                victim.retry_after_s = self._drain_estimate_locked()
                 self.sched.drop_waiting(victim, REJECTED,
                                         "shed: waiting queue full")
                 self.stats["shed"] += 1
             return rid
+
+    # -- SLO-aware admission & per-tenant quotas ---------------------------
+
+    def _quota(self, tenant: str) -> Optional[TenantQuota]:
+        if self.ec.tenant_quotas and tenant in self.ec.tenant_quotas:
+            return self.ec.tenant_quotas[tenant]
+        return self.ec.default_tenant_quota
+
+    def _tenant_stats(self, tenant: str) -> Dict[str, Any]:
+        key = tenant or "default"
+        ts = self.stats["tenants"].get(key)
+        if ts is None:
+            ts = self.stats["tenants"][key] = dict(
+                submitted=0, finished=0, rejected=0, timeout=0,
+                cancelled=0, failed=0, tokens=0, goodput_tokens=0)
+        return ts
+
+    def _account_terminal(self, req: Request) -> None:
+        """scheduler.on_terminal hook: per-tenant counters plus the
+        wasted-prefill tally (prompt tokens whose prefill the engine paid
+        for a request that never delivered — the cost predictive admission
+        exists to avoid)."""
+        ts = self._tenant_stats(req.tenant)
+        key = req.status.lower()
+        ts[key] = ts.get(key, 0) + 1
+        ts["tokens"] += len(req.generated)
+        if req.status == FINISHED:
+            ts["goodput_tokens"] += len(req.generated)
+        elif req.admit_time > 0 or req.status == FAILED:
+            self.stats["wasted_prefill_tokens"] += req.prompt_len
+
+    def _live_requests(self) -> List[Request]:
+        return (list(self.sched.active.values()) + list(self.sched.waiting)
+                + list(self.sched.paused.values()))
+
+    def _quota_check_locked(self, req: Request) -> Optional[str]:
+        """Returns a rejection reason if the tenant is over quota (and
+        sets ``req.retry_after_s`` to the computed backoff), else None."""
+        quota = self._quota(req.tenant)
+        if quota is None:
+            return None
+        live = [r for r in self._live_requests() if r.tenant == req.tenant]
+        if quota.max_concurrent > 0 and len(live) >= quota.max_concurrent:
+            req.retry_after_s = self._drain_estimate_locked()
+            return (f"tenant {req.tenant or 'default'!r} at its concurrent-"
+                    f"request quota ({quota.max_concurrent})")
+        if quota.max_pages > 0 and self.paged:
+            held = sum(self.pool.pages_needed(
+                r.prompt_len - r.folded + r.max_new_tokens
+                + self._headroom()) for r in live)
+            need = self.pool.pages_needed(
+                req.prompt_len + req.max_new_tokens + self._headroom())
+            if held + need > quota.max_pages:
+                req.retry_after_s = self._drain_estimate_locked()
+                return (f"tenant {req.tenant or 'default'!r} over its KV "
+                        f"page budget ({held} held + {need} needed > "
+                        f"{quota.max_pages})")
+        bucket = self._buckets.get(req.tenant)
+        if bucket is None:
+            bucket = self._buckets[req.tenant] = TokenBucket(
+                quota.rate, quota.burst, clock=self._clock)
+        if not bucket.try_take():
+            req.retry_after_s = bucket.next_free_s()
+            return (f"tenant {req.tenant or 'default'!r} rate-limited "
+                    f"({quota.rate:g} req/s, burst {quota.burst})")
+        return None
+
+    def _admission_step_time(self) -> float:
+        return (self.ec.slo_step_time if self.ec.slo_step_time > 0
+                else self._step_time)
+
+    def _seat_steps_locked(self, ahead: List[Request]) -> float:
+        """Steps until a slot frees for a request behind ``ahead``, plus
+        the backfill-defer allowance (admissions can be held back up to
+        ``backfill_max_defer`` steps by chunking hysteresis)."""
+        running = [request_work_steps(r.prompt_len, r.folded,
+                                      r.max_new_tokens, len(r.generated)) - 1
+                   for r in self.sched.active.values()]
+        costs = [request_work_steps(w.prompt_len, w.folded,
+                                    w.max_new_tokens, len(w.generated))
+                 for w in ahead]
+        seat = estimate_seat_steps(self.sched.free_slots(), running, costs)
+        return seat + self.ec.backfill_max_defer
+
+    def _drain_estimate_locked(self) -> float:
+        """Estimated seconds until a NEW request at the back of the whole
+        queue could seat — the occupancy-derived Retry-After. 0 when the
+        step time is uncalibrated (the HTTP layer floors it)."""
+        st = self._admission_step_time()
+        if st <= 0:
+            return 0.0
+        return self._seat_steps_locked(list(self.sched.waiting)) * st
+
+    def _slo_check_locked(self, req: Request) -> Optional[str]:
+        """Returns a rejection reason when the occupancy simulation proves
+        ``req`` cannot finish inside deadline_s × slo_slack, else None.
+        Uncalibrated step time (no measured steps yet) admits everything —
+        predictive admission degrades to the reactive PR-7 behavior.
+        Prefix-cache hits discount the prefill term toward zero, so cheap
+        prefix-hit admits squeak in where a cold prompt would not."""
+        st = self._admission_step_time()
+        if st <= 0:
+            return None
+        ahead = [w for w in self.sched.waiting
+                 if w.priority >= req.priority]
+        seat = self._seat_steps_locked(ahead)
+        prefill = 1.0
+        if self.prefix_cache:
+            hit, _ = self.pool.match_prefix(req.prompt)
+            if hit:
+                prefill = max(0.25, (req.prompt_len - hit)
+                              / max(1, req.prompt_len))
+        est_ttft = (seat + prefill) * st
+        est_finish = (seat + prefill + req.max_new_tokens) * st
+        if est_finish > req.deadline_s * max(self.ec.slo_slack, 1e-6):
+            return (f"slo: estimated finish {est_finish:.3f}s (ttft "
+                    f"{est_ttft:.3f}s) exceeds deadline "
+                    f"{req.deadline_s:g}s at current occupancy")
+        return None
+
+    def retry_after_estimate(self) -> float:
+        """Occupancy-derived drain estimate in seconds for an arriving
+        request (0 when uncalibrated). Thread-safe: the HTTP layer calls
+        this for 503s that never reach submit()."""
+        with self._elock:
+            return self._drain_estimate_locked()
+
+    def pause(self, rid: int) -> bool:
+        """Park a live request (slow-client backpressure): a running
+        request folds its generated tokens into its prompt and releases
+        its slot + KV pages; a waiting one just leaves the queue. The
+        request keeps its rid and deadline, can still be cancelled or
+        time out, and :meth:`resume` re-enqueues it (re-prefill replays
+        the folded tokens bit-identically under greedy). Returns True if
+        the rid was live. Thread-safe and idempotent."""
+        with self._elock:
+            for slot, req in list(self.sched.active.items()):
+                if req.rid == rid:
+                    self._fold(req)
+                    self._release(slot)
+                    self.sched.pause(slot)
+                    self.stats["paused"] += 1
+                    return True
+            for req in list(self.sched.waiting):
+                if req.rid == rid:
+                    self.sched.pause_waiting(req)
+                    self.stats["paused"] += 1
+                    return True
+            return False
+
+    def resume(self, rid: int) -> bool:
+        """Re-enqueue a paused request (client caught up). Thread-safe."""
+        with self._elock:
+            if self.sched.resume(rid) is None:
+                return False
+            self.stats["resumed"] += 1
+            return True
+
+    def reap(self) -> int:
+        """Expire deadlines without running a step. The serving host calls
+        this on idle ticks so parked (PAUSED) requests — which produce no
+        steps — still honor their deadlines. Returns how many expired."""
+        with self._elock:
+            return len(self._expire_deadlines())
 
     def cancel(self, rid: int) -> Optional[Request]:
         """Cancel a request by rid, waiting or mid-decode. A running
@@ -446,7 +666,10 @@ class InferenceEngine:
                 if req.rid == rid:
                     self.stats["cancelled"] += 1
                     return self.sched.drop_waiting(req, CANCELLED)
-            return None
+            req = self.sched.drop_paused(rid, CANCELLED)
+            if req is not None:
+                self.stats["cancelled"] += 1
+            return req
 
     # -- cross-thread serving hooks (used by serving/server.py) ------------
 
@@ -463,42 +686,57 @@ class InferenceEngine:
                         float(np.mean(v)) if v else 0.0)
                 elif isinstance(v, list):
                     snap[k] = list(v)
+                elif isinstance(v, dict):
+                    # tenants: dict of per-tenant counter dicts — deep
+                    # enough a copy that the reader can't see torn updates
+                    snap[k] = {kk: dict(vv) if isinstance(vv, dict) else vv
+                               for kk, vv in v.items()}
                 else:
                     snap[k] = v
             snap["active"] = len(self.sched.active)
             snap["waiting"] = len(self.sched.waiting)
+            snap["paused_now"] = len(self.sched.paused)
+            snap["retry_after_est_s"] = self._drain_estimate_locked()
             return snap
 
     def poll(self, cursor: int = 0, trim: bool = False
              ) -> Tuple[int, List[Tuple[int, List[int]]],
-                        List[Tuple[int, List[int], str, str]]]:
+                        List[Tuple[int, List[int], str, str, float]]]:
         """One-lock progress snapshot for a cross-thread consumer: returns
         ``(new_cursor, live, fin)`` where ``live`` is ``(rid, generated)``
-        for every waiting/running request and ``fin`` is
-        ``(rid, generated, status, error)`` for each newly terminal request
-        past ``cursor`` on the finished list. All token lists are copies.
-        ``trim=True`` drops the consumed finished entries instead of
-        advancing the cursor (single-consumer memory hygiene for a
-        long-running server; the returned cursor is then always 0)."""
+        for every waiting/running/paused request and ``fin`` is
+        ``(rid, generated, status, error, retry_after_s)`` for each newly
+        terminal request past ``cursor`` on the finished list. All token
+        lists are copies. ``trim=True`` drops the consumed finished
+        entries instead of advancing the cursor (single-consumer memory
+        hygiene for a long-running server; the returned cursor is then
+        always 0)."""
         with self._elock:
-            fin = [(r.rid, list(r.generated), r.status, r.error)
+            fin = [(r.rid, list(r.generated), r.status, r.error,
+                    r.retry_after_s)
                    for r in self.sched.finished[cursor:]]
             live = ([(r.rid, list(r.generated))
                      for r in self.sched.active.values()]
                     + [(r.rid, list(r.generated))
-                       for r in self.sched.waiting])
+                       for r in self.sched.waiting]
+                    + [(r.rid, list(r.generated))
+                       for r in self.sched.paused.values()])
             if trim:
                 del self.sched.finished[cursor:]
                 return 0, live, fin
             return len(self.sched.finished), live, fin
 
     def shed_waiting(self, reason: str) -> List[Request]:
-        """Drop every waiting request as REJECTED (graceful drain: running
-        requests finish, queued ones are turned away). Returns them."""
+        """Drop every waiting AND paused request as REJECTED (graceful
+        drain: running requests finish, queued/parked ones are turned
+        away). Returns them."""
         with self._elock:
             dropped: List[Request] = []
             for req in list(self.sched.waiting):
                 dropped.append(self.sched.drop_waiting(req, REJECTED, reason))
+                self.stats["shed"] += 1
+            for rid in list(self.sched.paused):
+                dropped.append(self.sched.drop_paused(rid, REJECTED, reason))
                 self.stats["shed"] += 1
             return dropped
 
@@ -915,10 +1153,15 @@ class InferenceEngine:
         """End-of-step bookkeeping shared by every return path: mirror pool
         counters and feed the step duration to the watchdog."""
         self._sync_pool_stats()
+        dt = self._clock() - t_start
         if self._watchdog is not None:
-            self._watchdog.record(self._clock() - t_start)
+            self._watchdog.record(dt)
             self.stats["watchdog_slow_steps"] = self._watchdog.slow_steps
             self.stats["step_time_ewma"] = self._watchdog.ewma
+        # admission-estimator calibration (survives reset_stats; warmup
+        # clears it so compile steps never seed the estimate)
+        self._step_time = (dt if self._step_time <= 0
+                           else 0.8 * self._step_time + 0.2 * dt)
 
     def _release(self, slot: int) -> None:
         self.pool.release(slot)
@@ -934,12 +1177,20 @@ class InferenceEngine:
                 out.append(self.sched.drop_waiting(
                     req, TIMEOUT, "deadline expired while queued"))
                 self.stats["timeouts"] += 1
+                self.stats["timeouts_waiting"] += 1
         for slot, req in list(self.sched.active.items()):
             if req.deadline_s > 0 and now > req.submit_time + req.deadline_s:
                 req.error = "deadline expired mid-decode"
                 self._release(slot)
                 out.append(self.sched.retire(slot, TIMEOUT))
                 self.stats["timeouts"] += 1
+                self.stats["timeouts_running"] += 1
+        for rid, req in list(self.sched.paused.items()):
+            if req.deadline_s > 0 and now > req.submit_time + req.deadline_s:
+                out.append(self.sched.drop_paused(
+                    rid, TIMEOUT, "deadline expired while paused"))
+                self.stats["timeouts"] += 1
+                self.stats["timeouts_running"] += 1
         return out
 
     @staticmethod
@@ -976,7 +1227,8 @@ class InferenceEngine:
         with consistent refcounts. Chaos tests call this after mixed-fault
         runs; it is cheap enough to call in benches too."""
         with self._elock:
-            assert not self.sched.active and not self.sched.waiting, \
+            assert (not self.sched.active and not self.sched.waiting
+                    and not self.sched.paused), \
                 "check_conservation() needs a drained engine"
             assert self.sched.free_slots() == self.ec.n_slots, "leaked slots"
             if self.paged:
@@ -1148,7 +1400,11 @@ class InferenceEngine:
                               preemptions=0, shed=0, rejected=0, timeouts=0,
                               cancelled=0, failed=0, drafter_failures=0,
                               recoveries=0, watchdog_slow_steps=0,
-                              step_time_ewma=0.0)
+                              step_time_ewma=0.0,
+                              slo_rejected=0, quota_rejected=0,
+                              timeouts_waiting=0, timeouts_running=0,
+                              wasted_prefill_tokens=0, paused=0, resumed=0,
+                              tenants={})
             # fresh watchdog per reset: warmup's compile-heavy steps must
             # not seed the EWMA the measured window is judged against
             self._watchdog = (
@@ -1258,6 +1514,9 @@ class InferenceEngine:
                             self._next_key(), zeros,
                             zeros.astype(jnp.int32), bt, use_topk=use_topk)
         self.sched.finished.clear()
+        # warmup steps paid jit compiles — worthless as admission-estimator
+        # calibration; start the EWMA fresh from measured traffic
+        self._step_time = 0.0
         self.reset_stats()
 
     def run(self) -> List[Request]:

@@ -37,6 +37,13 @@ Fault kinds
     ``serving/server.py`` raises before dispatching that step, exercising
     the supervisor's recover→restart path. Indexed by the *host* loop's
     step-attempt counter (which counts exactly the engine steps it drives).
+``slow_client``
+    Also consumed by the HTTP layer: the pump picks one open stream
+    (``choose``) and withholds token delivery to it for ``arg`` wall-clock
+    seconds (default 0.25), simulating a stalled SSE reader — the
+    per-stream queue depth grows until the slow-client backpressure policy
+    (pause or disconnect-as-cancel) engages. Indexed by the host loop's
+    step counter, like ``crash_step``.
 """
 
 from __future__ import annotations
@@ -48,7 +55,7 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 KINDS = ("page_alloc", "nan_logits", "drafter", "slow_step", "cancel",
-         "crash_step")
+         "crash_step", "slow_client")
 
 
 @dataclass

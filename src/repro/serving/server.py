@@ -19,6 +19,19 @@ and requeue, and the loop resumes — up to ``max_restarts`` crashes per
 ``restart_window_s``, after which the host gives up and fails every open
 stream rather than looping forever.
 
+Slow-client backpressure: every per-request SSE queue is bounded. The
+pump tracks each stream's depth (undelivered tokens, queued plus
+withheld); past ``ServerConfig.stream_queue_max`` the
+``slow_client_policy`` knob picks the remedy — ``"cancel"``
+(disconnect-as-cancel: the request retires, slot and KV pages free within
+one step, the stalled reader gets the CANCELLED terminal event if it ever
+drains) or ``"pause"`` (the engine parks the request out of its slot —
+generated tokens fold into the prompt, pages release — and resumes it
+when the queue drains below half the high-water mark; re-prefill replays
+the folded tokens bit-identically under greedy). Either way one
+slowloris-style consumer cannot OOM the server or hold pages forever.
+The ``slow_client`` fault kind simulates such a reader deterministically.
+
 ``InferenceServer`` — the asyncio HTTP server:
 
 ==========================  ================================================
@@ -36,17 +49,24 @@ stream rather than looping forever.
 
 Terminal status → HTTP: FINISHED 200, REJECTED 429 (+ ``Retry-After``),
 TIMEOUT 408, FAILED 500, CANCELLED 499 (never actually sent — the client
-is gone). A mid-stream client disconnect propagates to ``engine.cancel``
-so the slot and its KV pages free within one step. SIGTERM (see
+is gone). Every ``Retry-After`` on a 429/503 is *computed*: the engine's
+admission estimator event-simulates current occupancy into a drain time
+(``InferenceEngine.retry_after_estimate``), and ``ServerConfig.
+retry_after_s`` is only the floor. A mid-stream client disconnect
+propagates to ``engine.cancel`` so the slot and its KV pages free within
+one step. Connections are keep-alive by default (HTTP/1.1 semantics:
+loop requests per connection until ``Connection: close``, the
+``keepalive_idle_s`` idle timeout, or ``max_requests_per_conn``); SSE
+streaming responses still close their connection. SIGTERM (see
 ``serve_forever`` / ``launch/api.py``) triggers graceful drain: readiness
 flips false, the listener closes, the waiting queue is shed as REJECTED,
 running requests finish and flush their streams, then
 ``check_conservation()`` verifies nothing leaked before exit.
 
 The module also ships blocking reference clients (``http_request``,
-``stream_completion``) used by ``tests/test_server.py`` and
-``benchmarks/serve_bench.py --http`` — plain sockets, so tests control
-disconnects precisely.
+``stream_completion``, and the connection-reusing ``HttpSession``) used
+by ``tests/test_server.py`` and ``benchmarks/serve_bench.py --http`` —
+plain sockets, so tests control disconnects precisely.
 """
 
 from __future__ import annotations
@@ -54,6 +74,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import json
+import math
 import signal
 import socket
 import threading
@@ -74,6 +95,7 @@ STATUS_HTTP = {FINISHED: 200, REJECTED: 429, TIMEOUT: 408, FAILED: 500,
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
             405: "Method Not Allowed", 408: "Request Timeout",
             413: "Payload Too Large", 429: "Too Many Requests",
+            431: "Request Header Fields Too Large",
             500: "Internal Server Error", 503: "Service Unavailable"}
 
 
@@ -83,7 +105,10 @@ class ServerConfig:
     port: int = 0                      # 0 → ephemeral (tests/bench)
     max_body_bytes: int = 1 << 20
     default_max_tokens: int = 16
-    retry_after_s: int = 1             # Retry-After on 429/503
+    # FLOOR for the computed Retry-After on 429/503: the actual header
+    # value is the engine's occupancy-derived drain estimate, never less
+    # than this (and exactly this when the estimator is uncalibrated)
+    retry_after_s: int = 1
     # supervisor budget: more than max_restarts crashes inside any
     # restart_window_s window → give up (fail open streams, readyz 503)
     max_restarts: int = 3
@@ -93,6 +118,34 @@ class ServerConfig:
     slow_steps_restart: int = 0
     idle_sleep_s: float = 0.02         # mailbox poll interval when idle
     drain_grace_s: float = 30.0        # max wait for in-flight streams
+    # slow-client backpressure: a stream whose undelivered-token depth
+    # (queued + withheld) exceeds stream_queue_max triggers the policy —
+    # "cancel" retires the request (disconnect-as-cancel), "pause" parks
+    # it out of its slot until the queue drains below stream_queue_max/2.
+    # 0 disables the bound (the pre-backpressure unbounded behavior).
+    stream_queue_max: int = 256
+    slow_client_policy: str = "cancel"   # "cancel" | "pause"
+    # HTTP keep-alive: loop requests per connection until the client sends
+    # Connection: close, keepalive_idle_s passes between requests, or
+    # max_requests_per_conn are served. SSE responses always close.
+    keep_alive: bool = True
+    keepalive_idle_s: float = 5.0
+    max_requests_per_conn: int = 100
+
+
+class _Sub:
+    """Per-request subscriber state: the event loop + queue tokens fan out
+    to, how many tokens were delivered, and the slow-client bookkeeping
+    (an injected stall deadline, and whether the request is parked)."""
+
+    __slots__ = ("loop", "q", "emitted", "stall_until", "paused")
+
+    def __init__(self, loop: asyncio.AbstractEventLoop, q: asyncio.Queue):
+        self.loop = loop
+        self.q = q
+        self.emitted = 0
+        self.stall_until = 0.0         # monotonic deadline of injected stall
+        self.paused = False            # parked by the "pause" policy
 
 
 class EngineHost:
@@ -102,20 +155,24 @@ class EngineHost:
     host lock across ``engine.submit`` *and* subscriber registration so the
     pump (which also takes the host lock) can never consume a synchronously
     REJECTED request's terminal event before its queue exists. The pump
-    itself is the only consumer of ``engine.poll(trim=True)``.
+    itself is the only consumer of ``engine.poll(trim=True)``, and is also
+    where slow-client backpressure engages: per-stream depth is measured
+    and the pause/cancel policy applied under the same host lock.
     """
 
     def __init__(self, engine: InferenceEngine, sc: ServerConfig):
         self.engine = engine
         self.sc = sc
         self._lock = threading.Lock()
-        # rid -> [event_loop, asyncio.Queue, n_tokens_emitted]
-        self._subs: Dict[int, List[Any]] = {}
+        self._subs: Dict[int, _Sub] = {}
         self._wake = threading.Event()
         self._stop = threading.Event()
         self.terminal_counts: Counter = Counter()
         self.restarts = 0
         self.crashed = False           # supervisor gave up
+        self.slow_client_cancels = 0
+        self.slow_client_pauses = 0
+        self.max_stream_depth = 0      # high-water mark across all streams
         self._crash_times: List[float] = []
         self._host_step = 0            # step-attempt counter (crash_step idx)
         self._slow_mark = 0
@@ -128,7 +185,7 @@ class EngineHost:
         """Submit a request and register its subscriber queue atomically."""
         with self._lock:
             rid = self.engine.submit(**kw)
-            self._subs[rid] = [loop, q, 0]
+            self._subs[rid] = _Sub(loop, q)
         self._wake.set()
         return rid
 
@@ -187,6 +244,10 @@ class EngineHost:
         """The supervised single-writer step loop."""
         while not self._stop.is_set():
             if not self.engine.sched.has_work():
+                # idle housekeeping: parked (PAUSED) requests generate no
+                # steps, so their deadlines are reaped here and the pump
+                # still runs (a draining client can un-pause its request)
+                self.engine.reap()
                 self._pump()
                 self._wake.wait(self.sc.idle_sleep_s)
                 self._wake.clear()
@@ -197,6 +258,8 @@ class EngineHost:
             if faults is not None and faults.fires(step_no, "crash_step"):
                 faults.record(step_no, "crash_step")  # re-fire the fault
                 raise RuntimeError("injected step-loop crash")
+            if faults is not None and faults.fires(step_no, "slow_client"):
+                self._stall_one(step_no)
             self.engine.step()
             self._pump()
             if self.sc.slow_steps_restart > 0:
@@ -207,39 +270,89 @@ class EngineHost:
                         "watchdog: step loop flagged wedged")
         self._pump()                   # flush events raced with stop()
 
+    def _stall_one(self, step_no: int) -> None:
+        """``slow_client`` fault: withhold delivery to one open stream for
+        the scheduled duration, simulating a reader that stopped draining
+        its socket — the per-stream depth then grows until the
+        backpressure policy engages."""
+        faults = self.engine.faults
+        with self._lock:
+            rids = sorted(self._subs)
+            if not rids:
+                return
+            rid = rids[faults.choose(len(rids))]
+            dur = faults.arg(step_no, "slow_client") or 0.25
+            self._subs[rid].stall_until = time.monotonic() + dur
+            faults.record(step_no, "slow_client", rid)
+
     def _pump(self) -> None:
         """Fan engine progress out to subscriber queues (one poll, one host
         lock). Terminal events are counted whether or not anyone is still
-        listening — a disconnected client's request still resolves."""
+        listening — a disconnected client's request still resolves.
+
+        Backpressure: per stream, depth = tokens sitting in the asyncio
+        queue + tokens withheld by an (injected) stall. Depth past
+        ``stream_queue_max`` triggers the slow-client policy; a paused
+        stream resumes once depth drains to half the high-water mark.
+        Depth can overshoot the mark by at most one step's token commit
+        (spec_k + 1), since the policy runs after every step."""
+        hw = self.sc.stream_queue_max
         with self._lock:
+            now = time.monotonic()
             _, live, fin = self.engine.poll(trim=True)
             for rid, toks in live:
                 sub = self._subs.get(rid)
                 if sub is None:
                     continue
-                self._push(sub, toks)
-            for rid, toks, status, error in fin:
+                if now >= sub.stall_until:
+                    self._push(sub, toks)
+                depth = sub.q.qsize() + (len(toks) - sub.emitted)
+                if depth > self.max_stream_depth:
+                    self.max_stream_depth = depth
+                if hw <= 0:
+                    continue
+                if depth > hw and not sub.paused:
+                    self._backpressure(rid, sub)
+                elif sub.paused and depth <= hw // 2:
+                    if self.engine.resume(rid):
+                        sub.paused = False
+            for rid, toks, status, error, retry_after in fin:
                 self.terminal_counts[status] += 1
                 sub = self._subs.pop(rid, None)
                 if sub is None:
                     continue
                 self._push(sub, toks)
-                self._send(sub, ("done", status, error))
+                self._send(sub, ("done", status, error, retry_after))
+
+    def _backpressure(self, rid: int, sub: _Sub) -> None:
+        """Apply the slow-client policy to one over-watermark stream.
+        Called under the host lock; engine calls below respect the
+        host → engine lock order."""
+        if self.sc.slow_client_policy == "pause":
+            if self.engine.pause(rid):
+                sub.paused = True
+                self.slow_client_pauses += 1
+        else:
+            # disconnect-as-cancel: the request retires (slot + pages free
+            # within a step); the sub stays registered so a reader that
+            # eventually drains still sees the CANCELLED terminal event
+            self.slow_client_cancels += 1
+            self.engine.cancel(rid)
 
     @staticmethod
-    def _push(sub: List[Any], toks: List[int]) -> None:
-        loop, q, emitted = sub
-        for tok in toks[emitted:]:
+    def _push(sub: _Sub, toks: List[int]) -> None:
+        for tok in toks[sub.emitted:]:
             try:
-                loop.call_soon_threadsafe(q.put_nowait, ("token", tok))
+                sub.loop.call_soon_threadsafe(sub.q.put_nowait,
+                                              ("token", tok))
             except RuntimeError:       # loop already closed (shutdown race)
                 return
-        sub[2] = len(toks)
+        sub.emitted = len(toks)
 
     @staticmethod
-    def _send(sub: List[Any], item: Tuple) -> None:
+    def _send(sub: _Sub, item: Tuple) -> None:
         try:
-            sub[0].call_soon_threadsafe(sub[1].put_nowait, item)
+            sub.loop.call_soon_threadsafe(sub.q.put_nowait, item)
         except RuntimeError:
             pass
 
@@ -254,7 +367,7 @@ class EngineHost:
     def _fail_open_streams(self, reason: str) -> None:
         with self._lock:
             for sub in self._subs.values():
-                self._send(sub, ("done", FAILED, reason))
+                self._send(sub, ("done", FAILED, reason, 0.0))
             self._subs.clear()
 
 
@@ -338,32 +451,69 @@ class InferenceServer:
 
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
-        """One request per connection (``Connection: close``) — hand-parsed
-        HTTP/1.1, which is all the reference clients and curl need."""
+        """Connection loop — hand-parsed HTTP/1.1 with keep-alive: serve
+        requests off one connection until the client asks to close, the
+        idle timeout fires, or ``max_requests_per_conn`` are served.
+        Malformed input (truncated body, bad request line, oversized
+        headers, non-integer Content-Length) gets a 4xx where a response
+        is still possible, then the connection closes — the server itself
+        never comes down."""
         try:
-            try:
-                head = await asyncio.wait_for(
-                    reader.readuntil(b"\r\n\r\n"), timeout=10.0)
-            except (asyncio.IncompleteReadError, asyncio.LimitOverrunError,
-                    asyncio.TimeoutError, ConnectionError):
-                return
-            lines = head.decode("latin-1").split("\r\n")
-            parts = lines[0].split()
-            if len(parts) < 2:
-                return
-            method, path = parts[0].upper(), parts[1].split("?")[0]
-            headers = {}
-            for ln in lines[1:]:
-                if ":" in ln:
-                    k, v = ln.split(":", 1)
-                    headers[k.strip().lower()] = v.strip()
-            clen = int(headers.get("content-length", 0) or 0)
-            if clen > self.sc.max_body_bytes:
-                await self._respond(writer, 413,
-                                    {"error": "body too large"})
-                return
-            body = await reader.readexactly(clen) if clen else b""
-            await self._route(method, path, body, reader, writer)
+            served = 0
+            while True:
+                idle = 10.0 if served == 0 else self.sc.keepalive_idle_s
+                try:
+                    head = await asyncio.wait_for(
+                        reader.readuntil(b"\r\n\r\n"), timeout=idle)
+                except (asyncio.IncompleteReadError, asyncio.TimeoutError,
+                        ConnectionError):
+                    return             # idle close / client went away
+                except asyncio.LimitOverrunError:
+                    await self._respond(writer, 431,
+                                        {"error": "headers too large"})
+                    return
+                lines = head.decode("latin-1").split("\r\n")
+                parts = lines[0].split()
+                if len(parts) < 2:
+                    await self._respond(writer, 400,
+                                        {"error": "malformed request line"})
+                    return
+                method, path = parts[0].upper(), parts[1].split("?")[0]
+                headers = {}
+                for ln in lines[1:]:
+                    if ":" in ln:
+                        k, v = ln.split(":", 1)
+                        headers[k.strip().lower()] = v.strip()
+                try:
+                    clen = int(headers.get("content-length", "0") or 0)
+                    if clen < 0:
+                        raise ValueError(clen)
+                except ValueError:
+                    await self._respond(writer, 400,
+                                        {"error": "bad Content-Length"})
+                    return
+                if clen > self.sc.max_body_bytes:
+                    await self._respond(writer, 413,
+                                        {"error": "body too large"})
+                    return
+                try:
+                    body = (await asyncio.wait_for(reader.readexactly(clen),
+                                                   timeout=10.0)
+                            if clen else b"")
+                except (asyncio.IncompleteReadError, asyncio.TimeoutError,
+                        ConnectionError):
+                    # premature EOF mid-body: framing is lost — answer if
+                    # the socket still writes, then drop the connection
+                    await self._respond(writer, 400,
+                                        {"error": "truncated body"})
+                    return
+                served += 1
+                keep = (self.sc.keep_alive
+                        and headers.get("connection", "").lower() != "close"
+                        and served < self.sc.max_requests_per_conn)
+                if not await self._route(method, path, body, reader,
+                                         writer, keep):
+                    return
         except ConnectionError:
             pass
         finally:
@@ -375,25 +525,32 @@ class InferenceServer:
 
     async def _route(self, method: str, path: str, body: bytes,
                      reader: asyncio.StreamReader,
-                     writer: asyncio.StreamWriter) -> None:
+                     writer: asyncio.StreamWriter,
+                     keep: bool = False) -> bool:
+        """Dispatch one request; returns True iff the connection may serve
+        another (keep-alive granted and the response was Content-Length
+        framed — SSE streams always close)."""
         if path == "/healthz":
-            await self._respond(writer, 200, {"ok": True})
+            await self._respond(writer, 200, {"ok": True}, keep=keep)
         elif path == "/readyz":
             up = self.ready and not self.draining and not self.host.crashed
             await self._respond(
                 writer, 200 if up else 503,
                 {"ready": up, "draining": self.draining,
-                 "crashed": self.host.crashed})
+                 "crashed": self.host.crashed}, keep=keep)
         elif path == "/metrics":
-            await self._respond(writer, 200, await self._metrics())
+            await self._respond(writer, 200, await self._metrics(),
+                                keep=keep)
         elif path == "/v1/completions":
             if method != "POST":
                 await self._respond(writer, 405,
-                                    {"error": "POST required"})
-                return
-            await self._completions(body, reader, writer)
+                                    {"error": "POST required"}, keep=keep)
+                return keep
+            return await self._completions(body, reader, writer, keep)
         else:
-            await self._respond(writer, 404, {"error": "not found"})
+            await self._respond(writer, 404, {"error": "not found"},
+                                keep=keep)
+        return keep
 
     async def _metrics(self) -> Dict[str, Any]:
         loop = asyncio.get_running_loop()
@@ -406,19 +563,34 @@ class InferenceServer:
             "open_streams": self.host.open_streams(),
             "restarts": self.host.restarts,
             "disconnects": self.disconnects,
+            "slow_client_cancels": self.host.slow_client_cancels,
+            "slow_client_pauses": self.host.slow_client_pauses,
+            "max_stream_depth": self.host.max_stream_depth,
             "terminal": {k.lower(): v
                          for k, v in self.host.terminal_counts.items()},
+            "tenants": snap.get("tenants", {}),
             "engine": snap,
         }
 
+    def _retry_after(self, est: float = 0.0) -> int:
+        """Computed Retry-After: the occupancy-derived estimate (the
+        request's own, or a fresh drain estimate when none rode along),
+        floored at the configured constant."""
+        if est <= 0:
+            est = self.engine.retry_after_estimate()
+        return max(int(self.sc.retry_after_s), int(math.ceil(est)))
+
     async def _completions(self, body: bytes,
                            reader: asyncio.StreamReader,
-                           writer: asyncio.StreamWriter) -> None:
+                           writer: asyncio.StreamWriter,
+                           keep: bool = False) -> bool:
         if not self.ready or self.draining or self.host.crashed:
+            loop = asyncio.get_running_loop()
+            ra = await loop.run_in_executor(None, self._retry_after)
             await self._respond(
                 writer, 503, {"error": "not ready"},
-                extra={"Retry-After": str(self.sc.retry_after_s)})
-            return
+                extra={"Retry-After": str(ra)}, keep=keep)
+            return keep
         try:
             req = json.loads(body.decode("utf-8"))
             prompt = req["prompt"]
@@ -428,8 +600,8 @@ class InferenceServer:
             await self._respond(
                 writer, 400,
                 {"error": "body must be JSON with a non-empty integer "
-                          "list 'prompt'"})
-            return
+                          "list 'prompt'"}, keep=keep)
+            return keep
         kw = dict(
             prompt=prompt,
             max_new_tokens=int(req.get("max_tokens",
@@ -438,6 +610,7 @@ class InferenceServer:
             top_k=int(req.get("top_k", 0)),
             deadline_s=float(req.get("deadline_s", 0.0)),
             priority=int(req.get("priority", 0)),
+            tenant=str(req.get("tenant", "")),
             eos_id=req.get("eos_id"))
         stream = bool(req.get("stream", False))
         loop = asyncio.get_running_loop()
@@ -448,26 +621,28 @@ class InferenceServer:
             None, lambda: self.host.submit(loop, q, **kw))
         if stream:
             await self._stream(rid, q, reader, writer)
-        else:
-            await self._buffered(rid, q, writer)
+            return False               # SSE responses close the connection
+        await self._buffered(rid, q, writer, keep)
+        return keep
 
     async def _buffered(self, rid: int, q: asyncio.Queue,
-                        writer: asyncio.StreamWriter) -> None:
+                        writer: asyncio.StreamWriter,
+                        keep: bool = False) -> None:
         tokens: List[int] = []
         while True:
             item = await q.get()
             if item[0] == "token":
                 tokens.append(item[1])
             else:
-                _, status, error = item
+                _, status, error, retry_after = item
                 break
         code = STATUS_HTTP.get(status, 500)
-        extra = ({"Retry-After": str(self.sc.retry_after_s)}
+        extra = ({"Retry-After": str(self._retry_after(retry_after))}
                  if code == 429 else None)
         await self._respond(writer, code,
                             {"rid": rid, "status": status, "error": error,
                              "tokens": tokens, "n_tokens": len(tokens)},
-                            extra=extra)
+                            extra=extra, keep=keep)
 
     async def _stream(self, rid: int, q: asyncio.Queue,
                       reader: asyncio.StreamReader,
@@ -499,9 +674,10 @@ class InferenceServer:
                         await writer.drain()
                         get = asyncio.ensure_future(q.get())
                     else:
-                        _, status, error = item
+                        _, status, error, retry_after = item
                         self._sse(writer, {"rid": rid, "status": status,
                                            "error": error,
+                                           "retry_after": retry_after,
                                            "n_tokens": idx})
                         writer.write(b"data: [DONE]\n\n")
                         await writer.drain()
@@ -532,12 +708,14 @@ class InferenceServer:
 
     async def _respond(self, writer: asyncio.StreamWriter, code: int,
                        obj: Dict[str, Any],
-                       extra: Optional[Dict[str, str]] = None) -> None:
+                       extra: Optional[Dict[str, str]] = None,
+                       keep: bool = False) -> None:
         body = json.dumps(obj).encode()
+        conn = "keep-alive" if keep else "close"
         head = (f"HTTP/1.1 {code} {_REASONS.get(code, 'Unknown')}\r\n"
                 f"Content-Type: application/json\r\n"
                 f"Content-Length: {len(body)}\r\n"
-                f"Connection: close\r\n")
+                f"Connection: {conn}\r\n")
         for k, v in (extra or {}).items():
             head += f"{k}: {v}\r\n"
         writer.write(head.encode() + b"\r\n" + body)
@@ -644,6 +822,86 @@ def http_request(host: str, port: int, method: str = "GET",
             headers[k.strip().lower()] = v.strip()
     out = json.loads(rest.decode()) if rest else {}
     return status, headers, out
+
+
+class HttpSession:
+    """Keep-alive reference client: one socket reused across requests.
+
+    Responses are Content-Length framed, so the session reads exactly one
+    response per request and leaves the connection open for the next —
+    unless the server answered ``Connection: close`` (or the socket died),
+    in which case the next request transparently reconnects."""
+
+    def __init__(self, host: str, port: int, timeout: float = 60.0):
+        self.host, self.port, self.timeout = host, port, timeout
+        self._sock: Optional[socket.socket] = None
+        self.reconnects = -1           # first connect is not a re-connect
+
+    def _connect(self) -> socket.socket:
+        self.close()
+        self._sock = socket.create_connection((self.host, self.port),
+                                              timeout=self.timeout)
+        self.reconnects += 1
+        return self._sock
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def __enter__(self) -> "HttpSession":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def request(self, method: str = "GET", path: str = "/",
+                body: Optional[Dict[str, Any]] = None
+                ) -> Tuple[int, Dict[str, str], Dict[str, Any]]:
+        payload = json.dumps(body).encode() if body is not None else b""
+        req = (f"{method} {path} HTTP/1.1\r\nHost: {self.host}\r\n"
+               f"Content-Length: {len(payload)}\r\n"
+               f"Connection: keep-alive\r\n\r\n").encode() + payload
+        sock = self._sock or self._connect()
+        try:
+            sock.sendall(req)
+            return self._read_response(sock)
+        except (ConnectionError, socket.timeout, OSError):
+            # stale keep-alive (idle timeout / max-requests cap closed it
+            # under us): one reconnect-and-retry, then let errors surface
+            sock = self._connect()
+            sock.sendall(req)
+            return self._read_response(sock)
+
+    def _read_response(self, sock: socket.socket
+                       ) -> Tuple[int, Dict[str, str], Dict[str, Any]]:
+        buf = b""
+        while b"\r\n\r\n" not in buf:
+            chunk = sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("EOF before response head")
+            buf += chunk
+        head, _, rest = buf.partition(b"\r\n\r\n")
+        lines = head.decode("latin-1").split("\r\n")
+        status = int(lines[0].split()[1])
+        headers: Dict[str, str] = {}
+        for ln in lines[1:]:
+            if ":" in ln:
+                k, v = ln.split(":", 1)
+                headers[k.strip().lower()] = v.strip()
+        clen = int(headers.get("content-length", 0) or 0)
+        while len(rest) < clen:
+            chunk = sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("EOF mid-body")
+            rest += chunk
+        if headers.get("connection", "").lower() == "close":
+            self.close()
+        out = json.loads(rest[:clen].decode()) if clen else {}
+        return status, headers, out
 
 
 @dataclasses.dataclass

@@ -1,0 +1,363 @@
+"""Overload-proof serving: SLO-aware admission, per-tenant quotas and
+weighted-fair queueing. Pure-arithmetic units for the seat-time estimator
+and token bucket, scheduler-level WFQ ordering, and engine-level tests for
+quota rejects (computed Retry-After), predictive SLO rejection with a
+pinned step time, pause/resume bit-identity and per-tenant accounting."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models.api import model_fns
+from repro.serving import (EngineConfig, FakeClock, InferenceEngine,
+                           Request, Scheduler, TenantQuota, TokenBucket,
+                           estimate_seat_steps)
+from repro.serving.admission import request_work_steps
+from repro.serving.scheduler import FINISHED, PAUSED, REJECTED, TIMEOUT
+
+
+class TestSeatEstimator:
+    def test_free_slot_seats_immediately(self):
+        assert estimate_seat_steps(2, [], []) == 0.0
+
+    def test_no_slots_returns_zero(self):
+        assert estimate_seat_steps(0, [], []) == 0.0
+
+    def test_waits_for_earliest_running(self):
+        # all slots busy: probe seats when the shortest remaining job ends
+        assert estimate_seat_steps(0, [5.0, 3.0, 9.0], []) == 3.0
+
+    def test_queue_ahead_delays_seating(self):
+        # one slot frees at 3; two queued jobs of 4 steps each seat
+        # back-to-back into it: probe seats at 3 + 4 + 4
+        assert estimate_seat_steps(0, [3.0], [4.0, 4.0]) == 11.0
+
+    def test_ahead_jobs_spread_across_slots(self):
+        # two slots free now; two queued 5-step jobs take one each, so the
+        # probe seats when the first of them drains (5), not 10
+        assert estimate_seat_steps(2, [], [5.0, 5.0]) == 5.0
+
+    def test_work_steps_prefill_plus_budget(self):
+        assert request_work_steps(16, 0, 8, 0) == 1.0 + 8
+        # generated tokens shrink the remaining budget, floor 1
+        assert request_work_steps(16, 0, 8, 7) == 1.0 + 1
+        assert request_work_steps(16, 0, 8, 8) == 1.0 + 1
+
+
+class TestTokenBucket:
+    def test_burst_then_starve_then_refill(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=2.0, burst=2, clock=clk)
+        assert b.try_take() and b.try_take()      # burst depth 2
+        assert not b.try_take()                   # starved
+        assert b.next_free_s() == pytest.approx(0.5)
+        clk.advance(0.5)                          # one token accrues
+        assert b.try_take()
+        assert not b.try_take()
+
+    def test_zero_rate_always_admits(self):
+        b = TokenBucket(rate=0.0, clock=FakeClock())
+        assert all(b.try_take() for _ in range(100))
+        assert b.next_free_s() == 0.0
+
+    def test_refill_caps_at_burst(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=10.0, burst=3, clock=clk)
+        clk.advance(100.0)
+        assert sum(b.try_take() for _ in range(10)) == 3
+
+
+def _req(p=4, tenant="", **kw):
+    r = Request(prompt=np.zeros(p, np.int32), **kw)
+    r.tenant = tenant
+    return r
+
+
+class TestSchedulerWFQ:
+    def test_single_tenant_keeps_fcfs(self):
+        s = Scheduler(n_slots=1)
+        rids = [s.submit(_req(tenant="a")) for _ in range(4)]
+        got = []
+        while s.waiting:
+            [(r, slot)] = s.admit()
+            got.append(r.rid)
+            s.retire(slot)
+        assert got == rids                        # exact old FCFS order
+
+    def test_weighted_interleave(self):
+        # tenant "big" (weight 2) should be admitted ~2x as often as
+        # "small" (weight 1) when both queues are saturated
+        s = Scheduler(n_slots=1)
+        s.weights = {"big": 2.0, "small": 1.0}
+        for _ in range(8):
+            s.submit(_req(tenant="big", max_new_tokens=8))
+            s.submit(_req(tenant="small", max_new_tokens=8))
+        order = []
+        for _ in range(6):
+            [(r, slot)] = s.admit()
+            order.append(r.tenant)
+            s.retire(slot)
+        assert order.count("big") == 4 and order.count("small") == 2
+
+    def test_equal_weights_alternate(self):
+        s = Scheduler(n_slots=1)
+        for _ in range(3):
+            s.submit(_req(tenant="a", max_new_tokens=8))
+        for _ in range(3):
+            s.submit(_req(tenant="b", max_new_tokens=8))
+        order = []
+        while s.waiting:
+            [(r, slot)] = s.admit()
+            order.append(r.tenant)
+            s.retire(slot)
+        # equal service ⇒ strict alternation after the first pick
+        assert order in (["a", "b"] * 3, ["b", "a"] * 3)
+
+    def test_priority_tier_beats_weight(self):
+        s = Scheduler(n_slots=1)
+        s.weights = {"lo": 100.0, "hi": 1.0}
+        s.submit(_req(tenant="lo", priority=0))
+        s.submit(_req(tenant="hi", priority=1))
+        [(r, slot)] = s.admit()
+        assert r.tenant == "hi"                  # tier first, WFQ within
+
+    def test_late_tenant_joins_at_floor(self):
+        # a tenant arriving after others have accumulated service must not
+        # be starved NOR given unbounded catch-up credit
+        s = Scheduler(n_slots=1)
+        for _ in range(4):
+            s.submit(_req(tenant="old", max_new_tokens=8))
+        for _ in range(2):
+            [(r, slot)] = s.admit()
+            s.retire(slot)
+        s.submit(_req(tenant="new", max_new_tokens=8))
+        got = []
+        for _ in range(2):
+            [(r, slot)] = s.admit()
+            got.append(r.tenant)
+            s.retire(slot)
+        assert "new" in got                      # not starved, and no
+        assert got.count("new") == 1             # unbounded catch-up burst
+
+    def test_requeue_refunds_service(self):
+        s = Scheduler(n_slots=1)
+        s.submit(_req(tenant="a", max_new_tokens=8))
+        s.submit(_req(tenant="b", max_new_tokens=8))
+        [(ra, slot)] = s.admit()
+        charged = s.service["a"]
+        assert charged > 0
+        s.requeue(slot)                           # preemption path
+        assert s.service["a"] == pytest.approx(0.0)
+        assert ra.service_charge == 0.0
+
+
+N_SLOTS = 2
+CAPACITY = 64
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-1b"),
+                              bcr_keep_frac=0.0)
+    fns = model_fns(cfg)
+    params = fns.init_params(jax.random.PRNGKey(0))
+    return cfg, fns, params
+
+
+def make_engine(llama, clock=None, **overrides):
+    cfg, fns, params = llama
+    kw = dict(n_slots=N_SLOTS, capacity=CAPACITY, plan_packed=False)
+    kw.update(overrides)
+    return InferenceEngine(cfg, params, EngineConfig(**kw), clock=clock)
+
+
+def _prompt(cfg, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+class TestEngineQuotas:
+    def test_concurrent_quota_rejects_with_retry_after(self, llama):
+        eng = make_engine(llama, tenant_quotas={
+            "acme": TenantQuota(max_concurrent=2)},
+            slo_step_time=0.1)
+        cfg = llama[0]
+        rids = [eng.submit(_prompt(cfg), max_new_tokens=4, tenant="acme")
+                for _ in range(3)]
+        done = {r.rid: r for r in eng.sched.finished}
+        assert rids[2] in done and done[rids[2]].status == REJECTED
+        assert "concurrent" in done[rids[2]].error
+        # Retry-After derives from the occupancy simulation, not a constant
+        assert done[rids[2]].retry_after_s > 0
+        assert eng.stats["quota_rejected"] == 1
+        for r in eng.run():
+            pass
+        eng.check_conservation()
+
+    def test_rate_limit_rejects_and_recovers(self, llama):
+        clk = FakeClock()
+        eng = make_engine(llama, clock=clk, tenant_quotas={
+            "acme": TenantQuota(rate=1.0, burst=1)})
+        cfg = llama[0]
+        r0 = eng.submit(_prompt(cfg), max_new_tokens=2, tenant="acme")
+        r1 = eng.submit(_prompt(cfg), max_new_tokens=2, tenant="acme")
+        done = {r.rid: r for r in eng.sched.finished}
+        assert r0 not in done
+        assert done[r1].status == REJECTED and "rate-limited" in done[r1].error
+        assert done[r1].retry_after_s == pytest.approx(1.0)
+        clk.advance(1.0)                          # token accrues
+        r2 = eng.submit(_prompt(cfg), max_new_tokens=2, tenant="acme")
+        assert r2 not in {r.rid: r for r in eng.sched.finished}
+        eng.run()
+        eng.check_conservation()
+
+    def test_default_quota_covers_unlisted_tenants(self, llama):
+        eng = make_engine(llama,
+                          default_tenant_quota=TenantQuota(max_concurrent=1))
+        cfg = llama[0]
+        eng.submit(_prompt(cfg), max_new_tokens=2, tenant="anyone")
+        r1 = eng.submit(_prompt(cfg), max_new_tokens=2, tenant="anyone")
+        done = {r.rid: r for r in eng.sched.finished}
+        assert done[r1].status == REJECTED
+        eng.run()
+
+    def test_per_tenant_stats_breakdown(self, llama):
+        eng = make_engine(llama)
+        cfg = llama[0]
+        eng.submit(_prompt(cfg), max_new_tokens=2, tenant="a")
+        eng.submit(_prompt(cfg), max_new_tokens=2, tenant="b")
+        eng.run()
+        snap = eng.stats_snapshot()
+        assert snap["tenants"]["a"]["finished"] == 1
+        assert snap["tenants"]["b"]["finished"] == 1
+        assert snap["tenants"]["a"]["goodput_tokens"] == 2
+
+
+class TestSLOAdmission:
+    def test_doomed_deadline_rejected_at_submit(self, llama):
+        # 1 s/step pinned: seat=0 (free slot), finish ≈ (1 + 1 + 4) × 1 s
+        # with backfill_max_defer=0 — a 2 s deadline is provably unmakeable
+        eng = make_engine(llama, slo_admission=True, slo_step_time=1.0,
+                          backfill_chunk=1, backfill_max_defer=0)
+        cfg = llama[0]
+        rid = eng.submit(_prompt(cfg), max_new_tokens=4, deadline_s=2.0)
+        done = {r.rid: r for r in eng.sched.finished}
+        assert done[rid].status == REJECTED and "slo" in done[rid].error
+        assert eng.stats["slo_rejected"] == 1
+        # nothing queued: zero wasted prefill, zero waiting-queue timeouts
+        assert not eng.sched.has_work()
+        assert eng.stats["wasted_prefill_tokens"] == 0
+
+    def test_makeable_deadline_admitted(self, llama):
+        eng = make_engine(llama, slo_admission=True, slo_step_time=0.001,
+                          backfill_chunk=1, backfill_max_defer=0)
+        cfg = llama[0]
+        rid = eng.submit(_prompt(cfg), max_new_tokens=4, deadline_s=30.0)
+        assert rid not in {r.rid for r in eng.sched.finished}
+        eng.run()
+        done = {r.rid: r for r in eng.sched.finished}
+        assert done[rid].status == FINISHED
+        eng.check_conservation()
+
+    def test_queue_depth_raises_estimate(self, llama):
+        # with both slots full and a deep queue the same deadline that
+        # admits on an idle engine gets rejected — the estimator sees the
+        # queue, not just the slots
+        eng = make_engine(llama, slo_admission=True, slo_step_time=0.05,
+                          backfill_chunk=1, backfill_max_defer=0)
+        cfg = llama[0]
+        deadline = 0.05 * (1 + 1 + 8) * 1.5       # makeable when idle
+        r0 = eng.submit(_prompt(cfg), max_new_tokens=8, deadline_s=deadline)
+        assert r0 not in {r.rid for r in eng.sched.finished}
+        for i in range(8):                        # saturate slots + queue
+            eng.submit(_prompt(cfg, seed=i + 1), max_new_tokens=8)
+        doomed = eng.submit(_prompt(cfg, seed=99), max_new_tokens=8,
+                            deadline_s=deadline)
+        done = {r.rid: r for r in eng.sched.finished}
+        assert done[doomed].status == REJECTED and "slo" in done[doomed].error
+        eng.run()
+        eng.check_conservation()
+
+    def test_uncalibrated_step_time_admits_everything(self, llama):
+        eng = make_engine(llama, slo_admission=True)   # no pinned, no EWMA
+        cfg = llama[0]
+        rid = eng.submit(_prompt(cfg), max_new_tokens=4, deadline_s=1e-9)
+        # degrades to reactive: queued (will TIMEOUT later), not rejected
+        assert rid not in {r.rid for r in eng.sched.finished}
+        eng.run()
+
+    def test_step_time_calibrates_from_real_steps(self, llama):
+        eng = make_engine(llama)
+        cfg = llama[0]
+        eng.submit(_prompt(cfg), max_new_tokens=4)
+        eng.run()
+        assert eng._step_time > 0
+        assert eng.retry_after_estimate() >= 0.0
+
+    def test_shed_victim_gets_computed_retry_after(self, llama):
+        eng = make_engine(llama, max_waiting=1, slo_step_time=0.5)
+        cfg = llama[0]
+        for i in range(N_SLOTS + 2):
+            eng.submit(_prompt(cfg, seed=i), max_new_tokens=8)
+        shed = [r for r in eng.sched.finished if r.status == REJECTED]
+        assert shed and all(r.retry_after_s > 0 for r in shed)
+        eng.run()
+        eng.check_conservation()
+
+
+class TestPauseResume:
+    def test_pause_frees_slot_resume_is_bit_identical(self, llama):
+        cfg = llama[0]
+        prompt = _prompt(cfg, 8)
+        ref = make_engine(llama, n_slots=1)
+        rid = ref.submit(prompt, max_new_tokens=8)
+        ref.run()
+        want = [r for r in ref.sched.finished if r.rid == rid][0].generated
+
+        eng = make_engine(llama, n_slots=1)
+        rid = eng.submit(prompt, max_new_tokens=8)
+        for _ in range(3):
+            eng.step()
+        assert eng.pause(rid)
+        assert eng.sched.free_slots() == 1        # slot released
+        assert eng.sched.paused[rid].status == PAUSED
+        # a second request runs to completion while the first is parked
+        other = eng.submit(_prompt(cfg, 8, seed=5), max_new_tokens=4)
+        eng.run()
+        assert {r.rid for r in eng.sched.finished} == {other}
+        assert eng.resume(rid)
+        eng.run()
+        done = [r for r in eng.sched.finished if r.rid == rid][0]
+        assert done.status == FINISHED
+        assert done.generated == want             # greedy bit-identity
+        eng.check_conservation()
+
+    def test_paused_deadline_expires_via_reap(self, llama):
+        clk = FakeClock()
+        eng = make_engine(llama, clock=clk)
+        cfg = llama[0]
+        rid = eng.submit(_prompt(cfg), max_new_tokens=8, deadline_s=1.0)
+        assert eng.pause(rid)
+        clk.advance(2.0)
+        assert eng.reap() == 1                    # no step needed
+        done = [r for r in eng.sched.finished if r.rid == rid][0]
+        assert done.status == TIMEOUT
+        assert eng.stats["timeouts_running"] == 1
+        eng.check_conservation()
+
+    def test_cancel_while_paused(self, llama):
+        eng = make_engine(llama)
+        cfg = llama[0]
+        rid = eng.submit(_prompt(cfg), max_new_tokens=8)
+        assert eng.pause(rid)
+        assert eng.cancel(rid) is not None
+        assert rid not in eng.sched.paused
+        eng.check_conservation()
+
+    def test_pause_unknown_rid_is_noop(self, llama):
+        eng = make_engine(llama)
+        assert not eng.pause(12345)
+        assert not eng.resume(12345)

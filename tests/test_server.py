@@ -1,10 +1,14 @@
 """End-to-end tests for the asyncio HTTP serving front-end, over a real
 socket: streaming/non-streaming parity with ``engine.generate``,
-disconnect→cancel propagation, 429 + ``Retry-After`` under overload,
-graceful drain with stream flushing, supervised step-loop restart, and a
-seeded chaos soak (injected faults + misbehaving clients) through the
-full HTTP path. A ``slow``-marked subprocess test drives the
-``launch/api.py`` CLI through SIGTERM."""
+disconnect→cancel propagation, 429 + occupancy-derived ``Retry-After``
+under overload, HTTP keep-alive (idle timeout, per-connection request
+cap, reconnecting ``HttpSession``), malformed-HTTP fuzzing, slow-client
+backpressure (cancel and pause policies), graceful drain with stream
+flushing, supervised step-loop restart, and a seeded chaos soak
+(injected faults incl. ``slow_client`` stalls, a bursty rate-limited
+tenant + misbehaving clients) through the full HTTP path. A
+``slow``-marked subprocess test drives the ``launch/api.py`` CLI
+through SIGTERM."""
 
 import contextlib
 import os
@@ -23,9 +27,9 @@ import jax
 from repro.configs import get_smoke_config
 from repro.models.api import model_fns
 from repro.serving import (EngineConfig, FaultInjector, InferenceEngine,
-                           OracleDraft)
-from repro.serving.scheduler import FINISHED, REJECTED
-from repro.serving.server import (ServerConfig, http_request,
+                           OracleDraft, TenantQuota)
+from repro.serving.scheduler import CANCELLED, FINISHED, REJECTED
+from repro.serving.server import (HttpSession, ServerConfig, http_request,
                                   start_in_thread, stream_completion)
 
 HOST = "127.0.0.1"
@@ -227,6 +231,261 @@ class TestDrain:
         assert h.server.conservation_ok
 
 
+class TestRetryAfterDynamic:
+    """Satellite: Retry-After on 429/503 is occupancy-derived, not the
+    configured constant (which is only the floor)."""
+
+    def test_shed_429_retry_after_tracks_occupancy(self, llama):
+        # 1 slot + a 96-token run + a 97-step queue at a pinned 2 s/step:
+        # the drain estimate is minutes, so the shed victim's Retry-After
+        # must be far above the 1 s configured floor
+        eng = make_engine(llama, n_slots=1, max_waiting=1,
+                          slo_step_time=2.0)
+        with served(eng) as h:
+            results = {}
+
+            def post(name, gen):
+                results[name] = http_request(
+                    HOST, h.port, "POST", "/v1/completions",
+                    {"prompt": PROMPT, "max_tokens": gen}, timeout=120)
+
+            ta = threading.Thread(target=post, args=("a", 96))
+            ta.start()
+            assert wait_until(
+                lambda: metrics(h.port)["engine"]["active"] == 1)
+            tb = threading.Thread(target=post, args=("b", 96))
+            tb.start()
+            assert wait_until(
+                lambda: metrics(h.port)["engine"]["waiting"] == 1)
+            post("c", 4)               # overflows max_waiting → b is shed
+            ta.join(120)
+            tb.join(120)
+            st, hdrs, body = results["b"]
+            assert st == 429 and body["status"] == REJECTED
+            floor = h.server.sc.retry_after_s
+            assert int(hdrs["retry-after"]) > 10 * floor
+        assert h.server.conservation_ok
+
+    def test_503_retry_after_is_occupancy_derived(self, llama):
+        eng = make_engine(llama, n_slots=1, slo_step_time=2.0)
+        with served(eng) as h:
+            results = {}
+
+            def post(name, gen):
+                results[name] = http_request(
+                    HOST, h.port, "POST", "/v1/completions",
+                    {"prompt": PROMPT, "max_tokens": gen}, timeout=300)
+
+            ta = threading.Thread(target=post, args=("a", 64))
+            ta.start()
+            assert wait_until(
+                lambda: metrics(h.port)["engine"]["active"] == 1)
+            tb = threading.Thread(target=post, args=("b", 64))
+            tb.start()
+            assert wait_until(
+                lambda: metrics(h.port)["engine"]["waiting"] == 1)
+            # flip the flag directly (no listener close) so the 503 path
+            # answers while the engine is demonstrably busy
+            h.server.draining = True
+            st, hdrs, _ = http_request(HOST, h.port, "POST",
+                                       "/v1/completions",
+                                       {"prompt": PROMPT, "max_tokens": 4})
+            assert st == 503
+            assert int(hdrs["retry-after"]) > 10 * h.server.sc.retry_after_s
+            h.server.draining = False
+            ta.join(300)
+            tb.join(300)
+            assert results["a"][0] == 200 and results["b"][0] == 200
+        assert h.server.conservation_ok
+
+
+class TestKeepAlive:
+    def test_session_reuses_one_connection(self, llama):
+        with served(make_engine(llama)) as h:
+            with HttpSession(HOST, h.port) as sess:
+                for _ in range(3):
+                    st, hdrs, body = sess.request("GET", "/healthz")
+                    assert st == 200 and body == {"ok": True}
+                    assert hdrs["connection"] == "keep-alive"
+                st, _, body = sess.request(
+                    "POST", "/v1/completions",
+                    {"prompt": PROMPT, "max_tokens": 4})
+                assert st == 200 and body["status"] == FINISHED
+                assert sess.reconnects == 0
+        assert h.server.conservation_ok
+
+    def test_max_requests_per_conn_closes_then_session_reconnects(
+            self, llama):
+        with served(make_engine(llama),
+                    ServerConfig(max_requests_per_conn=2)) as h:
+            with HttpSession(HOST, h.port) as sess:
+                st, hdrs, _ = sess.request("GET", "/healthz")
+                assert hdrs["connection"] == "keep-alive"
+                st, hdrs, _ = sess.request("GET", "/healthz")
+                assert hdrs["connection"] == "close"   # cap reached
+                st, _, body = sess.request("GET", "/healthz")
+                assert st == 200 and sess.reconnects == 1
+        assert h.server.conservation_ok
+
+    def test_idle_timeout_drops_connection(self, llama):
+        with served(make_engine(llama),
+                    ServerConfig(keepalive_idle_s=0.3)) as h:
+            with HttpSession(HOST, h.port) as sess:
+                assert sess.request("GET", "/healthz")[0] == 200
+                time.sleep(1.0)        # idle past the keep-alive window
+                assert sess.request("GET", "/healthz")[0] == 200
+                assert sess.reconnects == 1
+        assert h.server.conservation_ok
+
+    def test_keep_alive_off_closes_every_response(self, llama):
+        with served(make_engine(llama),
+                    ServerConfig(keep_alive=False)) as h:
+            with HttpSession(HOST, h.port) as sess:
+                st, hdrs, _ = sess.request("GET", "/healthz")
+                assert st == 200 and hdrs["connection"] == "close"
+                assert sess.request("GET", "/healthz")[0] == 200
+                assert sess.reconnects == 1
+        assert h.server.conservation_ok
+
+
+class TestMalformedHTTP:
+    """Satellite fuzz: every malformed input gets a 4xx where a response
+    is still possible, the server stays up throughout, and drain leaves
+    zero leaked pages."""
+
+    def _raw(self, port, payload, read=True, timeout=10.0):
+        """Send raw bytes; return the status code of the reply (0 if the
+        server just closed the connection)."""
+        with socket.create_connection((HOST, port), timeout=timeout) as s:
+            s.sendall(payload)
+            s.shutdown(socket.SHUT_WR)
+            raw = b""
+            while read:
+                try:
+                    chunk = s.recv(65536)
+                except ConnectionError:
+                    break
+                if not chunk:
+                    break
+                raw += chunk
+        if not raw:
+            return 0
+        return int(raw.split(b"\r\n")[0].split()[1])
+
+    def test_fuzz_malformed_requests(self, llama):
+        eng = make_engine(llama)
+        cases = [
+            # (payload, expected status; 0 = bare close is acceptable)
+            (b"GARBAGE\r\n\r\n", 400),                 # bad request line
+            (b"\r\n\r\n", 400),                        # empty request line
+            (b"POST /v1/completions HTTP/1.1\r\n"
+             b"Content-Length: abc\r\n\r\n", 400),     # bad Content-Length
+            (b"POST /v1/completions HTTP/1.1\r\n"
+             b"Content-Length: -5\r\n\r\n", 400),      # negative length
+            (b"POST /v1/completions HTTP/1.1\r\n"
+             b"Content-Length: 100\r\n\r\n" + b"x" * 10, 400),  # truncated
+            (b"POST /v1/completions HTTP/1.1\r\n"
+             b"Content-Length: 9\r\n\r\n" + b"{not json", 400),
+            (b"POST /v1/completions HTTP/1.1\r\n"
+             b"Content-Length: 3\r\n\r\n" + b"\xff\xfe\x00", 400),  # UTF-8
+            (b"POST /v1/completions HTTP/1.1\r\n"
+             b"Content-Length: 2000000\r\n\r\n", 413),  # oversized body
+            (b"POST /v1/completions HTTP/1.1\r\n"      # oversized headers
+             + b"X-Junk: " + b"a" * 100_000 + b"\r\n", 431),
+        ]
+        # non-integer prompt ids through the normal JSON path
+        with served(eng) as h:
+            for i, (payload, want) in enumerate(cases):
+                got = self._raw(h.port, payload)
+                assert got in (want, 0), (i, got, want)
+                st, _, _ = http_request(HOST, h.port, "GET", "/healthz")
+                assert st == 200, i                    # server still up
+            st, _, _ = http_request(HOST, h.port, "POST", "/v1/completions",
+                                    {"prompt": ["a", "b"]})
+            assert st == 400
+            st, _, _ = http_request(HOST, h.port, "POST", "/v1/completions",
+                                    {"prompt": [1.5, 2.5]})
+            assert st == 400
+            # premature EOF mid-body with a hard close (no response read)
+            self._raw(h.port, b"POST /v1/completions HTTP/1.1\r\n"
+                              b"Content-Length: 50\r\n\r\nhalf", read=False)
+            st, _, _ = http_request(HOST, h.port, "GET", "/healthz")
+            assert st == 200
+            m = metrics(h.port)
+            assert m["requests_in_flight"] == 0        # nothing leaked in
+        assert h.server.conservation_ok
+
+
+class TestSlowClient:
+    """Tentpole: bounded per-stream queues + the slow-client policy. The
+    deterministic ``slow_client`` fault withholds delivery to one stream
+    so its depth grows past the high-water mark."""
+
+    def test_cancel_policy_disconnects_stalled_reader(self, llama):
+        faults = FaultInjector(seed=0).at(0, "slow_client", 30.0)
+        eng = make_engine(llama, n_slots=1, fault_injector=faults)
+        sc = ServerConfig(stream_queue_max=4, slow_client_policy="cancel")
+        with served(eng, sc) as h:
+            r = stream_completion(HOST, h.port,
+                                  {"prompt": PROMPT, "max_tokens": 64},
+                                  timeout=60)
+            # the stall outlives the request: the policy cancelled it and
+            # the terminal flush delivered tokens + CANCELLED
+            assert r.final["status"] == CANCELLED
+            assert "slow" not in r.final["error"]  # cancel, not fail
+            assert len(r.tokens) < 64
+            m = metrics(h.port)
+            assert m["slow_client_cancels"] == 1
+            assert m["max_stream_depth"] <= 4 + 1  # hw + one step's commit
+            # the slot is free again: a fresh request completes
+            st, _, body = http_request(
+                HOST, h.port, "POST", "/v1/completions",
+                {"prompt": PROMPT, "max_tokens": 4})
+            assert st == 200 and body["status"] == FINISHED
+        assert h.server.conservation_ok
+
+    def test_pause_policy_parks_then_resumes_bit_identical(self, llama):
+        cfg, fns, params = llama
+        ref_eng = make_engine(llama)
+        want = ref_eng.generate([PROMPT], max_new_tokens=24)[0]
+
+        faults = (FaultInjector(seed=0).at(0, "slow_client", 3.0)
+                  .at(1, "slow_client", 3.0))
+        eng = make_engine(llama, n_slots=1, fault_injector=faults)
+        sc = ServerConfig(stream_queue_max=4, slow_client_policy="pause")
+        with served(eng, sc) as h:
+            results = {}
+
+            def stream_a():
+                results["a"] = stream_completion(
+                    HOST, h.port, {"prompt": PROMPT, "max_tokens": 24},
+                    timeout=120)
+
+            ta = threading.Thread(target=stream_a)
+            ta.start()
+            assert wait_until(
+                lambda: metrics(h.port)["slow_client_pauses"] >= 1,
+                timeout=60)
+            assert metrics(h.port)["engine"]["paused_now"] == 1
+            # the paused request released its only slot: b runs NOW
+            st, _, body = http_request(
+                HOST, h.port, "POST", "/v1/completions",
+                {"prompt": PROMPT, "max_tokens": 4}, timeout=120)
+            assert st == 200 and body["status"] == FINISHED
+            # stall expires → queue drains → resume → full bit-identical
+            # stream (fold + re-prefill replays the parked tokens)
+            ta.join(120)
+            r = results["a"]
+            assert r.final["status"] == FINISHED
+            assert r.tokens == want
+            m = metrics(h.port)
+            assert m["slow_client_pauses"] >= 1
+            assert m["engine"]["resumed"] >= 1
+            assert m["engine"]["paused_now"] == 0
+            assert m["max_stream_depth"] <= 4 + 1
+        assert h.server.conservation_ok
+
+
 class TestSupervisor:
     def test_crash_restart_resumes_bit_identical(self, llama, ref_tokens):
         faults = FaultInjector(seed=0).at(4, "crash_step")
@@ -272,51 +531,67 @@ class TestSupervisor:
 class TestChaosSoak:
     """Acceptance soak: a seeded ≥300-step run through the HTTP server
     with injected faults (nan_logits + drafter + engine-side cancels +
-    step-loop crashes) and misbehaving clients (mid-stream disconnects).
-    The server stays up, every request reaches exactly one terminal
-    status, and drain leaves zero leaked pages."""
+    step-loop crashes + slow_client stalls), a bursty rate-limited
+    tenant, and misbehaving clients (mid-stream disconnects). The server
+    stays up, every request reaches exactly one terminal status, every
+    per-stream depth respects the configured bound, and drain leaves
+    zero leaked pages."""
 
     N_REQ = 80
+    STREAM_MAX = 8                     # per-stream high-water mark
+    SPEC_K = 2
 
     def test_chaos_soak(self, llama):
         cfg, fns, params = llama
         faults = FaultInjector(seed=13).random_schedule(
             2000, {"nan_logits": 0.01, "drafter": 0.04, "cancel": 0.02,
-                   "crash_step": 0.004})
+                   "crash_step": 0.004, "slow_client": 0.03})
         eng = InferenceEngine(
             cfg, params,
             EngineConfig(n_slots=3, capacity=64, plan_packed=False,
-                         page_size=8, spec_k=2, fault_injector=faults),
+                         page_size=8, spec_k=self.SPEC_K,
+                         fault_injector=faults,
+                         # bursty tenant: "burst" slams in above its rate
+                         # limit and sees quota 429s alongside the chaos
+                         tenant_quotas={
+                             "burst": TenantQuota(rate=40.0, burst=4)}),
             drafter=OracleDraft())
 
         rng = np.random.default_rng(5)
+        tenants = ("", "alpha", "burst")
         plans = []
-        for _ in range(self.N_REQ):
+        for i in range(self.N_REQ):
             prompt = [int(x) for x in rng.integers(
                 0, cfg.vocab_size, size=int(rng.integers(4, 17)))]
             u = rng.random()
             disconnect = int(rng.integers(1, 6)) if u < 0.2 else None
             stream = u < 0.75
-            plans.append((prompt, stream, disconnect))
+            plans.append((prompt, stream, disconnect, tenants[i % 3]))
         results = [None] * self.N_REQ
 
         def client(i):
-            prompt, stream, disconnect = plans[i]
+            prompt, stream, disconnect, tenant = plans[i]
+            # 24 tokens/request keeps the soak ≥300 supervised steps even
+            # with the bursty tenant's quota rejects removing work
+            payload = {"prompt": prompt, "max_tokens": 24,
+                       "tenant": tenant}
             try:
                 if stream or disconnect:
                     results[i] = stream_completion(
-                        HOST, h.port, {"prompt": prompt, "max_tokens": 16},
+                        HOST, h.port, payload,
                         timeout=300, disconnect_after=disconnect)
                 else:
                     results[i] = http_request(
                         HOST, h.port, "POST", "/v1/completions",
-                        {"prompt": prompt, "max_tokens": 16}, timeout=300)
+                        payload, timeout=300)
             except Exception as e:      # noqa: BLE001 — recorded, asserted
                 results[i] = e
 
         # no warmup: the fault schedule is indexed from the very first
         # engine/host step, like the in-process chaos sweeps
-        with served(eng, ServerConfig(max_restarts=50), warmup=None) as h:
+        sc = ServerConfig(max_restarts=50, stream_queue_max=self.STREAM_MAX,
+                          slow_client_policy="pause")
+        with served(eng, sc, warmup=None) as h:
             threads = [threading.Thread(target=client, args=(i,))
                        for i in range(self.N_REQ)]
             for i, t in enumerate(threads):
@@ -345,10 +620,19 @@ class TestChaosSoak:
                 timeout=60)
             # exactly one terminal status per request, nothing in flight
             assert sum(host.terminal_counts.values()) == self.N_REQ
-            assert metrics(h.port)["requests_in_flight"] == 0
+            m = metrics(h.port)
+            assert m["requests_in_flight"] == 0
+            # every per-stream depth stayed within the configured bound
+            # (+ at most one speculative step's token commit of overshoot)
+            assert m["max_stream_depth"] <= self.STREAM_MAX + self.SPEC_K + 1
+            # the per-tenant ledger accounts for every submission
+            snap = eng.stats_snapshot()
+            assert sum(t["submitted"]
+                       for t in snap["tenants"].values()) == self.N_REQ
             # the injected faults actually fired through the HTTP path
             kinds = {k for _, k, _ in faults.fired}
             assert "crash_step" in kinds and host.restarts >= 1
+            assert "slow_client" in kinds
         # SIGTERM-equivalent drain: clean exit, zero leaked pages
         assert h.server.conservation_ok
 
