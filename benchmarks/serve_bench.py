@@ -22,6 +22,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -829,6 +832,101 @@ def bench_static(cfg, params, prompts, gens, batch, capacity):
     return {"tok_s": toks / dt, "elapsed_s": dt, "tokens": toks}
 
 
+_SHARDED_SNIPPET = r"""
+import dataclasses, json, time
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.launch.serve import build_params
+from repro.serving.engine import EngineConfig, InferenceEngine
+
+A = json.loads(%s)
+tp = A["tp"]
+cfg = dataclasses.replace(
+    get_smoke_config(A["arch"]), num_kv_heads=4,
+    attn_impl="dense", dtype="float32", cache_dtype="float32")
+params = build_params(cfg, log=lambda *a, **k: None, decode_m=A["slots"])
+eng = InferenceEngine(cfg, params, EngineConfig(
+    n_slots=A["slots"], capacity=A["capacity"],
+    page_size=A["page_size"], kv_pages=A["pages_per_device"] * tp,
+    mesh_model=tp, preempt_after_stalls=2))
+eng.warmup([8])
+rng = np.random.default_rng(3)
+for _ in range(A["requests"]):
+    eng.submit(rng.integers(0, cfg.vocab_size,
+                            (int(rng.integers(6, 12)),)).tolist(),
+               max_new_tokens=A["gen"])
+peak_pages, steps = 0, 0
+t0 = time.perf_counter()
+while eng.sched.has_work() and steps < 5000:
+    eng.step()
+    steps += 1
+    used = eng.pool.n_pages - eng.pool.idle_pages() - 1   # minus null page
+    peak_pages = max(peak_pages, used)
+dt = time.perf_counter() - t0
+eng.check_conservation()
+toks = sum(len(r.generated) for r in eng.sched.finished)
+st = eng.stats_snapshot()
+print("RESULT " + json.dumps({
+    "tp": tp, "kv_pages": int(eng.pool.n_pages),
+    "peak_pages": int(peak_pages),
+    "peak_resident_tokens": int(peak_pages * A["page_size"]),
+    "tok_s": toks / dt, "tokens": int(toks), "steps": steps,
+    "drained": not eng.sched.has_work(),
+    "kv_bytes_read": int(st["kv_bytes_read"]),
+    "kv_bytes_read_device": int(st["kv_bytes_read_device"])}))
+"""
+
+
+def bench_sharded(args):
+    """Tensor-parallel capacity section: one engine per mesh size, each in
+    a fresh subprocess with ``--xla_force_host_platform_device_count=N``
+    (the bench process itself keeps one device). The KV page budget is
+    fixed PER DEVICE, so head-parallel pool sharding lets mesh N provision
+    ~N× the logical pages; under the same oversubscribed traffic the gated
+    metric is peak resident tokens at mesh 2 vs mesh 1. tok/s is reported
+    per mesh for context, not gated — fake CPU devices time-slice one
+    host, so sharded wall-clock says nothing about real multi-chip."""
+    per = {}
+    for tp in args.sharded_meshes:
+        spec = json.dumps({
+            "arch": args.arch, "tp": tp, "slots": args.sharded_slots,
+            "capacity": args.sharded_capacity,
+            "page_size": args.sharded_page_size,
+            "pages_per_device": args.sharded_pages_per_device,
+            "requests": args.sharded_requests, "gen": args.sharded_gen})
+        env = dict(os.environ,
+                   XLA_FLAGS=("--xla_force_host_platform_device_count="
+                              f"{tp}"),
+                   JAX_PLATFORMS="cpu",
+                   PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+        proc = subprocess.run(
+            [sys.executable, "-c", _SHARDED_SNIPPET % repr(spec)],
+            capture_output=True, text=True, timeout=900, env=env)
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"sharded bench subprocess (mesh {tp}) failed:\n"
+                f"{proc.stderr[-3000:]}")
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        per[tp] = r = json.loads(line[len("RESULT "):])
+        print(f"sharded mesh={tp}: peak {r['peak_resident_tokens']} "
+              f"resident tokens ({r['peak_pages']}/{r['kv_pages'] - 1} "
+              f"data pages), {r['tok_s']:.1f} tok/s, "
+              f"kv/device {r['kv_bytes_read_device']}")
+    ratio = (per[2]["peak_resident_tokens"]
+             / per[1]["peak_resident_tokens"]
+             if 1 in per and 2 in per else 0.0)
+    if ratio:
+        print(f"sharded capacity mesh-2 vs mesh-1: {ratio:.2f}x at a "
+              f"fixed per-device page budget")
+    return {"section": "sharded", "arch": args.arch,
+            "meshes": list(args.sharded_meshes),
+            "pages_per_device": args.sharded_pages_per_device,
+            "page_size": args.sharded_page_size,
+            "per_mesh": {str(tp): per[tp] for tp in per},
+            "capacity_ratio_2v1": ratio}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -956,6 +1054,28 @@ def main():
                     help="gate: contended victim goodput tokens must be "
                          "at least this fraction of the victim-solo run "
                          "(0 → no gate)")
+    # tensor-parallel sharded section: one engine per mesh size in fresh
+    # subprocesses over fake CPU devices; gated on CAPACITY, not speed —
+    # head-parallel KV sharding means a fixed per-device page budget
+    # provisions mesh× the logical pages
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the tensor-parallel capacity bench "
+                         "(subprocess per mesh size with fake CPU devices)")
+    ap.add_argument("--sharded-meshes", type=int, nargs="+",
+                    default=[1, 2, 4])
+    ap.add_argument("--sharded-pages-per-device", type=int, default=33,
+                    help="KV pages provisioned PER DEVICE (the engine "
+                         "gets pages_per_device × mesh logical pages)")
+    ap.add_argument("--sharded-page-size", type=int, default=4)
+    ap.add_argument("--sharded-slots", type=int, default=8)
+    ap.add_argument("--sharded-capacity", type=int, default=32)
+    ap.add_argument("--sharded-requests", type=int, default=12)
+    ap.add_argument("--sharded-gen", type=int, default=16)
+    ap.add_argument("--min-sharded-capacity-ratio", type=float,
+                    default=0.0,
+                    help="exit 1 if mesh-2 peak resident tokens ÷ mesh-1 "
+                         "at a fixed per-device page budget falls below "
+                         "this (0 → no gate)")
     ap.add_argument("--http", action="store_true",
                     help="HTTP front-end section: the overload shed-on "
                          "workload replayed through the asyncio server "
@@ -1046,6 +1166,11 @@ def main():
         http_row = bench_http(args, overload_row)
         results.append(http_row)
 
+    sharded_row = None
+    if args.sharded:
+        sharded_row = bench_sharded(args)
+        results.append(sharded_row)
+
     payload = {"benchmark": "serve", "packed_vs_dense": ratios,
                "results": results}
     if long_row is not None:
@@ -1074,6 +1199,10 @@ def main():
     if http_row is not None:
         payload["http_ttft_overhead"] = http_row["http_vs_inproc_p99"]
         payload["http"] = http_row
+    if sharded_row is not None:
+        payload["sharded_capacity_ratio"] = (
+            sharded_row["capacity_ratio_2v1"])
+        payload["sharded"] = sharded_row
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")
@@ -1163,6 +1292,20 @@ def main():
                 f"in-process shed-on p99 under the same overload "
                 f"(> {args.max_http_ttft_overhead}x allowed — the server "
                 f"layer must not dominate the tail)")
+
+    if args.min_sharded_capacity_ratio > 0:
+        if sharded_row is None:
+            raise SystemExit("--min-sharded-capacity-ratio needs "
+                             "--sharded")
+        if (sharded_row["capacity_ratio_2v1"]
+                < args.min_sharded_capacity_ratio):
+            raise SystemExit(
+                f"CAPACITY REGRESSION: mesh-2 peak resident tokens "
+                f"{sharded_row['capacity_ratio_2v1']:.2f}x mesh-1 at a "
+                f"fixed per-device page budget "
+                f"(< {args.min_sharded_capacity_ratio}x required — "
+                f"head-parallel KV sharding must scale pool capacity "
+                f"with the mesh)")
 
     if args.min_spec_vs_plain > 0:
         if spec_row is None:

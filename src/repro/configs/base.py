@@ -77,6 +77,14 @@ class ModelConfig:
     bcr_keep_frac: float = 0.0        # 0 → dense; else kept density of linears
     bcr_block: Tuple[int, int] = (128, 128)
 
+    # --- tensor parallelism (serving) ---
+    # "" → single-device apply. When the sharded engine runs the model
+    # body inside shard_map it sets this to the mesh axis name ("model")
+    # on a LOCALIZED config (num_heads/num_kv_heads divided by the mesh)
+    # so layers re-replicate column-parallel outputs with all-gathers;
+    # see repro.serving.tp.
+    tp_axis: str = ""
+
     def __post_init__(self):
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)

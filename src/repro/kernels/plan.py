@@ -532,3 +532,230 @@ def plan_params(tree: Any, *, m: int = 8, fuse: bool = True,
     return fuse_packed_projections(tree, m=m, fitness=fitness,
                                    fitness_impl=fitness_impl) \
         if fuse else tree
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel splitting along output row blocks
+#
+# A packed matrix shards cleanly along nb_r: row block i scatters only into
+# output rows [i·br, i·br + br), so slicing nb_r into contiguous shard
+# ranges and renumbering rows into each shard's local space yields per-shard
+# sub-plans whose concatenated outputs ARE the full output, in order, with
+# the unmodified spmm kernels running on each shard. gather_cols index K
+# (unsharded — activations stay replicated), so they pass through untouched.
+# ---------------------------------------------------------------------------
+
+
+def _slice_dim(a: jax.Array, s: int, step: int, ax: int) -> jax.Array:
+    idx = [slice(None)] * a.ndim
+    idx[ax % a.ndim] = slice(s * step, (s + 1) * step)
+    return a[tuple(idx)]
+
+
+def _flat_vectors(row_idx: jax.Array, col_idx: jax.Array,
+                  block_shape: Tuple[int, int],
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """`_index_vectors` generalized over leading (stacked-layer) axes."""
+    if row_idx.ndim > 3:
+        return jax.vmap(
+            lambda r, c: _flat_vectors(r, c, block_shape))(row_idx, col_idx)
+    return _index_vectors(row_idx, col_idx, block_shape)
+
+
+def splittable_packed(packed: TBCRC, n_shards: int) -> Optional[str]:
+    """None if ``packed`` splits evenly into ``n_shards`` output shards,
+    else a human-readable reason (for engine-build error messages)."""
+    if n_shards <= 1:
+        return None
+    nb_r = packed.vals.shape[-4]
+    n, _ = packed.shape
+    br = packed.block_shape[0]
+    if nb_r % n_shards:
+        return f"nb_r={nb_r} row blocks not divisible into {n_shards} shards"
+    if n != nb_r * br:
+        return (f"ragged last row block (N={n}, nb_r={nb_r}, br={br}) "
+                f"cannot shard")
+    return None
+
+
+def split_packed(packed: TBCRC, n_shards: int) -> List[TBCRC]:
+    """Split a packed weight into ``n_shards`` column-parallel sub-packs.
+
+    Shard ``s`` owns output rows ``[s·N/n, (s+1)·N/n)``: its row blocks are
+    the contiguous nb_r slice, its ``scatter_rows`` are regenerated in the
+    shard-local row space, and its aux ``shape`` is the local ``(N/n, K)``
+    so the kernels' output sizing and the ref scatter both stay in-bounds
+    on the shard. Per-block quant scales and one-hot planes (block-local
+    data) slice along with their blocks; the dispatch genome is preserved.
+    Stacked (scanned-layer) packs slice along their nb_r axis unchanged.
+    """
+    reason = splittable_packed(packed, n_shards)
+    if reason:
+        raise ValueError(f"split_packed: {reason}")
+    if n_shards == 1:
+        return [packed]
+    nb_r = packed.vals.shape[-4]
+    step = nb_r // n_shards
+    n, k = packed.shape
+    plan = packed.plan
+    shards = []
+    for s in range(n_shards):
+        row_idx = _slice_dim(packed.row_idx, s, step, -3)
+        col_idx = _slice_dim(packed.col_idx, s, step, -3)
+        gcols, srows = _flat_vectors(row_idx, col_idx, packed.block_shape)
+        if plan is not None:
+            sub = BCRPlan(
+                gather_cols=gcols, scatter_rows=srows,
+                gather_planes=(_slice_dim(plan.gather_planes, s, step, -4)
+                               if plan.gather_planes is not None else None),
+                scatter_planes=(_slice_dim(plan.scatter_planes, s, step, -4)
+                                if plan.scatter_planes is not None else None),
+                block_scales=(_slice_dim(plan.block_scales, s, step, -2)
+                              if plan.block_scales is not None else None),
+                m_tile=plan.m_tile, grid_order=plan.grid_order,
+                group_size=plan.group_size)
+        else:
+            sub = BCRPlan(gather_cols=gcols, scatter_rows=srows)
+        shards.append(TBCRC(
+            vals=_slice_dim(packed.vals, s, step, -4), row_idx=row_idx,
+            col_idx=col_idx, shape=(n // n_shards, k),
+            block_shape=packed.block_shape, plan=sub))
+    return shards
+
+
+def merge_packed(shards: Sequence[TBCRC]) -> TBCRC:
+    """Inverse of :func:`split_packed`: reassemble the full pack (canonical
+    plan flats regenerated from the merged index planes)."""
+    shards = list(shards)
+    first = shards[0]
+    n_local, k = first.shape
+    row_idx = jnp.concatenate([s.row_idx for s in shards], axis=-3)
+    col_idx = jnp.concatenate([s.col_idx for s in shards], axis=-3)
+    gcols, srows = _flat_vectors(row_idx, col_idx, first.block_shape)
+    plan = first.plan
+    if plan is not None:
+        def cat(get, ax):
+            parts = [get(s.plan) for s in shards]
+            return (jnp.concatenate(parts, axis=ax)
+                    if all(p is not None for p in parts) else None)
+        plan = BCRPlan(
+            gather_cols=gcols, scatter_rows=srows,
+            gather_planes=cat(lambda p: p.gather_planes, -4),
+            scatter_planes=cat(lambda p: p.scatter_planes, -4),
+            block_scales=cat(lambda p: p.block_scales, -2),
+            m_tile=plan.m_tile, grid_order=plan.grid_order,
+            group_size=plan.group_size)
+    return TBCRC(
+        vals=jnp.concatenate([s.vals for s in shards], axis=-4),
+        row_idx=row_idx, col_idx=col_idx,
+        shape=(n_local * len(shards), k), block_shape=first.block_shape,
+        plan=plan)
+
+
+def _member(grouped: GroupedTBCRC, g: int) -> TBCRC:
+    """Member ``g`` of a fused group as a standalone TBCRC (scales ride
+    along; flats regenerated lazily by whoever needs them)."""
+    def take(a, ax):
+        return (jnp.take(a, g, axis=ax % a.ndim)
+                if a is not None else None)
+    plan = grouped.plan
+    mplan = None
+    if plan is not None:
+        mplan = BCRPlan(
+            gather_cols=jnp.zeros((0,), jnp.int32),   # regenerated on use
+            scatter_rows=jnp.zeros((0,), jnp.int32),
+            gather_planes=take(plan.gather_planes, -5),
+            scatter_planes=take(plan.scatter_planes, -5),
+            block_scales=take(plan.block_scales, -3),
+            m_tile=plan.m_tile, grid_order=plan.grid_order,
+            group_size=plan.group_size)
+    return TBCRC(vals=take(grouped.vals, -5), row_idx=take(grouped.row_idx, -4),
+                 col_idx=take(grouped.col_idx, -4), shape=grouped.shape,
+                 block_shape=grouped.block_shape, plan=mplan)
+
+
+def split_grouped(grouped: GroupedTBCRC, n_shards: int,
+                  ) -> List[GroupedTBCRC]:
+    """Split a fused projection group into ``n_shards`` per-shard groups.
+
+    The fused plan's flat vectors are g-major (member, then block) so they
+    do NOT slice along the output axis; instead each member is split with
+    :func:`split_packed` and the shard's fused flats are rebuilt with the
+    member offset in the shard-LOCAL output space (``g·N/n``), exactly as
+    :func:`pack_group` would for the local members.
+    """
+    first = _member(grouped, 0)
+    reason = splittable_packed(first, n_shards)
+    if reason:
+        raise ValueError(f"split_grouped: {reason}")
+    if n_shards == 1:
+        return [grouped]
+    g_n = grouped.group_size
+    per_member = [split_packed(_member(grouped, g), n_shards)
+                  for g in range(g_n)]
+    n_local = grouped.shape[0] // n_shards
+    plan = grouped.plan
+    out = []
+    for s in range(n_shards):
+        mems = [per_member[g][s] for g in range(g_n)]
+        gcols = jnp.concatenate([m.plan.gather_cols for m in mems], axis=-1)
+        srows = jnp.concatenate(
+            [m.plan.scatter_rows + g * n_local
+             for g, m in enumerate(mems)], axis=-1)
+
+        def stk(get, ax):
+            parts = [get(m.plan) for m in mems]
+            return (jnp.stack(parts, axis=ax)
+                    if all(p is not None for p in parts) else None)
+        sub = BCRPlan(
+            gather_cols=gcols, scatter_rows=srows,
+            gather_planes=stk(lambda p: p.gather_planes, -5),
+            scatter_planes=stk(lambda p: p.scatter_planes, -5),
+            block_scales=stk(lambda p: p.block_scales, -3),
+            m_tile=plan.m_tile if plan is not None else None,
+            grid_order=plan.grid_order if plan is not None else "mij",
+            group_size=g_n)
+        out.append(GroupedTBCRC(
+            vals=jnp.stack([m.vals for m in mems], axis=-5),
+            row_idx=jnp.stack([m.row_idx for m in mems], axis=-4),
+            col_idx=jnp.stack([m.col_idx for m in mems], axis=-4),
+            plan=sub, shape=(n_local, grouped.shape[1]),
+            block_shape=grouped.block_shape, group_size=g_n))
+    return out
+
+
+def merge_grouped(shards: Sequence[GroupedTBCRC]) -> GroupedTBCRC:
+    """Inverse of :func:`split_grouped` (canonical g-major flats rebuilt
+    from the merged index planes, as :func:`pack_group` lays them out)."""
+    shards = list(shards)
+    first = shards[0]
+    g_n = first.group_size
+    n_full = first.shape[0] * len(shards)
+    row_idx = jnp.concatenate([s.row_idx for s in shards], axis=-3)
+    col_idx = jnp.concatenate([s.col_idx for s in shards], axis=-3)
+    gcols_parts, srows_parts = [], []
+    for g in range(g_n):
+        gc, sr = _flat_vectors(
+            jnp.take(row_idx, g, axis=row_idx.ndim - 4),
+            jnp.take(col_idx, g, axis=col_idx.ndim - 4), first.block_shape)
+        gcols_parts.append(gc)
+        srows_parts.append(sr + g * n_full)
+    plan = first.plan
+    if plan is not None:
+        def cat(get, ax):
+            parts = [get(s.plan) for s in shards]
+            return (jnp.concatenate(parts, axis=ax)
+                    if all(p is not None for p in parts) else None)
+        plan = BCRPlan(
+            gather_cols=jnp.concatenate(gcols_parts, axis=-1),
+            scatter_rows=jnp.concatenate(srows_parts, axis=-1),
+            gather_planes=cat(lambda p: p.gather_planes, -4),
+            scatter_planes=cat(lambda p: p.scatter_planes, -4),
+            block_scales=cat(lambda p: p.block_scales, -2),
+            m_tile=plan.m_tile, grid_order=plan.grid_order,
+            group_size=g_n)
+    return GroupedTBCRC(
+        vals=jnp.concatenate([s.vals for s in shards], axis=-4),
+        row_idx=row_idx, col_idx=col_idx, plan=plan,
+        shape=(n_full, first.shape[1]), block_shape=first.block_shape,
+        group_size=g_n)

@@ -73,6 +73,11 @@ def main() -> None:
                    choices=["ref", "interpret", "pallas"])
     p.add_argument("--kv-dtype", default="", choices=["", "int8"])
     p.add_argument("--weight-dtype", default="", choices=["", "int8"])
+    p.add_argument("--mesh-model", type=int, default=1,
+                   help="tensor-parallel mesh size: shard the engine over "
+                        "this many devices (bit-identical greedy tokens; "
+                        "needs --page-size on a dense/vlm arch whose head "
+                        "counts divide the mesh)")
     p.add_argument("--max-waiting", type=int, default=0,
                    help="bound the waiting queue; overflow sheds the "
                         "lowest-tier earliest-deadline waiter as 429")
@@ -151,6 +156,7 @@ def main() -> None:
         max_waiting=args.max_waiting or None,
         preempt_after_stalls=args.preempt_after_stalls,
         slo_admission=args.slo_admission, slo_slack=args.slo_slack,
+        mesh_model=args.mesh_model,
         tenant_quotas=parse_tenant_quotas(args.tenant) or None,
         default_tenant_quota=(
             parse_tenant_quotas(["_," + args.default_tenant_quota])["_"]

@@ -627,6 +627,14 @@ def main() -> None:
                    help="int8: quantize packed BCR tiles to int8 codes + "
                         "per-block scales applied in the kernel epilogue "
                         "(halves packed weight bytes; needs --bcr-keep)")
+    p.add_argument("--mesh-model", type=int, default=1,
+                   help="tensor-parallel mesh size: shard every engine "
+                        "program over this many devices (projections "
+                        "column-parallel, KV pool head-parallel; greedy "
+                        "tokens stay bit-identical to --mesh-model 1). "
+                        "Needs --page-size on a dense/vlm arch whose head "
+                        "counts divide the mesh. CPU testing: set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count")
     p.add_argument("--json-out", default=None)
     args = p.parse_args()
 
@@ -666,7 +674,8 @@ def main() -> None:
         kv_dtype=args.kv_dtype,
         max_waiting=args.max_waiting or None,
         preempt_after_stalls=args.preempt_after_stalls,
-        slo_admission=args.slo_admission, slo_slack=args.slo_slack),
+        slo_admission=args.slo_admission, slo_slack=args.slo_slack,
+        mesh_model=args.mesh_model),
         draft_params=draft_params)
     # mixed prompt lengths around --prompt-len, clamped so every request
     # fits its slot (prompt + gen + spec headroom ≤ capacity;

@@ -21,8 +21,18 @@ from repro.models import layers as L
 from repro.models import mixers as M
 from repro.models import moe as MOE
 from repro.runtime import partitioning as part
+from repro.runtime.collectives import maybe_gather
 
 Params = Dict[str, Any]
+
+
+def _head_logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    """lm_head projection; under tensor parallelism (``cfg.tp_axis`` set
+    inside the sharded engine's shard_map) the head is column-parallel
+    over vocab, so re-replicate the logits before sampling — every shard
+    then argmaxes/samples the identical full row."""
+    logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+    return maybe_gather(logits, cfg.vocab_size, cfg.tp_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +199,8 @@ def layer_apply(
             cache=(cache["mixer"] if cache is not None else None),
             cache_len=cache_len, block_tables=block_tables,
             suffix_len=suffix_len, attn_impl=cfg.attn_impl,
-            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, impl=impl)
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, impl=impl,
+            tp_axis=cfg.tp_axis)
         if cache is not None or want_cache:
             if "k_scale" in kv:
                 # quantized pools/caches come back from attention_apply in
@@ -238,7 +249,7 @@ def layer_apply(
 
     h2 = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
     if ffn_kind == "mlp":
-        out2 = L.swiglu_apply(lp["ffn"], h2, impl)
+        out2 = L.swiglu_apply(lp["ffn"], h2, impl, tp_axis=cfg.tp_axis)
     elif ffn_kind == "moe":
         out2 = MOE.moe_apply(lp["ffn"], h2, cfg, impl,
                              token_mask=token_mask)
@@ -320,7 +331,7 @@ def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
         x, _ = jax.lax.scan(body, x, params["stack"])
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+    logits = _head_logits(cfg, params, x)
     return part.act(logits, "batch", "seq", "vocab")
 
 
@@ -407,7 +418,7 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
         x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+    logits = _head_logits(cfg, params, x)
     return logits, {"prefix": new_prefix, "stack": new_stack}
 
 
@@ -457,7 +468,7 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     else:
         idx = jnp.clip(jnp.asarray(length, jnp.int32) - 1, 0, s - 1)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-    logits = linear_apply(params["lm_head"], last, impl=cfg.kernel_impl)
+    logits = _head_logits(cfg, params, last)
     return logits, {"prefix": new_prefix, "stack": new_stack}
 
 
@@ -522,9 +533,9 @@ def prefill_append(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if all_logits:
-        logits = linear_apply(params["lm_head"], x, impl=cfg.kernel_impl)
+        logits = _head_logits(cfg, params, x)
         return logits, {"prefix": new_prefix, "stack": new_stack}
     idx = jnp.clip(slen - 1, 0, s - 1)
     last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
-    logits = linear_apply(params["lm_head"], last, impl=cfg.kernel_impl)
+    logits = _head_logits(cfg, params, last)
     return logits, {"prefix": new_prefix, "stack": new_stack}

@@ -17,8 +17,18 @@ import jax.numpy as jnp
 from repro.core.sparse_linear import (grouped_linear_apply, linear_apply,
                                       linear_init)
 from repro.runtime import partitioning as part
+from repro.runtime.collectives import maybe_gather
 
 Params = Dict[str, Any]
+
+
+def _linear_in_dim(p: Params) -> int:
+    """Input (K) dimension of a linear param dict — the full reduction
+    width a tensor-parallel caller must re-replicate its activation to
+    before applying it (dense and BCR-packed entries alike)."""
+    if "w_packed" in p:
+        return p["w_packed"].shape[1]
+    return p["w"].shape[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -360,9 +370,18 @@ def attention_apply(
     block_tables: Optional[jax.Array] = None,
     suffix_len: Optional[jax.Array] = None,
     attn_impl: str = "flash", q_chunk: int = 512, kv_chunk: int = 1024,
-    impl: str = "ref",
+    impl: str = "ref", tp_axis: str = "",
 ) -> Tuple[jax.Array, Optional[Params]]:
     """Full attention block. With ``cache`` → single-token decode step.
+
+    ``tp_axis`` names the tensor-parallel mesh axis when the block runs
+    inside the sharded engine's shard_map (``repro.serving.tp``):
+    ``n_heads``/``n_kv`` are then the LOCAL per-shard head counts, the
+    cache leaves are the local ``Hkv`` slice, and the block re-replicates
+    via all-gather (never a reduce — summation order must stay bit-equal
+    to single-device) at exactly two points: the head axis before ``wo``
+    (whose reduction spans all heads) and the ``wo`` output (the residual
+    stream stays replicated).
 
     With ``block_tables`` the cache leaves are a shared page pool
     ``(n_pages, page_size, Hkv, D)`` instead of per-slot capacity rows:
@@ -481,7 +500,12 @@ def attention_apply(
                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
         new_cache = {"k": k, "v": v}
     out = part.act(out, "batch", "seq", "heads", "head_dim")
-    y = linear_apply(params["wo"], out.reshape(b, s, n_heads * head_dim), impl=impl)
+    if tp_axis:
+        out = maybe_gather(out, _linear_in_dim(params["wo"]) // head_dim,
+                           tp_axis, axis=2)
+    y = linear_apply(params["wo"], out.reshape(b, s, out.shape[2] * head_dim),
+                     impl=impl)
+    y = maybe_gather(y, x.shape[-1], tp_axis)
     return y, new_cache
 
 
@@ -531,7 +555,8 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
     }
 
 
-def swiglu_apply(params: Params, x: jax.Array, impl: str = "ref") -> jax.Array:
+def swiglu_apply(params: Params, x: jax.Array, impl: str = "ref",
+                 tp_axis: str = "") -> jax.Array:
     if "wgi" in params:
         # packed serving: ONE fused gate/up dispatch whose epilogue applies
         # bias + silu(g)·h in the matmul's emit step — no separate
@@ -543,7 +568,14 @@ def swiglu_apply(params: Params, x: jax.Array, impl: str = "ref") -> jax.Array:
         hu = linear_apply(params["wi"], x, impl=impl)
         h = jax.nn.silu(g) * hu
     h = part.act(h, "batch", "seq", "mlp")
-    return linear_apply(params["wo"], h, impl=impl)
+    if tp_axis:
+        # column-parallel gate/up made a LOCAL d_ff slice (silu·mul is
+        # elementwise, so it commutes with the shard); re-replicate to
+        # wo's full reduction width — gather, not reduce-scatter, keeps
+        # the fp32 summation order bit-equal to single-device
+        h = maybe_gather(h, _linear_in_dim(params["wo"]), tp_axis)
+    y = linear_apply(params["wo"], h, impl=impl)
+    return maybe_gather(y, x.shape[-1], tp_axis)
 
 
 def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
@@ -554,10 +586,14 @@ def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
     }
 
 
-def gelu_mlp_apply(params: Params, x: jax.Array, impl: str = "ref") -> jax.Array:
+def gelu_mlp_apply(params: Params, x: jax.Array, impl: str = "ref",
+                   tp_axis: str = "") -> jax.Array:
     h = jax.nn.gelu(linear_apply(params["wi"], x, impl=impl))
     h = part.act(h, "batch", "seq", "mlp")
-    return linear_apply(params["wo"], h, impl=impl)
+    if tp_axis:
+        h = maybe_gather(h, _linear_in_dim(params["wo"]), tp_axis)
+    y = linear_apply(params["wo"], h, impl=impl)
+    return maybe_gather(y, x.shape[-1], tp_axis)
 
 
 # ---------------------------------------------------------------------------

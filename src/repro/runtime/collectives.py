@@ -56,6 +56,27 @@ def hierarchical_psum(grads: PyTree, mesh: Mesh, *, codec: Optional[str] = None
     return jax.tree_util.tree_map(reduce_one, grads)
 
 
+def tp_all_gather(x: jax.Array, axis_name: str, axis: int = -1) -> jax.Array:
+    """Re-replicate a tensor-parallel shard along ``axis`` (inside
+    shard_map only). Pure data movement — concatenation in mesh order, no
+    arithmetic — so column-parallel layers that gather instead of
+    reduce-scattering keep fp32 summation order identical to the
+    single-device program (the serving engine's bit-exactness contract;
+    see ``repro.serving.tp``)."""
+    return jax.lax.all_gather(x, axis_name, axis=axis % x.ndim, tiled=True)
+
+
+def maybe_gather(x: jax.Array, full_dim: int, axis_name: str,
+                 axis: int = -1) -> jax.Array:
+    """`tp_all_gather` iff ``x`` is actually sharded along ``axis``
+    (``shape[axis] != full_dim``). Layers call this shape-driven form so
+    replicated-fallback weights (output dim not divisible by the mesh)
+    compose transparently with sharded ones."""
+    if not axis_name or x.shape[axis % x.ndim] == full_dim:
+        return x
+    return tp_all_gather(x, axis_name, axis=axis)
+
+
 def ring_allgather_kv(k: jax.Array, axis: str = "model") -> jax.Array:
     """Explicit ring all-gather via ppermute — used by context-parallel
     decode experiments to overlap KV movement with partial attention.

@@ -80,6 +80,7 @@ from repro.serving.admission import (TenantQuota, TokenBucket,
                                      estimate_seat_steps, request_work_steps)
 from repro.serving.faults import StepWatchdog
 from repro.serving.kv_slots import PagedSlotPool, SlotPool
+from repro.serving.tp import per_device_kv_bytes
 from repro.serving.scheduler import (CANCELLED, FAILED, FINISHED, REJECTED,
                                      TIMEOUT, Request, Scheduler)
 
@@ -199,6 +200,18 @@ class EngineConfig:
     slo_admission: bool = False
     slo_slack: float = 1.0
     slo_step_time: float = 0.0
+    # tensor-parallel serving: mesh_model > 1 runs every engine program as
+    # one jit(shard_map) over a ("model",) mesh of that many devices —
+    # projections column-parallel (output dim / BCR row blocks sharded,
+    # re-replicated by all-gathers so greedy tokens stay bit-identical to
+    # single-device), attention head-parallel with the paged KV pool (and
+    # any int8 scale pools) split along Hkv. Per-device pool memory drops
+    # to 1/mesh, so at a fixed per-device page budget the engine provisions
+    # mesh× the logical pages (resident-token capacity scales with the
+    # mesh). Needs a paged pool on a pure-attention dense/vlm family with
+    # head counts divisible by the mesh; composes with prefix_cache,
+    # spec_k and kv/weight int8. See repro.serving.tp.
+    mesh_model: int = 1
     # per-tenant isolation: tenant_quotas maps tenant -> TenantQuota
     # (rate/burst token bucket, concurrent-request cap, KV page budget,
     # WFQ weight); default_tenant_quota applies to tenants not listed
@@ -309,8 +322,40 @@ class InferenceEngine:
         # bytes one cache position (K+V + any sibling scale leaves, all
         # attention layers) costs to read — derived from the ACTUAL pool
         # leaves, so int8 pools report their real (halved + scale) traffic
-        # instead of an assumed c_dtype width
+        # instead of an assumed c_dtype width. Under a mesh these are
+        # AGGREGATE bytes; the `kv_bytes_read_device` stat divides by the
+        # mesh (the pool is fully Hkv-sharded, nothing is replicated).
         self._kv_row_bytes = self._probe_kv_row_bytes()
+
+        # tensor-parallel setup: shard params (column-parallel / BCR row
+        # blocks) and the pool (head-parallel) over the mesh, localize the
+        # config the model body sees inside shard_map, and remember the
+        # spec trees the program wrappers below need. The pool's host-side
+        # bookkeeping (block tables, refcounts, prefix index) is untouched
+        # — it is replicated host state addressing per-shard page leaves.
+        self.tp = max(1, int(ec.mesh_model))
+        self._mesh = None
+        if self.tp > 1:
+            from repro.serving import tp as tp_lib
+            reason = tp_lib.shardable(cfg, self.tp, ec.page_size)
+            if reason is not None:
+                raise ValueError(f"mesh_model={self.tp}: {reason}")
+            self._mesh = tp_lib.make_model_mesh(self.tp)
+            prepared, self._param_specs = tp_lib.prepare_params(
+                self.params, self.tp)
+            self.params = tp_lib.placed(prepared, self._param_specs,
+                                        self._mesh)
+            self._pool_specs = tp_lib.cache_specs(
+                cfg, ec.n_slots, ec.capacity, kv_pages=self.pool.n_pages,
+                page_size=ec.page_size)
+            self.pool.cache = tp_lib.placed(self.pool.cache,
+                                            self._pool_specs, self._mesh)
+            # prefill returns an UNPAGED per-row cache whose rows admission
+            # scatters into the pool; same Hkv axis discovery, no paging
+            self._prefill_specs = tp_lib.cache_specs(cfg, 1, 8)
+            # the closures below must trace the model with per-shard head
+            # counts (the pool spec hands each device its local Hkv slice)
+            fns = model_fns(tp_lib.localize_cfg(cfg, self.tp))
 
         # sampling is fused into the prefill/decode programs: one dispatch
         # per engine step — at small model scale the extra host round-trip
@@ -374,18 +419,47 @@ class InferenceEngine:
                         ok, cache)
             return logits, ok, cache
 
-        self._prefill = jax.jit(prefill_sample,
-                                static_argnames=("use_topk",))
-        self._decode = jax.jit(decode_sample, static_argnames=("use_topk",),
-                               donate_argnums=(3,))
-        self._append = (jax.jit(append_sample,
-                                static_argnames=("use_topk",),
-                                donate_argnums=(4,))
-                        if fns.prefill_append is not None else None)
-        self._verify = (jax.jit(verify_logits,
-                                static_argnames=("greedy_only",),
-                                donate_argnums=(4,))
-                        if self.spec else None)
+        if self.tp > 1:
+            from jax.sharding import PartitionSpec as P
+            from repro.serving.tp import ShardedProgram
+            ps, cs, fs = (self._param_specs, self._pool_specs,
+                          self._prefill_specs)
+            rep = P()
+            self._prefill = ShardedProgram(
+                prefill_sample, self._mesh,
+                in_specs=(ps, rep, rep, rep, rep, rep, rep),
+                out_specs=(rep, rep, fs), static_name="use_topk")
+            self._decode = ShardedProgram(
+                decode_sample, self._mesh,
+                in_specs=(ps, rep, rep, cs, rep, rep, rep, rep),
+                out_specs=(rep, rep, cs), static_name="use_topk",
+                donate_argnums=(3,))
+            self._append = (ShardedProgram(
+                append_sample, self._mesh,
+                in_specs=(ps, rep, rep, rep, cs, rep, rep, rep, rep),
+                out_specs=(rep, rep, cs), static_name="use_topk",
+                donate_argnums=(4,))
+                if fns.prefill_append is not None else None)
+            self._verify = (ShardedProgram(
+                verify_logits, self._mesh,
+                in_specs=(ps, rep, rep, rep, cs, rep),
+                out_specs=(rep, rep, cs), static_name="greedy_only",
+                donate_argnums=(4,))
+                if self.spec else None)
+        else:
+            self._prefill = jax.jit(prefill_sample,
+                                    static_argnames=("use_topk",))
+            self._decode = jax.jit(decode_sample,
+                                   static_argnames=("use_topk",),
+                                   donate_argnums=(3,))
+            self._append = (jax.jit(append_sample,
+                                    static_argnames=("use_topk",),
+                                    donate_argnums=(4,))
+                            if fns.prefill_append is not None else None)
+            self._verify = (jax.jit(verify_logits,
+                                    static_argnames=("greedy_only",),
+                                    donate_argnums=(4,))
+                            if self.spec else None)
 
         self._key = jax.random.PRNGKey(ec.seed)
         self._defer_steps = 0   # decode steps the current backfill waited
@@ -1004,6 +1078,16 @@ class InferenceEngine:
         faults = self.faults
         if faults is not None:
             faults.maybe_sleep(self._step_idx)
+            if faults.fires(self._step_idx, "shard_skew"):
+                # one shard running slow: SPMD programs are lockstep (every
+                # collective is a barrier), so the WHOLE step stalls for
+                # the skewed shard's delay — an engine-level sleep is the
+                # exact observable effect. `choose` records which shard
+                # skewed so tests can assert the victim distribution.
+                shard = faults.choose(max(self.tp, 1))
+                faults.record(self._step_idx, "shard_skew", shard)
+                faults.sleep(faults.arg(self._step_idx, "shard_skew")
+                             or 0.02)
             if faults.fires(self._step_idx, "cancel"):
                 live = sorted([r.rid for r in self.sched.active.values()]
                               + [r.rid for r in self.sched.waiting])
@@ -1113,6 +1197,8 @@ class InferenceEngine:
             rows = self.ec.n_slots * self.ec.capacity
             self.stats["kv_bytes_read"] += rows * self._kv_row_bytes
             self.stats["kv_bytes_read_live"] += rows * self._kv_row_bytes
+            self.stats["kv_bytes_read_device"] += per_device_kv_bytes(
+                rows * self._kv_row_bytes, self.tp)
         tok_dev, ok_dev, self.pool.cache = self._decode(
             self.params, jnp.asarray(self._tokens),
             jnp.asarray(self.pool.lens), self.pool.cache,
@@ -1270,11 +1356,14 @@ class InferenceEngine:
             src, dst = zip(*cow)
             self.pool.copy_pages(np.asarray(src), np.asarray(dst))
         bt = self.pool.device_tables(self.pool.table_width(extra=extra))
-        self.stats["kv_bytes_read"] += (bt.shape[1] * self.ec.page_size
-                                        * self.ec.n_slots
-                                        * self._kv_row_bytes)
+        step_bytes = (bt.shape[1] * self.ec.page_size * self.ec.n_slots
+                      * self._kv_row_bytes)
+        self.stats["kv_bytes_read"] += step_bytes
         self.stats["kv_bytes_read_live"] += (self.pool.live_page_rows()
                                              * self._kv_row_bytes)
+        # under a mesh each device reads only its Hkv slice of every page
+        self.stats["kv_bytes_read_device"] += per_device_kv_bytes(
+            step_bytes, self.tp)
         return bt
 
     def _spec_step(self) -> List[Request]:
@@ -1391,7 +1480,8 @@ class InferenceEngine:
             self.stats.update(decode_steps=0, prefills=0, prefill_rows=0,
                               deferred_admissions=0, tokens_generated=0,
                               page_stalls=0, kv_bytes_read=0,
-                              kv_bytes_read_live=0, slot_occupancy=[],
+                              kv_bytes_read_live=0, kv_bytes_read_device=0,
+                              slot_occupancy=[],
                               prefix_hit_tokens=0, pages_shared=0,
                               cow_copies=0, evictions=0, pages_allocated=0,
                               spec_steps=0, draft_proposed=0,

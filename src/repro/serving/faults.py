@@ -44,6 +44,14 @@ Fault kinds
     per-stream queue depth grows until the slow-client backpressure policy
     (pause or disconnect-as-cancel) engages. Indexed by the host loop's
     step counter, like ``crash_step``.
+``shard_skew``
+    One tensor-parallel shard runs artificially slow this step. SPMD
+    programs are lockstep (every all-gather is a barrier), so the whole
+    engine step stalls for the skewed shard's delay — the engine sleeps
+    ``arg`` seconds (via the injected ``sleep``) and records which shard
+    index (``choose`` over the mesh) was the straggler. Exercises the
+    watchdog and latency accounting under a mesh; tokens/pool state must
+    be unaffected (a slow shard is not a wrong shard).
 """
 
 from __future__ import annotations
@@ -55,7 +63,7 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 KINDS = ("page_alloc", "nan_logits", "drafter", "slow_step", "cancel",
-         "crash_step", "slow_client")
+         "crash_step", "slow_client", "shard_skew")
 
 
 @dataclass
@@ -107,7 +115,9 @@ class FaultInjector:
                 raise ValueError(f"unknown fault kind {kind!r}; expected one of {KINDS}")
             hits = np.nonzero(self.rng.random(n_steps) < rate)[0]
             for step in hits:
-                self.at(int(step), kind, slow_s if kind == "slow_step" else 0.0)
+                self.at(int(step), kind,
+                        slow_s if kind in ("slow_step", "shard_skew")
+                        else 0.0)
         return self
 
     # -- queries (pure / idempotent) ------------------------------------------

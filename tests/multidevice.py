@@ -1,0 +1,69 @@
+"""Reusable subprocess harness for multi-device CPU tests.
+
+The main pytest process keeps a single CPU device (the assignment's
+dry-run-only rule), so anything that needs a mesh runs in a fresh
+subprocess with ``--xla_force_host_platform_device_count=N``. This module
+generalizes the pattern ``test_collectives_multidevice.py`` introduced:
+
+* ``run_multidevice(code, devices=...)`` — run a dedented code snippet
+  under N fake CPU devices with ``PYTHONPATH=src`` and return its stdout
+  (asserting a zero exit, with the stderr tail in the failure message).
+* ``run_json(code, ...)`` — same, but the snippet reports its result as a
+  single ``RESULT {json}`` line (conventionally its last print) and the
+  parsed object is returned. Keeps assertions in the test process where
+  pytest can render them, instead of buried in subprocess stderr.
+
+Each subprocess pays multi-device XLA compilation from scratch (minutes
+on CPU), so callers should batch related checks into one snippet — e.g.
+compute the single-device reference AND every mesh size in the same
+process — rather than spawning per-case.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import Any
+
+DEFAULT_TIMEOUT = 600
+
+
+def run_multidevice(code: str, devices: int = 2,
+                    timeout: int = DEFAULT_TIMEOUT,
+                    extra_env: dict | None = None) -> str:
+    """Run ``code`` in a subprocess with ``devices`` fake CPU devices."""
+    env = {
+        "XLA_FLAGS": ("--xla_force_host_platform_device_count="
+                      f"{int(devices)}"),
+        "PYTHONPATH": "src",
+        "JAX_PLATFORMS": "cpu",
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    }
+    if extra_env:
+        env.update(extra_env)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=".",
+    )
+    assert proc.returncode == 0, (
+        f"multidevice subprocess failed (exit {proc.returncode})\n"
+        f"--- stdout tail ---\n{proc.stdout[-1000:]}\n"
+        f"--- stderr tail ---\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def run_json(code: str, devices: int = 2,
+             timeout: int = DEFAULT_TIMEOUT,
+             extra_env: dict | None = None) -> Any:
+    """Run ``code`` and parse its last ``RESULT {...}`` stdout line."""
+    out = run_multidevice(code, devices=devices, timeout=timeout,
+                          extra_env=extra_env)
+    for line in reversed(out.strip().splitlines()):
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(
+        f"subprocess printed no 'RESULT {{json}}' line\n"
+        f"--- stdout tail ---\n{out[-2000:]}")

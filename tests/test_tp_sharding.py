@@ -1,0 +1,195 @@
+"""Fast-tier (single-device, no subprocess) tensor-parallel unit tests.
+
+Covers the pieces of ``repro.serving.tp`` / ``repro.kernels.plan`` that do
+not need a real mesh to validate:
+
+* BCRPlan split/merge round-trips: per-shard sub-plans reassemble to the
+  original pack, local index spaces stay in bounds, per-shard block
+  scales (int8 packs) ride along, and shard outputs concatenate to the
+  full matmul bit-exactly.
+* prepare_params spec trees: treedefs match, attention projections shard,
+  the embedding table stays replicated.
+* Head-parallel pool-shape math for every model family in ``configs/``:
+  the shardable gate admits exactly the paged pure-attention families,
+  and the probed cache axes point at real Hkv-sized dimensions.
+* The per-device KV traffic helper and the engine's mesh-1 stats identity
+  ``kv_bytes_read == kv_bytes_read_device``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.bcr import BCRSpec
+from repro.core.bcrc import tbcrc_pack
+from repro.kernels.ops import bcr_matmul, bcr_matmul_grouped
+from repro.kernels.plan import (attach_plan, merge_grouped, merge_packed,
+                                pack_group, quantize_packed, split_grouped,
+                                split_packed, splittable_packed)
+from repro.serving import tp
+
+SPEC = BCRSpec(block_shape=(8, 8), keep_frac=0.5, align=1)
+
+
+def _pack(n=32, k=24, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (n, k))
+    return attach_plan(tbcrc_pack(w, SPEC))
+
+
+class TestSplitMerge:
+    def test_round_trip(self):
+        packed = _pack()
+        shards = split_packed(packed, 2)
+        merged = merge_packed(shards)
+        for a, b in zip(jax.tree_util.tree_leaves(packed),
+                        jax.tree_util.tree_leaves(merged)):
+            assert a.shape == b.shape
+            assert bool(jnp.array_equal(a, b)), "split/merge not identity"
+        assert merged.shape == packed.shape
+
+    def test_local_index_spaces_in_bounds(self):
+        packed = _pack()
+        n, k = packed.shape
+        for shard in split_packed(packed, 4):
+            ln, lk = shard.shape
+            assert (ln, lk) == (n // 4, k)
+            # scatter rows index the LOCAL output; gather cols the full K
+            assert int(shard.plan.scatter_rows.max()) < ln
+            assert int(shard.plan.gather_cols.max()) < lk
+
+    def test_shards_concat_to_full_matmul(self):
+        packed = _pack()
+        x = jax.random.normal(jax.random.PRNGKey(1), (5, packed.shape[1]))
+        full = bcr_matmul(x, packed)
+        parts = [bcr_matmul(x, s) for s in split_packed(packed, 2)]
+        assert bool(jnp.array_equal(jnp.concatenate(parts, -1), full)), \
+            "column-parallel shards must concatenate bit-exactly"
+
+    def test_quantized_scales_ride_along(self):
+        packed = quantize_packed(_pack())
+        shards = split_packed(packed, 2)
+        nb_r = packed.plan.block_scales.shape[-2]
+        for s in shards:
+            assert s.plan.block_scales is not None
+            assert s.plan.block_scales.shape[-2] == nb_r // 2
+        merged = merge_packed(shards)
+        assert bool(jnp.array_equal(merged.plan.block_scales,
+                                    packed.plan.block_scales))
+        x = jax.random.normal(jax.random.PRNGKey(2), (3, packed.shape[1]))
+        parts = [bcr_matmul(x, s) for s in shards]
+        assert bool(jnp.array_equal(jnp.concatenate(parts, -1),
+                                    bcr_matmul(x, packed)))
+
+    def test_grouped_split_merge_and_matmul(self):
+        grouped = pack_group([_pack(seed=3), _pack(seed=4)])
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, grouped.shape[1]))
+        full = bcr_matmul_grouped(x, grouped)           # (G, 4, N)
+        shards = split_grouped(grouped, 2)
+        parts = [bcr_matmul_grouped(x, s) for s in shards]
+        assert bool(jnp.array_equal(jnp.concatenate(parts, -1), full))
+        merged = merge_grouped(shards)
+        for a, b in zip(jax.tree_util.tree_leaves(grouped),
+                        jax.tree_util.tree_leaves(merged)):
+            assert bool(jnp.array_equal(a, b))
+
+    def test_splittable_gate(self):
+        packed = _pack(n=24)                            # 3 row blocks
+        assert splittable_packed(packed, 2) is not None
+        assert splittable_packed(packed, 3) is None
+        assert splittable_packed(_pack(n=32), 2) is None
+
+
+class TestPrepareParams:
+    def test_spec_tree_matches_and_embed_replicated(self):
+        from repro.launch.serve import build_params
+        cfg = dataclasses.replace(get_smoke_config("llama3.2-3b"),
+                                  bcr_keep_frac=0.5, bcr_block=(8, 8))
+        params = build_params(cfg, log=lambda *a, **k: None, decode_m=4)
+        prep, specs = tp.prepare_params(params, 2)
+        assert (jax.tree_util.tree_structure(prep)
+                == jax.tree_util.tree_structure(specs))
+        # the embedding table is indexed by token id, never matmul'd:
+        # sharding its rows would corrupt lookups
+        for leaf in jax.tree_util.tree_leaves(specs["embed"]):
+            assert leaf == jax.sharding.PartitionSpec()
+        # at least the attention/mlp projections actually shard
+        sharded = [s for s in jax.tree_util.tree_leaves(specs)
+                   if any(ax == "model" for ax in s)]
+        assert sharded, "nothing sharded on a shardable config"
+
+    def test_unshardable_attention_projection_raises(self):
+        from repro.launch.serve import build_params
+        cfg = get_smoke_config("llama3.2-3b")
+        params = build_params(cfg, log=lambda *a, **k: None, decode_m=4)
+        with pytest.raises(ValueError, match="attention projection"):
+            tp.prepare_params(params, 3)   # 64 rows don't split 3 ways
+
+
+class TestPoolShapeMath:
+    """Head-parallel pool-shape math across every family in configs/."""
+
+    @pytest.mark.parametrize("arch", sorted(ARCH_IDS))
+    def test_shardable_gate_and_hkv_axes(self, arch):
+        cfg = get_smoke_config(arch)
+        reason = tp.shardable(cfg, 2, page_size=4)
+        attention_only = (cfg.family in ("dense", "vlm")
+                          and not cfg.num_experts and not cfg.attn_period)
+        divisible = (cfg.num_heads % 2 == 0 and cfg.num_kv_heads % 2 == 0)
+        if attention_only and divisible:
+            assert reason is None
+            axes = tp.cache_axes(cfg, 4, 32, kv_pages=8, page_size=4)
+            shapes = jax.eval_shape(
+                lambda: __import__("repro.models.causal_lm",
+                                   fromlist=["init_cache"]).init_cache(
+                    cfg, 4, 32, kv_pages=8, page_size=4))
+            pairs = list(zip(jax.tree_util.tree_leaves(shapes),
+                             jax.tree_util.tree_leaves(axes)))
+            kv_leaves = [(l, ax) for l, ax in pairs if ax >= 0]
+            assert kv_leaves, "paged pool probe found no Hkv axis"
+            for leaf, ax in kv_leaves:
+                assert leaf.shape[ax] == cfg.num_kv_heads, \
+                    (arch, leaf.shape, ax)
+            # head-parallel capacity math: per-device pool bytes drop to
+            # 1/tp, so a fixed per-device budget provisions tp× the pages
+            kv_bytes = sum(l.size * l.dtype.itemsize for l, ax in kv_leaves)
+            assert kv_bytes % 2 == 0
+            assert tp.per_device_kv_bytes(kv_bytes, 2) == kv_bytes // 2
+        else:
+            assert reason is not None and isinstance(reason, str), arch
+
+    def test_localize_cfg(self):
+        cfg = get_smoke_config("llama3.2-3b")
+        local = tp.localize_cfg(cfg, 2)
+        assert local.num_heads == cfg.num_heads // 2
+        assert local.num_kv_heads == cfg.num_kv_heads // 2
+        assert local.head_dim == cfg.head_dim       # survives __post_init__
+        assert local.tp_axis == "model"
+        assert local.d_model == cfg.d_model         # full — weights decide
+
+
+class TestPerDeviceKvBytes:
+    def test_helper(self):
+        assert tp.per_device_kv_bytes(1000, 1) == 1000
+        assert tp.per_device_kv_bytes(1000, 2) == 500
+        assert tp.per_device_kv_bytes(1000, 0) == 1000   # clamped
+
+    def test_engine_mesh1_stats_identity(self):
+        """On a single device the per-device and aggregate KV counters
+        must agree exactly — pins the satellite-4 accounting so a mesh
+        cannot silently overcount bandwidth."""
+        from repro.launch.serve import build_params
+        from repro.serving.engine import EngineConfig, InferenceEngine
+        cfg = dataclasses.replace(get_smoke_config("llama3.2-3b"),
+                                  attn_impl="dense")
+        params = build_params(cfg, log=lambda *a, **k: None, decode_m=2)
+        eng = InferenceEngine(cfg, params, EngineConfig(
+            n_slots=2, capacity=32, page_size=4, kv_pages=20))
+        eng.generate([np.arange(5) % cfg.vocab_size,
+                      np.arange(8) % cfg.vocab_size], max_new_tokens=4)
+        st = eng.stats_snapshot()
+        assert st["kv_bytes_read"] > 0
+        assert st["kv_bytes_read"] == st["kv_bytes_read_device"]
